@@ -1,0 +1,269 @@
+"""Benchmark harness — one function per paper evaluation axis (§3).
+
+The paper is a proposal with no tables of its own; its §3 evaluation plan
+defines the four axes benchmarked here, plus kernel µbenches and the
+roofline report derived from the dry-run artifacts.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _time(fn, *, repeat=3, number=1):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            out = fn()
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best, out
+
+
+def row(name, seconds, derived=""):
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------- §3.3 axis 1
+def bench_online(quick=False):
+    """Online computing: query latency on a live snapshot."""
+    import jax.numpy as jnp
+    from repro.core.versioned import Version
+    from repro.graph import compute as gc
+    from repro.graph.dyngraph import synthesize_stream
+
+    n = 2_000 if quick else 20_000
+    g, _ = synthesize_stream(n, 6, n, seed=0)
+    view = g.join_view(Version(5, 0))
+    srcs = jnp.arange(4)
+    t, _ = _time(lambda: gc.k_hop(view, srcs, 2).block_until_ready())
+    row("online.khop2", t, f"n={n};m={view.m}")
+    t, _ = _time(lambda: gc.reachability(view, 0, n - 1, max_hops=8))
+    row("online.reachability", t, f"n={n}")
+    t, _ = _time(lambda: g.join_view(Version(4, 0)))  # cached snapshot view
+    row("online.snapshot_view_cached", t, "cache hit")
+
+
+# ---------------------------------------------------------------- §3.3 axis 2
+def bench_offline(quick=False):
+    """Offline analytics throughput."""
+    from repro.core.versioned import Version
+    from repro.graph import compute as gc
+    from repro.graph.dyngraph import synthesize_stream
+
+    n = 2_000 if quick else 20_000
+    g, _ = synthesize_stream(n, 6, n, seed=1)
+    view = g.join_view(Version(5, 0))
+    t, res = _time(lambda: gc.pagerank(view, tol=1e-8, max_iter=100))
+    eps = view.m * res.iterations / t
+    row("offline.pagerank", t, f"edges_per_s={eps:.3e};iters={res.iterations}")
+    old = res
+    g.apply(_small_delta(g, n))
+    new_view = g.join_view(Version(6, 0))
+    t, res2 = _time(lambda: gc.incremental_pagerank(
+        old, view, new_view, tol=1e-8, max_iter=100))
+    row("offline.incremental_pagerank", t,
+        f"iters={res2.iterations};cold_iters={_cold_iters(new_view)}")
+    t, _ = _time(lambda: gc.wcc(view).block_until_ready())
+    row("offline.wcc", t, f"n={n}")
+    # weighted SSSP: priority scheduling only pays off when weights vary
+    import jax
+    w = jax.random.uniform(jax.random.PRNGKey(0), (view.m,),
+                           minval=0.1, maxval=10.0)
+    t, res3 = _time(lambda: gc.sssp(view, 0, weights=w))
+    row("offline.sssp", t, f"rounds={res3.rounds};relax={res3.relaxations}")
+    t, res4 = _time(lambda: gc.sssp(view, 0, weights=w,
+                                    priority_fraction=0.25))
+    row("offline.sssp_priority", t,
+        f"rounds={res4.rounds};relax={res4.relaxations}")
+
+
+def _small_delta(g, n):
+    from repro.core.versioned import Version
+    from repro.graph.dyngraph import MutationBatch
+    rng = np.random.default_rng(7)
+    k = max(4, n // 200)
+    return MutationBatch(Version(6, 0),
+                         add_src=rng.integers(0, n, k).astype(np.int32),
+                         add_dst=rng.integers(0, n, k).astype(np.int32))
+
+
+def _cold_iters(view):
+    from repro.graph import compute as gc
+    return gc.pagerank(view, tol=1e-8, max_iter=100).iterations
+
+
+# ---------------------------------------------------------------- §3.3 axis 3
+def bench_ingest(quick=False):
+    """Timeliness of mutation incorporation: no-wait dispatch vs a central
+    (Kineograph-style) snapshoter that blocks epoch e+1 on global e.
+
+    One node is a STRAGGLER (seals each epoch one round late). The paper's
+    no-wait rule keeps dispatching to the 7 healthy nodes; the central
+    snapshoter buffers every epoch-e+1 mutation until the global snapshot of
+    epoch e (gated by the straggler) is sealed."""
+    from repro.core.snapshotter import (DataNode, IngestNode, Mutation,
+                                        SnapshotCoordinator)
+
+    n_muts = 20_000 if quick else 100_000
+    epochs = 20
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1 << 30, n_muts)
+    ep = np.sort(rng.integers(0, epochs, n_muts))
+
+    def run_nowait():
+        nodes = [DataNode(i) for i in range(8)]
+        ingest = IngestNode(nodes, route=lambda k: k % 8)
+        coord = SnapshotCoordinator(nodes)
+        cur = 0
+        delayed = 0
+        for e in range(epochs):
+            while cur < n_muts and ep[cur] == e:
+                if not ingest.dispatch(Mutation(int(keys[cur]), e)):
+                    delayed += 1
+                cur += 1
+            for node in nodes[:-1]:
+                node.seal_epoch(e)
+            if e > 0:
+                nodes[-1].seal_epoch(e - 1)   # straggler: one epoch behind
+            ingest.retry_blocked()
+            coord.advance()
+        nodes[-1].seal_epoch(epochs - 1)
+        ingest.retry_blocked()
+        coord.advance()
+        return ingest.dispatched, delayed
+
+    t, (dispatched, delayed_nw) = _time(run_nowait, repeat=2)
+    row("ingest.nowait_dispatch", t,
+        f"muts_per_s={dispatched/t:.3e};delayed={delayed_nw}")
+
+    def run_central():
+        # central snapshoter: mutations of epoch e+1 buffered until the
+        # GLOBAL snapshot of epoch e is sealed (straggler gates everyone)
+        nodes = [DataNode(i) for i in range(8)]
+        coord = SnapshotCoordinator(nodes)
+        cur, delays = 0, 0
+        for e in range(epochs):
+            while cur < n_muts and ep[cur] == e:
+                if coord.global_frontier >= e - 1:
+                    nodes[int(keys[cur]) % 8].receive(Mutation(int(keys[cur]), e))
+                else:
+                    delays += 1
+                cur += 1
+            for node in nodes[:-1]:
+                node.seal_epoch(e)
+            if e > 0:
+                nodes[-1].seal_epoch(e - 1)
+            coord.advance()
+        return delays
+
+    t2, delays = _time(run_central, repeat=2)
+    row("ingest.central_snapshoter", t2, f"delayed={delays}")
+
+
+# ---------------------------------------------------------------- §3.3 axis 4
+def bench_replica(quick=False):
+    """Data-management efficiency: hit rate + modeled comm per mode."""
+    from repro.core.replica import ReplicaManager
+    from repro.core.versioned import Version
+    from repro.graph.dyngraph import synthesize_stream
+    from repro.graph.partition import comm_model, partition_graph
+
+    n = 1_000 if quick else 4_000
+    g, _ = synthesize_stream(n, 5, n, seed=2)
+    view = g.join_view(Version(4, 0))
+    deg = np.asarray(view.in_degree)
+    rm = ReplicaManager(8, mirror_threshold=4)
+    for vid in range(n):
+        rm.add_item(vid, owner=vid % 8)
+    rng = np.random.default_rng(3)
+    hot = np.argsort(-deg)[:32]
+
+    def workload():
+        for _ in range(5_000):
+            rm.read(int(rng.integers(0, 8)), int(hot[rng.integers(0, 32)]))
+        return rm.stats()["hit_rate"]
+
+    t, before = _time(workload, repeat=1)
+    rm.rebalance()
+    rm.local_hits = rm.remote_misses = 0
+    t2, after = _time(workload, repeat=1)
+    row("replica.reads", t2 / 5_000,
+        f"hit_before={before:.2f};hit_after={after:.2f}")
+    pg = partition_graph(view, 16, hub_k=64)
+    cm = comm_model(pg)
+    row("replica.comm_model", 0,
+        f"allgather={cm['allgather']:.0f};scatter={cm['scatter']:.0f};"
+        f"hub={cm['hub']:.0f}")
+
+
+# ------------------------------------------------------------------- kernels
+def bench_kernels(quick=False):
+    """Kernel µbench (interpret mode on CPU — correctness-speed only; real
+    perf numbers come from the §Roofline dry-run analysis)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.segment_sum import segment_sum
+
+    m, F, n = (2_000, 64, 256) if quick else (8_000, 128, 1024)
+    key = jax.random.PRNGKey(0)
+    vals = jax.random.normal(key, (m, F), jnp.float32)
+    segs = jnp.sort(jax.random.randint(key, (m,), 0, n))
+    t_ref, _ = _time(
+        lambda: ref.segment_sum(vals, segs, n).block_until_ready())
+    row("kernel.segment_sum.ref", t_ref, f"m={m};F={F}")
+    t_k, out_k = _time(
+        lambda: segment_sum(vals, segs, n, interpret=True).block_until_ready(),
+        repeat=1)
+    ok = bool(jnp.allclose(out_k, ref.segment_sum(vals, segs, n), atol=1e-4))
+    row("kernel.segment_sum.pallas_interp", t_k, f"allclose={ok}")
+
+
+# ------------------------------------------------------------------ roofline
+def bench_roofline(quick=False):
+    """Emit the per-cell roofline terms (from the dry-run artifacts)."""
+    import pathlib
+    from repro.analysis.roofline import full_table
+    rd = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not rd.exists():
+        print("roofline.skipped,0,run launch.dryrun first", file=sys.stderr)
+        return
+    for r in full_table(rd):
+        if "skipped" in r:
+            row(f"roofline.{r['arch']}.{r['shape']}", 0, "SKIP")
+            continue
+        row(f"roofline.{r['arch']}.{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]),
+            f"dominant={r['dominant']};useful={r['useful_ratio']:.2f};"
+            f"frac={r['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: online,offline,ingest,"
+                         "replica,kernels,roofline")
+    args = ap.parse_args()
+    benches = {
+        "online": bench_online, "offline": bench_offline,
+        "ingest": bench_ingest, "replica": bench_replica,
+        "kernels": bench_kernels, "roofline": bench_roofline,
+    }
+    wanted = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        benches[name](quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""END-TO-END DRIVER — the paper's system doing the paper's job.
+
+A dynamic citation-style graph evolves through a stream of mutation epochs:
+
+  1. schema evolution (§2.1): Author/Paper schema grows a new version +
+     School nodes mid-stream;
+  2. asynchronous ingestion (§2.3.1): ingest nodes dispatch mutations with
+     the no-wait rule; the global snapshot frontier trails local frontiers;
+  3. ONLINE computing: k-hop neighborhood + reachability queries answered
+     on sealed snapshots while newer epochs are still ingesting;
+  4. OFFLINE analytics: PageRank timeline (incremental, warm-started — the
+     online/offline shared-data goal), WCC, emerging-vertex detection
+     ("who made the most friends this month?");
+  5. replica-coherence management (§2.2): hub-mirror placement from access
+     stats, hit-rate before/after rebalancing;
+  6. distributed views: the analytics table is a lineage-tracked view;
+     we simulate a node failure and recover it by lineage replay.
+
+    PYTHONPATH=src python examples/dynamic_graph_end_to_end.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.replica import ReplicaManager
+from repro.core.snapshotter import DataNode, IngestNode, Mutation, SnapshotCoordinator
+from repro.core.versioned import Version
+from repro.core.views import View
+from repro.graph import compute as gc
+from repro.graph.dyngraph import synthesize_stream
+from repro.graph.partition import comm_model, partition_graph
+from repro.graph.schema import citation_schema
+
+N, EPOCHS, ADDS = 256, 8, 300
+
+
+def main():
+    # 1) schema evolution ----------------------------------------------------
+    reg = citation_schema()
+    print("== schema (paper Fig 2) ==")
+    print("  Author versions:", reg.versions_of("Author"),
+          "| Author<2> fields:", reg.fields_of("Author", 2))
+
+    # 2) async ingestion -----------------------------------------------------
+    g, batches = synthesize_stream(N, EPOCHS, ADDS, seed=42)
+    nodes = [DataNode(i) for i in range(4)]
+    coord = SnapshotCoordinator(nodes)
+    ingest = IngestNode(nodes, route=lambda k: k % 4)
+    print("\n== ingestion (no-wait dispatch, async snapshots) ==")
+    for e, batch in enumerate(batches):
+        for s, d in zip(batch.add_src, batch.add_dst):
+            ingest.dispatch(Mutation(int(d), e, (int(s), int(d))))
+        for n in nodes:
+            n.seal_epoch(e)
+        ingest.retry_blocked()
+        coord.advance()
+    print(f"  dispatched={ingest.dispatched} mutations, "
+          f"global frontier={coord.global_frontier}")
+
+    # 3) online queries on sealed snapshots -----------------------------------
+    v_mid = Version(EPOCHS // 2, 0)
+    v_last = Version(EPOCHS - 1, 0)
+    view_mid = g.join_view(v_mid)
+    hubs = np.argsort(-np.asarray(view_mid.in_degree))[:3]
+    print("\n== online queries (snapshot isolation) ==")
+    reach = np.asarray(gc.k_hop(view_mid, np.array([int(hubs[0])]), 2))
+    print(f"  2-hop neighborhood of hub {hubs[0]}: {int(reach.sum())} vertices")
+    print(f"  reach({hubs[0]} -> {hubs[1]}) @v_mid:",
+          gc.reachability(view_mid, int(hubs[0]), int(hubs[1])))
+
+    # 4) offline analytics (timeline, warm-started) ---------------------------
+    versions = [Version(e, 0) for e in range(EPOCHS)]
+    print("\n== offline analytics ==")
+    cold = gc.pagerank(g.join_view(v_last), tol=1e-8, max_iter=300)
+    prs = gc.pagerank_timeline(g, versions, incremental=True, tol=1e-8,
+                               max_iter=300)
+    print(f"  pagerank timeline: iters/epoch = "
+          f"{[p.iterations for p in prs]} (cold last-epoch: {cold.iterations})")
+    top = gc.emerging_vertices(g, versions[-3], versions[-1], top_k=5)
+    print(f"  emerging vertices (most new in-links): {top.tolist()}")
+    labels = np.asarray(gc.wcc(g.join_view(v_last)))
+    print(f"  WCC components @last: {len(set(labels.tolist()))}")
+
+    # 5) replica-coherence management -----------------------------------------
+    print("\n== replica-coherence (access-driven placement) ==")
+    rm = ReplicaManager(4, mirror_threshold=4)
+    deg = np.asarray(g.join_view(v_last).in_degree)
+    for vid in range(N):
+        rm.add_item(vid, owner=vid % 4, value=float(deg[vid]))
+    rng = np.random.default_rng(0)
+    popular = np.argsort(-deg)[:16]
+    def workload():
+        for _ in range(2000):
+            item = int(popular[rng.integers(0, 16)])  # hot reads of hubs
+            rm.read(int(rng.integers(0, 4)), item)
+    workload()
+    before = rm.stats()["hit_rate"]
+    rm.rebalance()
+    rm.local_hits = rm.remote_misses = 0
+    workload()
+    after = rm.stats()["hit_rate"]
+    print(f"  hit-rate before/after rebalance: {before:.2f} -> {after:.2f}")
+    pg = partition_graph(g.join_view(v_last), 8, hub_k=8)
+    cm = comm_model(pg)
+    print(f"  comm bytes/superstep: allgather={cm['allgather']:.0f} "
+          f"scatter={cm['scatter']:.0f} hub={cm['hub']:.0f}")
+
+    # 6) distributed views: failure + lineage recovery ------------------------
+    print("\n== distributed views (lineage fault tolerance) ==")
+    snap_view = View.source("graph@last", lambda: g.join_view(v_last))
+    ranks = snap_view.map("pagerank", lambda v: gc.pagerank(v, tol=1e-8).ranks)
+    table = ranks.map("top10", lambda r: np.argsort(-np.asarray(r))[:10])
+    top10 = table.value()
+    table.invalidate(recursive=True)
+    recovered = table.recover()        # replay lineage
+    assert np.array_equal(top10, recovered)
+    print(f"  top-10 by pagerank: {top10.tolist()} "
+          f"(recovered identically after simulated failure)")
+    print("\nOK — end-to-end dynamic graph computing complete")
+
+
+if __name__ == "__main__":
+    main()

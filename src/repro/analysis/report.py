@@ -1,0 +1,76 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from results/.
+
+    PYTHONPATH=src python -m repro.analysis.report > EXPERIMENTS_tables.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.hlo import analyze
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, full_table,
+                                     to_markdown)
+from repro.configs import SHAPES, all_configs
+
+ROOT = pathlib.Path(__file__).resolve().parents[3]
+RD = ROOT / "results" / "dryrun"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = ["| arch | shape | devices | compile s | args GB/dev | temp GB/dev "
+            "| XLA flops/dev (per-body) |",
+            "|---|---|---|---|---|---|---|"]
+    for arch in sorted(all_configs()):
+        for shape in SHAPES:
+            f = RD / f"{arch}__{shape}__{mesh}.json"
+            if not f.exists():
+                continue
+            d = json.loads(f.read_text())
+            if "skipped" in d:
+                rows.append(f"| {arch} | {shape} | — | — | — | — | SKIP |")
+                continue
+            mem = d["memory"]
+            gb = 1024 ** 3
+            rows.append(
+                f"| {arch} | {shape} | {d['devices']} | {d['compile_s']} "
+                f"| {(mem['argument_bytes'] or 0)/gb:.2f} "
+                f"| {(mem['temp_bytes'] or 0)/gb:.2f} "
+                f"| {d['cost']['flops']:.3e} |")
+    return "\n".join(rows)
+
+
+def variant_rows(tags: list[tuple[str, str, str]]) -> str:
+    out = ["| cell | variant | compute s | memory s | collective s "
+           "| dominant | roofline frac |",
+           "|---|---|---|---|---|---|---|"]
+    for arch, shape, tag in tags:
+        suffix = f"__{tag}" if tag else ""
+        hf = RD / f"{arch}__{shape}__single{suffix}.hlo.txt"
+        if not hf.exists():
+            continue
+        r = analyze(hf.read_text(), default_group=16)
+        tc = r["flops"] / PEAK_FLOPS
+        tm = r["hbm_bytes"] / HBM_BW
+        tx = r["collective_link_bytes"] / ICI_BW
+        terms = {"compute": tc, "memory": tm, "collective": tx}
+        dom = max(terms, key=terms.get)
+        from repro.analysis.roofline import model_flops_per_device
+        cfg = all_configs()[arch]
+        mf = model_flops_per_device(cfg, SHAPES[shape], 256)
+        frac = (mf / PEAK_FLOPS) / max(terms.values())
+        out.append(f"| {arch} {shape} | {tag or 'baseline'} | {tc:.2f} "
+                   f"| {tm:.2f} | {tx:.2f} | {dom} | {frac:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    print("## §Dry-run (single-pod 16x16 = 256 chips)\n")
+    print(dryrun_table("single"))
+    print("\n## §Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+    print(dryrun_table("multi"))
+    print("\n## §Roofline (single-pod, per (arch x shape))\n")
+    print(to_markdown(full_table(RD)))
+
+
+if __name__ == "__main__":
+    main()

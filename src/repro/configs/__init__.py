@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeCell, SHAPES, get_config, all_configs, register, reduced,
+    ATTN_KINDS, RECURRENT_KINDS,
+)

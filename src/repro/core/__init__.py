@@ -1,0 +1,12 @@
+"""The paper's primary contribution: versioned datasets + snapshots,
+protocol dataflow, replica-coherence data management, distributed views,
+Lamport-clock event delivery."""
+from repro.core.clock import Event, EventLog, LamportClock, Stamp  # noqa: F401
+from repro.core.protocol_dataflow import (  # noqa: F401
+    CoalescingOutput, Dataflow, Egress, FIFOScheduler, Ingress, Message,
+    PriorityScheduler, Protocol, Vertex)
+from repro.core.replica import ReplicaManager, SharedTensorPolicy  # noqa: F401
+from repro.core.snapshotter import (DataNode, IngestNode, Mutation,  # noqa: F401
+                                    SnapshotCoordinator)
+from repro.core.versioned import Version, VersionedArray, VersionedStore  # noqa: F401
+from repro.core.views import View  # noqa: F401

@@ -1,0 +1,212 @@
+"""Replica-coherence data management — paper §2.2.
+
+The paper's idea: partitioning is driven by *two* factors (load balance and
+communication), replicas are created/migrated from observed access patterns,
+writes keep replicas coherent, and obsolete replicas are collected.
+
+Implementation (TPU adaptation per DESIGN.md §2): the *protocol* lives on the
+control plane (this module — ownership, mirrors, invalidate-on-write,
+access-stats-driven placement, GC); the *policy* output also drives the
+ahead-of-time sharding of tensors in the compiled programs
+(:class:`SharedTensorPolicy`, consumed by ``launch/sharding.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, defaultdict
+from typing import Any, Optional
+
+from repro.core.versioned import Version, VersionedStore
+
+
+# ----------------------------------------------------------------- coherence
+@dataclasses.dataclass
+class ReplicaMeta:
+    owner: int
+    mirrors: set[int] = dataclasses.field(default_factory=set)
+    last_write: Version = Version(0, 0)
+    # mirror -> version it last pulled (invalidate-on-write coherence)
+    mirror_version: dict[int, Version] = dataclasses.field(default_factory=dict)
+    last_used: dict[int, int] = dataclasses.field(default_factory=dict)
+
+
+class ReplicaManager:
+    """Owner/mirror coherence with access-stats-driven placement.
+
+    Protocol:
+      * every item has one *owner* node; writes commit at the owner and
+        bump the item's version (a Paxos write in the real system; the
+        single-writer discipline gives the same serializable order here);
+      * mirrors serve reads; a write *invalidates* mirrors (they re-pull on
+        next read -> coherence: a mirror never serves a value older than the
+        invalidation);
+      * ``rebalance()`` = the paper's scheduler: creates mirrors where remote
+        read traffic is high, migrates ownership toward the heaviest writer,
+        and keeps partitions load-balanced;
+      * ``collect_obsolete()`` GCs mirrors unused for ``ttl`` rounds.
+    """
+
+    def __init__(self, n_nodes: int, *, mirror_threshold: int = 8,
+                 ttl: int = 3, alpha_balance: float = 1.0,
+                 beta_comm: float = 1.0):
+        self.n_nodes = n_nodes
+        self.meta: dict[Any, ReplicaMeta] = {}
+        self.store = VersionedStore()          # committed (owner) versions
+        self.remote_reads: Counter = Counter() # (node, item) -> count
+        self.local_hits = 0
+        self.remote_misses = 0
+        self.invalidations = 0
+        self.round = 0
+        self.mirror_threshold = mirror_threshold
+        self.ttl = ttl
+        self.alpha = alpha_balance
+        self.beta = beta_comm
+
+    # -- placement ----------------------------------------------------------
+    def add_item(self, item, owner: Optional[int] = None,
+                 version: Version = Version(0, 0), value: Any = None):
+        owner = hash(item) % self.n_nodes if owner is None else owner
+        self.meta[item] = ReplicaMeta(owner=owner, last_write=version)
+        self.store.put(item, version, value)
+
+    def holds(self, node: int, item) -> bool:
+        m = self.meta[item]
+        return node == m.owner or node in m.mirrors
+
+    # -- protocol ------------------------------------------------------------
+    def read(self, node: int, item, version: Optional[Version] = None):
+        m = self.meta[item]
+        m.last_used[node] = self.round
+        if node == m.owner:
+            self.local_hits += 1
+            return self.store.get(item, version)
+        if node in m.mirrors:
+            pulled = m.mirror_version.get(node, Version(0, 0))
+            if pulled >= m.last_write:
+                self.local_hits += 1
+                return self.store.get(item, version)
+            # invalidated -> re-pull from owner (counts as one remote fetch)
+            self.remote_misses += 1
+            m.mirror_version[node] = m.last_write
+            return self.store.get(item, version)
+        self.remote_misses += 1
+        self.remote_reads[(node, item)] += 1
+        return self.store.get(item, version)
+
+    def write(self, node: int, item, version: Version, value) -> None:
+        m = self.meta[item]
+        if node != m.owner:
+            # forwarded to owner (single-writer serialization)
+            self.remote_reads[(node, item)] += 1
+        if version <= m.last_write:
+            raise ValueError(f"stale write to {item!r}: {version} <= {m.last_write}")
+        self.store.put(item, version, value)
+        m.last_write = version
+        # coherence: invalidate all mirrors
+        self.invalidations += len(m.mirrors)
+
+    # -- scheduler -----------------------------------------------------------
+    def node_loads(self) -> list[int]:
+        loads = [0] * self.n_nodes
+        for m in self.meta.values():
+            loads[m.owner] += 1
+        return loads
+
+    def cost(self) -> float:
+        """Dynamic-equilibrium objective: alpha * imbalance + beta * traffic."""
+        loads = self.node_loads()
+        mean = sum(loads) / max(len(loads), 1)
+        imbalance = sum((l - mean) ** 2 for l in loads)
+        traffic = sum(self.remote_reads.values())
+        return self.alpha * imbalance + self.beta * traffic
+
+    def rebalance(self) -> dict:
+        """One scheduler round: mirror hot remote items; migrate ownership to
+        the dominant accessor when it will not break balance."""
+        self.round += 1
+        created, migrated = 0, 0
+        loads = self.node_loads()
+        mean = sum(loads) / max(len(loads), 1)
+        per_item: dict[Any, Counter] = defaultdict(Counter)
+        for (node, item), cnt in self.remote_reads.items():
+            per_item[item][node] += cnt
+        for item, counts in per_item.items():
+            m = self.meta[item]
+            node, cnt = counts.most_common(1)[0]
+            if cnt >= self.mirror_threshold and node not in m.mirrors:
+                # paper: 'this replica should be swapped to the requester'
+                if loads[node] <= mean * 1.5:
+                    m.owner, old = node, m.owner
+                    m.mirrors.add(old)
+                    m.mirror_version[old] = m.last_write
+                    loads[node] += 1
+                    loads[old] -= 1
+                    migrated += 1
+                else:
+                    m.mirrors.add(node)
+                    m.mirror_version[node] = m.last_write
+                    created += 1
+        self.remote_reads.clear()
+        collected = self.collect_obsolete()
+        return {"mirrors_created": created, "owners_migrated": migrated,
+                "mirrors_collected": collected}
+
+    def collect_obsolete(self) -> int:
+        """GC mirrors unused for ttl rounds (paper: 'collect the obsolete
+        replicas')."""
+        collected = 0
+        for m in self.meta.values():
+            dead = {n for n in m.mirrors
+                    if self.round - m.last_used.get(n, -10**9) > self.ttl}
+            m.mirrors -= dead
+            for n in dead:
+                m.mirror_version.pop(n, None)
+            collected += len(dead)
+        return collected
+
+    def stats(self) -> dict:
+        return {
+            "local_hits": self.local_hits,
+            "remote_misses": self.remote_misses,
+            "hit_rate": self.local_hits / max(self.local_hits + self.remote_misses, 1),
+            "invalidations": self.invalidations,
+            "cost": self.cost(),
+        }
+
+
+# ----------------------------------------------------- LM-side sharding policy
+@dataclasses.dataclass
+class TensorAccess:
+    """Access statistics for one tensor in a compiled program."""
+    name: str
+    bytes_size: int            # full (unsharded) tensor bytes
+    gather_bytes_per_step: int # collective traffic if sharded (from HLO)
+    current: str               # "sharded" | "replicated"
+
+
+class SharedTensorPolicy:
+    """Replica-coherence policy for AOT-compiled programs: choose which
+    tensors to replicate (mirror on every chip) vs shard, under a memory
+    budget — the knapsack the paper's scheduler solves reactively, solved
+    ahead-of-time from measured access patterns (HLO collective bytes)."""
+
+    def __init__(self, hbm_budget_bytes: int):
+        self.budget = hbm_budget_bytes
+
+    def propose(self, tensors: list[TensorAccess], n_chips: int) -> dict:
+        """Greedy: replicate tensors with the best traffic-saved per byte."""
+        decisions = {}
+        spent = 0
+        ranked = sorted(
+            (t for t in tensors if t.current == "sharded"),
+            key=lambda t: t.gather_bytes_per_step / max(t.bytes_size, 1),
+            reverse=True)
+        for t in ranked:
+            extra = t.bytes_size - t.bytes_size // n_chips
+            if t.gather_bytes_per_step > t.bytes_size // n_chips and \
+                    spent + extra <= self.budget:
+                decisions[t.name] = "replicate"
+                spent += extra
+            else:
+                decisions[t.name] = "keep-sharded"
+        return {"decisions": decisions, "extra_bytes": spent}

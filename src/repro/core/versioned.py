@@ -1,0 +1,153 @@
+"""Versioned data sets and snapshots — paper §2.3.1 (Fig 3).
+
+Every data item carries versions ``(epoch, version)``; a mutation creates a
+new version. A snapshot is resolved with the paper's rule::
+
+    snapshot(v) = { d(i_v) },   i_v = max { v' <= v }
+
+Two implementations share the rule:
+
+* :class:`VersionedStore` — host-side multi-version KV store (control plane:
+  checkpoints, schemas, replica directory entries).
+* :func:`resolve_versions` / :class:`VersionedArray` — JAX data plane: a
+  vectorized ``searchsorted`` resolves whole columns of versioned items at
+  once (used by the dynamic graph store for snapshot masks).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Any, Iterable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Version:
+    """Paper Fig 3(a): epoch identifier + version number within the epoch."""
+    epoch: int
+    number: int
+
+    def pack(self) -> int:
+        return (self.epoch << 32) | self.number
+
+    @staticmethod
+    def unpack(packed: int) -> "Version":
+        return Version(packed >> 32, packed & 0xFFFFFFFF)
+
+
+ZERO = Version(0, 0)
+
+# Data-plane (JAX) packing: int32-safe (x64 is disabled in JAX by default).
+# Host-side control plane uses the full 64-bit pack().
+PACK_BITS = 20
+
+
+def pack32(v: Version) -> int:
+    assert v.epoch < (1 << (31 - PACK_BITS)) and v.number < (1 << PACK_BITS), v
+    return (v.epoch << PACK_BITS) | v.number
+
+
+class VersionedStore:
+    """Multi-version key-value items (paper Fig 3(b))."""
+
+    def __init__(self):
+        # key -> (sorted list of packed versions, list of values)
+        self._items: dict[Any, tuple[list[int], list[Any]]] = {}
+
+    def put(self, key, version: Version, value) -> None:
+        vs, vals = self._items.setdefault(key, ([], []))
+        packed = version.pack()
+        idx = bisect.bisect_left(vs, packed)
+        if idx < len(vs) and vs[idx] == packed:
+            raise ValueError(f"version {version} of {key!r} already written "
+                             "(versions are immutable)")
+        vs.insert(idx, packed)
+        vals.insert(idx, value)
+
+    def get(self, key, version: Optional[Version] = None):
+        """Paper's snapshot rule: value at max version <= requested."""
+        if key not in self._items:
+            raise KeyError(key)
+        vs, vals = self._items[key]
+        if version is None:
+            return vals[-1]
+        idx = bisect.bisect_right(vs, version.pack()) - 1
+        if idx < 0:
+            raise KeyError(f"{key!r} has no version <= {version}")
+        return vals[idx]
+
+    def versions(self, key) -> list[Version]:
+        return [Version.unpack(p) for p in self._items.get(key, ([], []))[0]]
+
+    def keys(self) -> Iterable:
+        return self._items.keys()
+
+    def snapshot(self, version: Version) -> dict:
+        """Materialize {key: d(i_v)} for all keys with a version <= v."""
+        out = {}
+        for key in self._items:
+            try:
+                out[key] = self.get(key, version)
+            except KeyError:
+                pass
+        return out
+
+    def gc_below(self, version: Version) -> int:
+        """Collect obsolete versions: keep, per key, only the newest version
+        <= v (still addressable by snapshot(v)) plus everything > v.
+        Returns number of dropped versions (paper §2.2 'obsolete replicas')."""
+        dropped = 0
+        packed = version.pack()
+        for key, (vs, vals) in self._items.items():
+            idx = bisect.bisect_right(vs, packed) - 1
+            if idx > 0:
+                del vs[:idx]
+                del vals[:idx]
+                dropped += idx
+        return dropped
+
+
+def resolve_versions(item_versions, query_version):
+    """Vectorized snapshot rule over a column of packed versions.
+
+    item_versions: (N, K) packed versions per item, sorted ascending along K,
+    padded with ``jnp.iinfo(int64).max`` for unused slots.
+    Returns (N,) index i_v into K of max version <= query, or -1 if none.
+    """
+    item_versions = jnp.asarray(item_versions)
+    q = jnp.asarray(query_version, item_versions.dtype)
+    # searchsorted per row: count of versions <= q, minus one
+    idx = jnp.sum(item_versions <= q, axis=-1) - 1
+    return idx
+
+
+class VersionedArray:
+    """A fixed-capacity multi-version array column (JAX data plane).
+
+    values: (N, K) — K version slots per item; versions: (N, K) packed,
+    ascending, MAX-padded. Snapshot read = one vectorized resolve + gather.
+    """
+
+    MAXV = np.iinfo(np.int32).max
+
+    def __init__(self, n_items: int, capacity: int, dtype=jnp.float32):
+        self.values = jnp.zeros((n_items, capacity), dtype)
+        self.versions = jnp.full((n_items, capacity), self.MAXV, jnp.int32)
+        self.fill = jnp.zeros((n_items,), jnp.int32)
+
+    def write(self, item_ids, version: Version, new_values):
+        """Append a new version for the given items (one mutation batch)."""
+        item_ids = jnp.asarray(item_ids)
+        slots = self.fill[item_ids]
+        self.values = self.values.at[item_ids, slots].set(new_values)
+        self.versions = self.versions.at[item_ids, slots].set(pack32(version))
+        self.fill = self.fill.at[item_ids].add(1)
+        return self
+
+    def read_snapshot(self, version: Version, default=0):
+        idx = resolve_versions(self.versions, pack32(version))
+        safe = jnp.maximum(idx, 0)
+        vals = jnp.take_along_axis(self.values, safe[:, None], axis=1)[:, 0]
+        return jnp.where(idx >= 0, vals, default)

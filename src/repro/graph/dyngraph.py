@@ -1,0 +1,206 @@
+"""Versioned dynamic graph store — the JAX data plane of the paper's data
+model.
+
+JAX needs static shapes, so the graph is a capacity-bounded *multi-version*
+edge/vertex store: a mutation never overwrites — an edge add writes a row
+stamped ``created=v``; an edge delete stamps ``deleted=v``. A snapshot is a
+*mask* (``created <= v < deleted``), which is exactly the paper's Fig 3(b)
+multi-version item semantics (every version stays addressable), vectorized.
+
+The per-snapshot CSR ("join view", §2.3.3.2) is built once per queried
+version and cached — it is what makes the join-group-by operator a segment
+reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.versioned import Version
+
+MAXV = np.iinfo(np.int64).max
+
+
+@dataclasses.dataclass
+class MutationBatch:
+    """One epoch's worth of mutations (vectorized)."""
+    version: Version
+    add_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    add_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    del_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    del_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    add_vertices: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    vertex_types: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+
+    @property
+    def size(self) -> int:
+        return (len(self.add_src) + len(self.del_src) + len(self.add_vertices))
+
+
+@dataclasses.dataclass
+class JoinView:
+    """CSR of one snapshot: dst-grouped in-edges (the join view)."""
+    version: Version
+    n: int
+    offsets: jnp.ndarray       # (n+1,)
+    src: jnp.ndarray           # (m,) source vertex per in-edge
+    dst: jnp.ndarray           # (m,)
+    out_degree: jnp.ndarray    # (n,)
+    in_degree: jnp.ndarray     # (n,)
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+
+class DynamicGraph:
+    """Capacity-bounded versioned edge store + vertex table."""
+
+    def __init__(self, n_max: int, e_max: int):
+        self.n_max = n_max
+        self.e_max = e_max
+        self.src = np.zeros(e_max, np.int32)
+        self.dst = np.zeros(e_max, np.int32)
+        self.created = np.full(e_max, MAXV, np.int64)
+        self.deleted = np.full(e_max, MAXV, np.int64)
+        self.n_edges = 0
+        self.v_created = np.full(n_max, MAXV, np.int64)
+        self.v_type = np.zeros(n_max, np.int32)
+        self.n_vertices = 0
+        self.versions: list[Version] = []
+        self._views: dict[int, JoinView] = {}
+
+    # -- ingestion ---------------------------------------------------------
+    def apply(self, batch: MutationBatch) -> None:
+        v = batch.version.pack()
+        if self.versions and v <= self.versions[-1].pack():
+            raise ValueError("mutation batches must have increasing versions")
+        # vertex adds
+        for vid, vt in zip(batch.add_vertices, batch.vertex_types):
+            if self.v_created[vid] == MAXV:
+                self.v_created[vid] = v
+                self.v_type[vid] = vt
+                self.n_vertices += 1
+        # edge adds: append rows
+        k = len(batch.add_src)
+        if k:
+            if self.n_edges + k > self.e_max:
+                raise MemoryError("edge capacity exceeded")
+            sl = slice(self.n_edges, self.n_edges + k)
+            self.src[sl] = batch.add_src
+            self.dst[sl] = batch.add_dst
+            self.created[sl] = v
+            self.deleted[sl] = MAXV
+            # auto-create endpoint vertices
+            for vid in np.concatenate([batch.add_src, batch.add_dst]):
+                if self.v_created[vid] == MAXV:
+                    self.v_created[vid] = v
+                    self.n_vertices += 1
+            self.n_edges += k
+        # edge deletes: stamp the *live* row matching (src, dst)
+        for s, d in zip(batch.del_src, batch.del_dst):
+            live = np.flatnonzero(
+                (self.src[:self.n_edges] == s) & (self.dst[:self.n_edges] == d)
+                & (self.deleted[:self.n_edges] == MAXV))
+            if live.size:
+                self.deleted[live[-1]] = v
+        self.versions.append(batch.version)
+
+    # -- snapshots -----------------------------------------------------------
+    def snapshot_mask(self, version: Version) -> np.ndarray:
+        """created <= v < deleted — the paper's snapshot rule on edges."""
+        v = version.pack()
+        e = self.n_edges
+        return (self.created[:e] <= v) & (v < self.deleted[:e])
+
+    def num_vertices(self, version: Optional[Version] = None) -> int:
+        if version is None:
+            return self.n_vertices
+        return int((self.v_created <= version.pack()).sum())
+
+    def join_view(self, version: Version) -> JoinView:
+        """Build (and cache) the dst-grouped CSR for a snapshot."""
+        key = version.pack()
+        if key in self._views:
+            return self._views[key]
+        mask = self.snapshot_mask(version)
+        src = self.src[:self.n_edges][mask]
+        dst = self.dst[:self.n_edges][mask]
+        n = self.n_max
+        order = np.argsort(dst, kind="stable")
+        src_s, dst_s = src[order], dst[order]
+        counts = np.bincount(dst_s, minlength=n)
+        offsets = np.zeros(n + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        out_deg = np.bincount(src, minlength=n)
+        view = JoinView(version, n, jnp.asarray(offsets),
+                        jnp.asarray(src_s), jnp.asarray(dst_s),
+                        jnp.asarray(out_deg.astype(np.float32)),
+                        jnp.asarray(counts.astype(np.float32)))
+        self._views[key] = view
+        return view
+
+    def gc_views(self, keep_latest: int = 4) -> int:
+        """Collect obsolete join views (paper §2.2 obsolete-replica GC)."""
+        if len(self._views) <= keep_latest:
+            return 0
+        keys = sorted(self._views)
+        drop = keys[:-keep_latest]
+        for k in drop:
+            del self._views[k]
+        return len(drop)
+
+
+# ----------------------------------------------------------- synthetic data
+def synthesize_stream(n_vertices: int, n_epochs: int, adds_per_epoch: int,
+                      *, seed: int = 0, delete_frac: float = 0.05,
+                      n_types: int = 3) -> tuple[DynamicGraph, list[MutationBatch]]:
+    """Preferential-attachment mutation stream (citation-graph-like: papers
+    cite earlier papers; new vertex types appear in later epochs — the
+    paper's Fig 1 evolution)."""
+    rng = np.random.default_rng(seed)
+    e_max = n_epochs * adds_per_epoch * 2 + 16
+    g = DynamicGraph(n_vertices, e_max)
+    batches = []
+    deg = np.ones(n_vertices, np.float64)
+    grown = 8
+    live: list[tuple[int, int]] = []
+    for epoch in range(n_epochs):
+        grown = min(n_vertices, grown + max(1, n_vertices // (n_epochs + 1)))
+        p = deg[:grown] / deg[:grown].sum()
+        dsts = rng.choice(grown, size=adds_per_epoch, p=p).astype(np.int32)
+        srcs = rng.integers(0, grown, size=adds_per_epoch).astype(np.int32)
+        keep = srcs != dsts
+        srcs, dsts = srcs[keep], dsts[keep]
+        deg_update = np.bincount(dsts, minlength=n_vertices)
+        deg += deg_update
+        n_del = int(len(live) * delete_frac)
+        if n_del:
+            idx = rng.choice(len(live), size=n_del, replace=False)
+            dels = [live[i] for i in idx]
+            live = [e for i, e in enumerate(live) if i not in set(idx)]
+            del_src = np.array([d[0] for d in dels], np.int32)
+            del_dst = np.array([d[1] for d in dels], np.int32)
+        else:
+            del_src = del_dst = np.zeros(0, np.int32)
+        live.extend(zip(srcs.tolist(), dsts.tolist()))
+        # vertex type evolution: later epochs introduce new types
+        vtypes = np.minimum(epoch * n_types // max(n_epochs, 1), n_types - 1)
+        batch = MutationBatch(
+            version=Version(epoch, 0),
+            add_src=srcs, add_dst=dsts,
+            del_src=del_src, del_dst=del_dst,
+            add_vertices=np.zeros(0, np.int32),
+            vertex_types=np.full(0, vtypes, np.int32))
+        g.apply(batch)
+        batches.append(batch)
+    return g, batches

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: blocked online-softmax attention (GQA + causal +
+sliding-window/local masking).
+
+Grid = (B, Hq, S // QB). Each instance owns one q block (QB, hd) and loops
+over kv chunks with ``fori_loop``, keeping the running max / denominator /
+accumulator in VMEM f32. Causal block-skipping is real here (the loop bound
+depends on the q-block index — the 2x FLOPs the portable jnp path wastes on
+masked upper-triangle chunks is *not* spent), and window masking also lower-
+bounds the loop so local attention is O(S*W).
+
+GQA is free: the kv BlockSpec index_map divides the q-head index by the
+group size, so kv blocks are fetched once per kv head.
+
+VMEM per instance: q (QB, hd) + k,v (S, hd) bf16 + acc (QB, hd) f32.
+At S=32k, hd=128, bf16: k+v = 16 MB — within a v5e core's VMEM for one
+resident (1,1,S,hd) block; longer S must tile kv through HBM (the wrapper
+asserts the budget instead of silently thrashing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_Q_BLOCK = 128
+DEFAULT_KV_BLOCK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, q_block, kv_block, causal,
+            window, scale, seq_len):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # (QB, hd)
+    kv_hi = seq_len // kv_block
+    if causal:
+        kv_hi = jnp.minimum(kv_hi, (qi + 1) * q_block // kv_block
+                            + (1 if q_block % kv_block else 0))
+    kv_lo = 0
+    if window is not None:
+        kv_lo = jnp.maximum(0, (qi * q_block - window) // kv_block)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.ds(j * kv_block, kv_block)].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(j * kv_block, kv_block)].astype(jnp.float32)
+        s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32)
+        pos_q = qi * q_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 0)
+        pos_k = j * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 1)
+        mask = jnp.ones((q_block, kv_block), bool)
+        if causal:
+            mask &= pos_k <= pos_q
+        if window is not None:
+            mask &= (pos_q - pos_k) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q_block,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_block,), jnp.float32)
+    a0 = jnp.zeros((q_block, q.shape[1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(kv_lo, kv_hi, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "q_block", "kv_block",
+                                    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    q_block: int = DEFAULT_Q_BLOCK,
+                    kv_block: int = DEFAULT_KV_BLOCK,
+                    interpret: bool = False):
+    """q: (B,Hq,S,hd); k,v: (B,Hkv,S,hd), Hq % Hkv == 0. Returns (B,Hq,S,hd).
+    S must be a multiple of the block sizes (the model pads)."""
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    qb = min(q_block, S)
+    kb = min(kv_block, S)
+    assert S % qb == 0 and S % kb == 0, (S, qb, kb)
+    # VMEM budget check: resident k+v blocks must fit (~half a v5e core VMEM)
+    assert 2 * S * hd * 2 <= 96 * 1024 * 1024, "kv too large for VMEM residency"
+    scale = hd ** -0.5
+    grid = (B, Hq, S // qb)
+    return pl.pallas_call(
+        functools.partial(_kernel, q_block=qb, kv_block=kb, causal=causal,
+                          window=window, scale=scale, seq_len=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // g, 0, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, hd), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute in interpret mode (the kernel body
+runs in Python op-by-op — bit-accurate control flow, no Mosaic); on TPU they
+compile natively. ``repro.nn``/``repro.graph`` call through this module so
+the switch is one place.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lru_scan as _lru
+from repro.kernels import segment_sum as _ss
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def segment_sum(values, segment_ids, num_segments, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _ss.segment_sum(values, segment_ids, num_segments, **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _fa.flash_attention(q, k, v, causal=causal, window=window, **kw)
+
+
+def lru_scan(a, b, h0=None, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _lru.lru_scan(a, b, h0, **kw)

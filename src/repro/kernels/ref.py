@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode sweeps assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(values, segment_ids, num_segments):
+    """values: (m, F); segment_ids: (m,) sorted; -> (n, F)."""
+    return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B,H,S,hd); k,v: (B,Hkv,S,hd) with H % Hkv == 0. Full softmax
+    reference (materializes S x S — test sizes only)."""
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, S, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= (pos_q - pos_k) < window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def lru_scan(a, b):
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t over axis 1.
+    a, b: (B, S, C) f32. h_0 = b_0 (h_{-1} = 0)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines, before any jax import: jax locks the device
+# count on first init. The dry-run (and ONLY the dry-run) gets 512
+# placeholder host devices so jax.make_mesh can build the production mesh.
+os.environ.setdefault("REPRO_FORCE_BF16", "1")  # lower with TPU-real dtypes
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory/cost/collective statistics.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Every result is appended incrementally to results/dryrun/<arch>__<shape>__<mesh>.json
+so a long --all run can be resumed/parallelized; existing cells are skipped
+unless --force.
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_configs
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "e4m3": 1, "e5m2": 1,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+)?)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str):
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # match '<shape> kind(' — the op use, not metadata mentions
+            marker = f" {kind}("
+            start_marker = f"{kind}-start("
+            if marker not in stripped and start_marker not in stripped:
+                continue
+            # operands are inside the parens following the op name
+            idx = stripped.find(marker)
+            if idx < 0:
+                idx = stripped.find(start_marker)
+            paren = stripped.find("(", idx)
+            operand_text = stripped[paren:]
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(operand_text))
+            stats[kind]["count"] += 1
+            stats[kind]["bytes"] += total
+            break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def shardings_for(cfg, shape_name, mesh, multi_pod):
+    cell = SHAPES[shape_name]
+    long_ctx = cell.name == "long_500k"
+    mapping = shd.baseline_mapping(multi_pod, long_context=long_ctx,
+                                   serve=cell.kind != "train",
+                                   expert_sharding=cfg.expert_sharding)
+    rules = shd.ShardingRules(mesh, mapping)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    ins = input_specs(cfg, shape_name)
+    batch_axes = mapping["batch"]
+
+    def batch_sharding(tree):
+        def leaf(x):
+            spec = rules.spec(("batch",) + (None,) * (len(x.shape) - 1), x.shape)
+            return ns(spec)
+        return jax.tree.map(leaf, tree)
+
+    if cell.kind == "train":
+        pspecs = shd.param_specs(ins["state"]["params"], rules)
+        state_sh = {
+            "params": jax.tree.map(ns, pspecs),
+            "opt": {"m": jax.tree.map(ns, pspecs),
+                    "v": jax.tree.map(ns, pspecs),
+                    "count": ns(P())},
+            "step": ns(P()),
+        }
+        args = (ins["state"], ins["batch"])
+        in_sh = (state_sh, batch_sharding(ins["batch"]))
+        return args, in_sh, rules
+    pspecs = shd.param_specs(ins["params"], rules)
+    params_sh = jax.tree.map(ns, pspecs)
+    if cell.kind == "prefill":
+        args = (ins["params"], ins["batch"])
+        in_sh = (params_sh, batch_sharding(ins["batch"]))
+        return args, in_sh, rules
+    cache_sh = jax.tree.map(ns, shd.cache_specs(ins["cache"], rules))
+    args = (ins["params"], ins["cache"], ins["inputs"], ins["pos"])
+    in_sh = (params_sh, cache_sh,
+             batch_sharding(ins["inputs"]), ns(P()))
+    return args, in_sh, rules
+
+
+def step_fn_for(cfg, shape_name):
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return make_train_step(cfg)
+    if kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_decode_step(cfg)
+
+
+def cell_applicable(cfg, shape_name) -> bool:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False
+    return True
+
+
+def parse_overrides(pairs):
+    """--override key=value (int/float/str/bool inferred) for §Perf variants."""
+    out = {}
+    for pair in pairs or ():
+        k, v = pair.split("=", 1)
+        for cast in (int, float):
+            try:
+                out[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            out[k] = {"true": True, "false": False}.get(v.lower(), v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, save_hlo=False,
+             overrides=None, tag=""):
+    import dataclasses
+    cfg = all_configs()[arch]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn = step_fn_for(cfg, shape_name)
+    args, in_sh, rules = shardings_for(cfg, shape_name, mesh, multi_pod)
+    from repro.nn.layers import bf16_backward_scope
+    with rules.active(), bf16_backward_scope(cfg.bwd_dtype == "bfloat16"):
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "collectives": coll,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    if save_hlo:
+        suffix = f"__{tag}" if tag else ""
+        (RESULTS / f"{arch}__{shape_name}__{mesh_kind}{suffix}.hlo.txt"
+         ).write_text(hlo)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--override", action="append", default=None,
+                    help="cfg field override key=value (repeatable)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for result files (perf variants)")
+    args = ap.parse_args()
+    overrides = parse_overrides(args.override)
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    archs = sorted(all_configs()) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = all_configs()[arch]
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                tag = f"__{args.tag}" if args.tag else ""
+                out = RESULTS / f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+                if out.exists() and not args.force:
+                    print(f"[skip] {out.name} exists")
+                    continue
+                if not cell_applicable(cfg, shape_name):
+                    out.write_text(json.dumps({
+                        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                        "skipped": "long_500k needs sub-quadratic attention; "
+                                   "this arch is pure full-attention "
+                                   "(see DESIGN.md §Arch-applicability)"}))
+                    print(f"[SKIP] {arch} x {shape_name} (full attention)")
+                    continue
+                print(f"[run ] {arch} x {shape_name} x {mesh_kind} "
+                      f"{overrides or ''}...", flush=True)
+                try:
+                    res = run_cell(arch, shape_name, mesh_kind, args.save_hlo,
+                                   overrides=overrides, tag=args.tag)
+                    if args.tag:
+                        res["tag"] = args.tag
+                        res["overrides"] = overrides
+                    out.write_text(json.dumps(res, indent=1))
+                    print(f"[ ok ] {arch} x {shape_name} x {mesh_kind}: "
+                          f"flops/dev={res['cost']['flops']:.3e} "
+                          f"coll={res['collectives']['total_bytes']:.3e}B "
+                          f"compile={res['compile_s']}s", flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((arch, shape_name, mesh_kind, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nall requested dry-run cells OK")
+
+
+if __name__ == "__main__":
+    main()

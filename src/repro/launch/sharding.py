@@ -1,0 +1,226 @@
+"""Logical-axis sharding rules (MaxText-style) + param-spec derivation.
+
+The model code annotates activations with *logical* axis names
+(``constrain(x, ("batch", "seq", "dmodel"))``); a :class:`ShardingRules`
+context maps logical names to mesh axes. Param specs are derived from pytree
+paths so the model definition stays sharding-agnostic.
+
+This module is also where the paper's §2.2 *replica-coherence policy* meets
+the LM half of the framework: ``repro.core.replica.SharedTensorPolicy``
+proposes replicate-vs-shard decisions per tensor; the accepted decisions are
+expressed as these rules.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current() -> Optional["ShardingRules"]:
+    return getattr(_STATE, "rules", None)
+
+
+class ShardingRules:
+    """Maps logical axis names -> mesh axis (or None = replicate)."""
+
+    def __init__(self, mesh, mapping):
+        self.mesh = mesh
+        self.mapping = dict(mapping)
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec(self, logical_axes, dims=None) -> P:
+        """Resolve logical axes to a PartitionSpec, dropping non-divisible
+        or unmapped axes (replica-coherence fallback: replicate)."""
+        out = []
+        for i, name in enumerate(logical_axes):
+            axis = self.mapping.get(name)
+            if axis is None:
+                out.append(None)
+                continue
+            size = (self.axis_sizes[axis] if isinstance(axis, str)
+                    else _prod(self.axis_sizes[a] for a in axis))
+            if dims is not None and dims[i] % size != 0:
+                out.append(None)  # uneven -> replicate this dim
+            else:
+                out.append(axis)
+        return P(*out)
+
+    @contextlib.contextmanager
+    def active(self):
+        prev = _current()
+        _STATE.rules = self
+        try:
+            yield self
+        finally:
+            _STATE.rules = prev
+
+
+def _prod(it):
+    r = 1
+    for v in it:
+        r *= v
+    return r
+
+
+def constrain(x, logical_axes):
+    """Apply a sharding constraint if rules are active; no-op otherwise."""
+    rules = _current()
+    if rules is None:
+        return x
+    spec = rules.spec(logical_axes, dims=x.shape)
+    sharding = jax.sharding.NamedSharding(rules.mesh, spec)
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+# --------------------------------------------------------------------------
+# Baseline logical->mesh mappings (the "paper-faithful" starting point):
+# DP/FSDP over `data` (and `pod` for batch), Megatron TP over `model`.
+# --------------------------------------------------------------------------
+def baseline_mapping(multi_pod: bool, *, long_context: bool = False,
+                     serve: bool = False, expert_sharding: str = "tensor"):
+    batch_axes = ("pod", "data") if multi_pod else "data"
+    m = {
+        "batch": batch_axes,
+        "seq": None,
+        "dmodel": None,
+        "dmodel_w": "data",      # FSDP shard of weight d_model dims
+        "ff": "model",
+        "qdim": "model",
+        "kvdim": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "vocab": "model",
+        # MoE: EP over the model axis when E % model == 0 (phi3.5), else TP
+        # inside each expert's ffn dims (mixtral).
+        "expert": "model" if expert_sharding == "expert" else None,
+        "ff_exp": None if expert_sharding == "expert" else "model",
+        "lru": "model",
+        "inner": "model",        # mLSTM/sLSTM inner projection dim
+        "cache_seq": None,
+        "cache_batch": batch_axes,
+    }
+    if long_context:
+        # batch=1: context/sequence parallelism over the data axis instead.
+        m["cache_batch"] = None
+        m["cache_seq"] = "data"
+        m["seq"] = "data"
+    if serve:
+        # Serving has no optimizer state; weights stay TP-sharded and are
+        # additionally FSDP-sharded over `data` only to fit HBM (gathered
+        # per-layer on use).
+        pass
+    return m
+
+
+# --------------------------------------------------------------------------
+# Param logical axes by (leaf name, ndim). Stacked scan units prepend a
+# "layers" dim which is never sharded.
+# --------------------------------------------------------------------------
+_PARAM_AXES = {
+    ("embed", 2): ("vocab", "dmodel_w"),
+    ("lm_head", 2): ("dmodel_w", "vocab"),
+    ("wq", 2): ("dmodel_w", "qdim"),
+    ("wk", 2): ("dmodel_w", "kvdim"),
+    ("wv", 2): ("dmodel_w", "kvdim"),
+    ("wo", 2): ("qdim", "dmodel_w"),
+    ("bq", 1): ("qdim",),
+    ("bk", 1): ("kvdim",),
+    ("bv", 1): ("kvdim",),
+    ("w1", 2): ("dmodel_w", "ff"),
+    ("w3", 2): ("dmodel_w", "ff"),
+    ("w2", 2): ("ff", "dmodel_w"),
+    ("b1", 1): ("ff",),
+    ("b2", 1): (None,),
+    ("router", 2): ("dmodel_w", None),
+    ("w1", 3): ("expert", "dmodel_w", "ff_exp"),
+    ("w3", 3): ("expert", "dmodel_w", "ff_exp"),
+    ("w2", 3): ("expert", "ff_exp", "dmodel_w"),
+    ("in_x", 2): ("dmodel_w", "lru"),
+    ("in_gate", 2): ("dmodel_w", "lru"),
+    ("out", 2): ("lru", "dmodel_w"),
+    ("w_ig", 1): ("lru",),
+    ("b_ig", 1): ("lru",),
+    ("w_rg", 1): ("lru",),
+    ("b_rg", 1): ("lru",),
+    ("a_param", 1): ("lru",),
+    ("up", 2): ("dmodel_w", "inner"),
+    ("down", 2): ("inner", "dmodel_w"),
+    ("w_if", 2): ("inner", None),
+    ("b_if", 1): (None,),
+    ("head_norm", 1): (None,),
+    ("w_gates", 2): ("dmodel_w", "inner"),
+    ("r_gates", 3): (None, None, None),
+    ("b_gates", 1): (None,),
+    ("up1", 2): ("dmodel_w", "inner"),
+    ("up2", 2): ("dmodel_w", "inner"),
+    ("w", 2): (None, "lru"),        # conv kernels (width, channels)
+    ("wq", 3): (None, None, None),  # mLSTM per-head block-diag projections
+    ("wk", 3): (None, None, None),
+    ("wv", 3): (None, None, None),
+}
+
+
+def _leaf_logical_axes(path, ndim):
+    name = None
+    stacked = False
+    for entry in path:
+        key = getattr(entry, "key", None)
+        if key == "units":
+            stacked = True
+        if isinstance(key, str) and key != "units":
+            name = key
+    # scanned stacks have a leading layer dim; try the right rank first so a
+    # stacked 2D weight isn't confused with a native 3D (MoE) weight.
+    order = (1, 0) if stacked else (0, 1)
+    for extra in order:
+        axes = _PARAM_AXES.get((name, ndim - extra))
+        if axes is not None:
+            return (None,) * extra + tuple(axes)
+    return (None,) * ndim  # norms, scalars, unknown -> replicate
+
+
+def param_specs(params, rules: ShardingRules):
+    """PartitionSpec pytree matching ``params``."""
+    def leaf_spec(path, leaf):
+        axes = _leaf_logical_axes(path, leaf.ndim)
+        return rules.spec(axes, dims=leaf.shape)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def cache_specs(cache, rules: ShardingRules):
+    """Specs for decode caches: KV caches (layers,B,Hkv,S,hd) and recurrent
+    states (leading layers dim, then batch)."""
+    def leaf_spec(path, leaf):
+        names = [getattr(e, "key", None) for e in path]
+        if "k" in names or "v" in names:
+            axes = ("layers", "cache_batch", "kv_heads", "cache_seq", "head_dim")
+            axes = axes[-leaf.ndim:]
+        else:
+            axes = ("layers", "cache_batch") + (None,) * (leaf.ndim - 2)
+            axes = axes[:leaf.ndim]
+        axes = tuple(a if a not in ("layers",) else None for a in axes)
+        spec = rules.spec(axes, dims=leaf.shape)
+        # GQA caches with kv_heads < model-axis size: fall back to sharding
+        # head_dim over 'model' so big-arch caches still split 16 ways
+        if ("k" in names or "v" in names) and leaf.ndim >= 2:
+            parts = list(spec)
+            try:
+                kv_pos = axes.index("kv_heads")
+                hd_pos = axes.index("head_dim")
+            except ValueError:
+                return spec
+            model_size = rules.axis_sizes.get("model", 1)
+            if (parts[kv_pos] is None and parts[hd_pos] is None
+                    and leaf.shape[hd_pos] % model_size == 0
+                    and rules.mapping.get("kv_heads") == "model"):
+                parts[hd_pos] = "model"
+                return P(*parts)
+        return spec
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)

@@ -1,0 +1,46 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation. Used by the dry-run and the roofline
+benchmarks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeCell
+from repro.models import transformer as tf
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell):
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.embed_mode == "tokens":
+        inputs = SDS((B, S), jnp.int32)
+    else:
+        inputs = SDS((B, S, cfg.d_model), jnp.bfloat16)
+    return {"inputs": inputs, "labels": SDS((B, S), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, cell: ShapeCell):
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.embed_mode == "tokens":
+        inputs = SDS((B, 1), jnp.int32)
+    else:
+        inputs = SDS((B, 1, cfg.d_model), jnp.bfloat16)
+    cache = tf.cache_shapes(cfg, B, S)
+    pos = SDS((), jnp.int32)
+    return {"inputs": inputs, "cache": cache, "pos": pos}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """All inputs for the step that this shape cell lowers."""
+    cell = SHAPES[shape_name]
+    if cell.kind == "train":
+        from repro.launch.steps import train_state_shapes
+        return {"state": train_state_shapes(cfg),
+                "batch": batch_specs(cfg, cell)}
+    if cell.kind == "prefill":
+        return {"params": tf.param_shapes(cfg),
+                "batch": {"inputs": batch_specs(cfg, cell)["inputs"]}}
+    # decode
+    return {"params": tf.param_shapes(cfg), **decode_input_specs(cfg, cell)}

@@ -1,0 +1,99 @@
+"""jit-able step functions: train_step, prefill_step, decode_step.
+
+These close over the ModelConfig (static) and take pytrees of arrays, so the
+same function objects are used by the CPU examples, the smoke tests, and the
+512-device dry-run lowering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import constrain
+from repro.models import transformer as tf
+from repro.train.loss import chunked_cross_entropy
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def make_positions(batch, seq):
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    inputs = batch["inputs"]
+    B, S = inputs.shape[:2]
+    positions = make_positions(B, S)
+    hidden, aux = tf.forward(params, cfg, inputs, positions)
+    loss_sum, cnt = chunked_cross_entropy(
+        params["lm_head"], hidden, batch["labels"],
+        chunk=cfg.loss_chunk, softcap=cfg.logit_softcap)
+    loss = loss_sum / jnp.maximum(cnt, 1.0)
+    return loss + AUX_LOSS_WEIGHT * aux, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig = OptConfig()):
+    mb = max(cfg.microbatches, 1)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, batch)
+
+    def train_step(state, batch):
+        if mb == 1:
+            (loss, metrics), grads = grads_of(state["params"], batch)
+        else:
+            # gradient accumulation: scan over microbatches so only one
+            # microbatch's activations are live at a time (capacity /= mb)
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mbatch):
+                gsum, loss_sum = carry
+                (loss, _), g = grads_of(state["params"], mbatch)
+                return (jax.tree.map(jnp.add, gsum, g),
+                        loss_sum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state["params"])
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = loss_sum / mb
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        params, opt, gnorm = adamw_update(oc, state["params"], grads,
+                                          state["opt"])
+        new_state = {"params": params, "opt": opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params = tf.init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_shapes(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_train_state, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache = tf.prefill(params, cfg, batch["inputs"])
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, inputs, pos):
+        logits, cache = tf.decode_step(params, cfg, cache, inputs, pos)
+        return logits, cache
+    return decode_step

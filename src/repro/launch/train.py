@@ -1,0 +1,159 @@
+"""Training driver — the training loop IS a protocol-dataflow program.
+
+    ingress (data pipeline views) -> step vertex (jitted train_step)
+        -> egress (metrics) + checkpoint vertex (versioned snapshots)
+
+Fault tolerance demonstrated end-to-end: ``--fail-at N`` kills the step
+vertex at step N; the driver restores ``snapshot(latest)`` (paper §2.3.1
+rule), rebuilds the pipeline at the restored batch index (deterministic
+views => no data loss/duplication) and continues. ``--compress`` enables
+int8 error-feedback gradient compression.
+
+Usage (CPU, reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b \
+        --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ck --fail-at 23
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_configs, reduced
+from repro.core.protocol_dataflow import Dataflow, Egress, Ingress, Protocol, Vertex
+from repro.launch.steps import init_train_state, make_train_step
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import compress_grads, init_error_state
+from repro.train.data import TokenPipeline, unigram_entropy_floor
+
+TRAIN = Protocol("train-loop", validate=lambda m: isinstance(m, tuple))
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def build_step_vertex(cfg, state_box, oc_kw, *, compress=False, fail_at=None):
+    step_fn = jax.jit(make_train_step(cfg))
+    err_box = {"err": None}
+
+    def fn(vertex, port, payloads):
+        outs = []
+        for (idx, batch) in payloads:
+            if fail_at is not None and idx == fail_at and \
+                    not state_box.get("failed_once"):
+                state_box["failed_once"] = True
+                raise SimulatedFailure(f"injected failure at step {idx}")
+            state = state_box["state"]
+            if compress:
+                # quantize/dequantize grads with error feedback around the
+                # (SPMD-implicit) all-reduce
+                from repro.launch.steps import loss_fn
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"], cfg, batch)
+                if err_box["err"] is None:
+                    err_box["err"] = init_error_state(grads)
+                grads, err_box["err"], cstats = compress_grads(
+                    grads, err_box["err"])
+                from repro.train.optimizer import OptConfig, adamw_update
+                params, opt, gnorm = adamw_update(
+                    OptConfig(), state["params"], grads, state["opt"])
+                state = {"params": params, "opt": opt,
+                         "step": state["step"] + 1}
+                metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                               compress_ratio=cstats["ratio"])
+            else:
+                state, metrics = step_fn(state, batch)
+            state_box["state"] = state
+            outs.append(("out", (idx, {k: float(v) for k, v in metrics.items()})))
+        return outs
+
+    return Vertex("train_step", TRAIN, fn)
+
+
+def run(cfg, *, steps, batch, seq, ckpt_dir, ckpt_every=10, fail_at=None,
+        compress=False, log_every=10, seed=0):
+    pipeline = TokenPipeline(
+        cfg.vocab_size, batch, seq, seed=seed,
+        frames_dim=cfg.d_model if cfg.embed_mode == "frames" else None)
+    state_box = {"state": init_train_state(cfg, jax.random.PRNGKey(seed))}
+    ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    losses = {}
+
+    df = Dataflow("training")
+    ingress = df.add(Ingress("data", TRAIN))
+    stepv = df.add(build_step_vertex(cfg, state_box, {}, compress=compress,
+                                     fail_at=fail_at))
+
+    def on_metrics(payload):
+        idx, metrics = payload
+        losses[idx] = metrics["loss"]
+        if idx % log_every == 0:
+            print(f"  step {idx:4d} loss={metrics['loss']:.4f} "
+                  + (f"ratio={metrics.get('compress_ratio', 0):.1f}x"
+                     if compress else ""))
+        if ckpt and idx and idx % ckpt_every == 0:
+            done = int(state_box["state"]["step"])
+            ckpt.save(state_box["state"], epoch=0, step=done)
+
+    egress = df.add(Egress("metrics", TRAIN, on_metrics))
+    ingress.connect("out", stepv)
+    stepv.connect("out", egress)
+
+    i = 0
+    while i < steps:
+        try:
+            ingress.push([(i, pipeline.batch_view(i).value())])
+            df.run_until_quiescent()
+            i += 1
+        except SimulatedFailure as e:
+            print(f"  !! {e} — restoring snapshot + replaying")
+            if ckpt and ckpt.versions():
+                state_box["state"] = ckpt.restore(state_box["state"])
+                i = int(state_box["state"]["step"])
+            else:
+                state_box["state"] = init_train_state(
+                    cfg, jax.random.PRNGKey(seed))
+                i = 0
+    df.deliver_events()
+    return losses, state_box["state"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (TPU pods), not the reduced one")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = all_configs()[args.arch]
+    if not args.full_size:
+        cfg = reduced(cfg)
+    print(f"training {cfg.name}: {cfg.param_count():,} params, "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+    t0 = time.time()
+    losses, state = run(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                        fail_at=args.fail_at, compress=args.compress,
+                        seed=args.seed)
+    first = np.mean([losses[i] for i in sorted(losses)[:5]])
+    last = np.mean([losses[i] for i in sorted(losses)[-5:]])
+    print(f"loss {first:.4f} -> {last:.4f} in {time.time()-t0:.1f}s "
+          f"({len(losses)} steps)")
+    assert last < first, "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,305 @@
+"""One composable decoder covering all ten assigned architectures.
+
+The block *pattern* (repeating unit of mixer kinds) is scanned over with
+stacked params (`num_units` leading dim) so HLO size is ~O(len(pattern)),
+not O(num_layers); a non-scanned *tail* covers ``num_layers % len(pattern)``.
+
+Forward paths:
+  * ``forward``       — training / prefill body: (B,S) tokens or (B,S,D)
+                        frames -> (B,S,D) hidden (+ MoE aux loss).
+  * ``prefill``       — forward + returns decode caches filled at seq end.
+  * ``decode_step``   — one token with per-layer caches (KV / recurrent).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_KINDS, ModelConfig
+from repro.launch.sharding import constrain
+from repro.nn import attention as attn
+from repro.nn import moe as moe_mod
+from repro.nn import recurrent as rec
+from repro.nn.layers import (Init, apply_norm, compute_dtype, dense, init_norm,
+                             mlp, init_mlp, sinusoidal_positions_dynamic)
+
+
+# ----------------------------------------------------------------- block init
+def _init_block(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_norm(ks[0], cfg.d_model, cfg.norm)}
+    if kind in ATTN_KINDS:
+        p["mixer"] = attn.init_attn(ks[1], cfg)
+    elif kind == "rglru":
+        p["mixer"] = rec.init_rglru_block(ks[1], cfg)
+    elif kind == "mlstm":
+        p["mixer"] = rec.init_mlstm_block(ks[1], cfg)
+    elif kind == "slstm":
+        p["mixer"] = rec.init_slstm_block(ks[1], cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.sandwich_norm:
+        p["post1"] = init_norm(ks[2], cfg.d_model, cfg.norm)
+    if _has_ffn(cfg, kind):
+        p["norm2"] = init_norm(ks[2], cfg.d_model, cfg.norm)
+        if cfg.ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[3], cfg)
+        else:
+            p["ffn"] = init_mlp(ks[3], cfg)
+        if cfg.sandwich_norm:
+            p["post2"] = init_norm(ks[1], cfg.d_model, cfg.norm)
+    return p
+
+
+def _has_ffn(cfg: ModelConfig, kind: str) -> bool:
+    return cfg.ffn != "none" and (kind in ATTN_KINDS or kind == "rglru")
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4 + len(cfg.tail_pattern))
+    params = {}
+    if cfg.embed_mode == "tokens":
+        params["embed"] = Init(ks[0], (cfg.vocab_size, cfg.d_model), cfg.param_dtype)
+    params["lm_head"] = Init(ks[1], (cfg.d_model, cfg.vocab_size), cfg.param_dtype)
+    params["final_norm"] = init_norm(ks[2], cfg.d_model, cfg.norm)
+
+    def unit_init(k):
+        kk = jax.random.split(k, len(cfg.pattern))
+        return {f"b{i}": _init_block(kk[i], cfg, kind)
+                for i, kind in enumerate(cfg.pattern)}
+
+    unit_keys = jax.random.split(ks[3], cfg.num_units)
+    params["units"] = jax.vmap(unit_init)(unit_keys)  # stacked on axis 0
+    for i, kind in enumerate(cfg.tail_pattern):
+        params[f"tail{i}"] = _init_block(ks[4 + i], cfg, kind)
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStructs of the params without allocating (for dry-run)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# -------------------------------------------------------------- block forward
+def _apply_block(p, x, cfg: ModelConfig, kind: str, positions):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in ATTN_KINDS:
+        h = attn.attn_forward(p["mixer"], h, cfg, kind, positions)
+    elif kind == "rglru":
+        h = rec.rglru_forward(p["mixer"], h, cfg)
+    elif kind == "mlstm":
+        h = rec.mlstm_forward(p["mixer"], h, cfg)
+    elif kind == "slstm":
+        h = rec.slstm_forward(p["mixer"], h, cfg)
+    if cfg.sandwich_norm:
+        h = apply_norm(p["post1"], h, cfg.norm)
+    x = x + h
+    x = constrain(x, ("batch", "seq", "dmodel"))
+    aux = jnp.zeros((), jnp.float32)
+    if _has_ffn(cfg, kind):
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        if cfg.ffn == "moe":
+            h, aux = moe_mod.moe_forward(p["ffn"], h, cfg)
+        else:
+            h = mlp(p["ffn"], h, cfg)
+        if cfg.sandwich_norm:
+            h = apply_norm(p["post2"], h, cfg.norm)
+        x = x + h
+        x = constrain(x, ("batch", "seq", "dmodel"))
+    return x, aux
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def embed_inputs(params, cfg: ModelConfig, inputs, positions):
+    dt = compute_dtype(cfg.dtype)
+    if cfg.embed_mode == "tokens":
+        x = jnp.take(params["embed"], inputs, axis=0).astype(dt)
+    else:
+        x = inputs.astype(dt)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    if cfg.pos_emb == "sinusoidal":
+        B, S = positions.shape
+        pe = sinusoidal_positions_dynamic(positions.reshape(-1), cfg.d_model)
+        x = x + pe.reshape(B, S, cfg.d_model).astype(cfg.dtype)
+    return constrain(x, ("batch", "seq", "dmodel"))
+
+
+def forward(params, cfg: ModelConfig, inputs, positions):
+    """Body -> (hidden (B,S,D), moe_aux_mean)."""
+    x = embed_inputs(params, cfg, inputs, positions)
+
+    def unit_step(carry, unit_params):
+        x, aux = carry
+        for i, kind in enumerate(cfg.pattern):
+            x, a = _apply_block(unit_params[f"b{i}"], x, cfg, kind, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    step = _remat_wrap(unit_step, cfg)
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                               params["units"])
+    for i, kind in enumerate(cfg.tail_pattern):
+        x, a = _apply_block(params[f"tail{i}"], x, cfg, kind, positions)
+        aux = aux + a
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    n_ffn = sum(_has_ffn(cfg, k) for k in
+                list(cfg.pattern) * cfg.num_units + list(cfg.tail_pattern))
+    return x, aux / max(n_ffn, 1)
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    logits = dense(hidden, params["lm_head"]).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ------------------------------------------------------------------- caches
+def _block_cache(cfg: ModelConfig, kind: str, batch, capacity):
+    if kind in ATTN_KINDS:
+        return attn.init_kv_cache(cfg, batch, capacity)
+    if kind == "rglru":
+        return rec.init_rglru_cache(cfg, batch)
+    if kind == "mlstm":
+        return rec.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return rec.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch, capacity):
+    """Stacked caches: units caches have leading num_units dim."""
+    def unit_cache(_):
+        return {f"b{i}": _block_cache(cfg, kind, batch, capacity)
+                for i, kind in enumerate(cfg.pattern)}
+    cache = {"units": jax.vmap(unit_cache)(jnp.arange(cfg.num_units))}
+    for i, kind in enumerate(cfg.tail_pattern):
+        cache[f"tail{i}"] = _block_cache(cfg, kind, batch, capacity)
+    return cache
+
+
+def cache_shapes(cfg: ModelConfig, batch, capacity):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, capacity))
+
+
+def _prefill_block(p, x, cfg: ModelConfig, kind: str, positions, capacity):
+    """Like _apply_block but also returns the block's decode cache."""
+    B, S = x.shape[:2]
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in ATTN_KINDS:
+        h, kv = attn.attn_forward(p["mixer"], h, cfg, kind, positions,
+                                  return_kv=True)
+        pad = capacity - S
+        cache = {
+            "k": jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0))),
+            "v": jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0))),
+        }
+    elif kind == "rglru":
+        h, cache = rec.rglru_forward(p["mixer"], h, cfg, return_state=True)
+    elif kind == "mlstm":
+        h, cache = rec.mlstm_forward(p["mixer"], h, cfg, return_state=True)
+    elif kind == "slstm":
+        h, cache = rec.slstm_forward(p["mixer"], h, cfg, return_state=True)
+    if cfg.sandwich_norm:
+        h = apply_norm(p["post1"], h, cfg.norm)
+    x = x + h
+    x = constrain(x, ("batch", "seq", "dmodel"))
+    if _has_ffn(cfg, kind):
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        if cfg.ffn == "moe":
+            h, _ = moe_mod.moe_forward(p["ffn"], h, cfg)
+        else:
+            h = mlp(p["ffn"], h, cfg)
+        if cfg.sandwich_norm:
+            h = apply_norm(p["post2"], h, cfg.norm)
+        x = x + h
+        x = constrain(x, ("batch", "seq", "dmodel"))
+    return x, cache
+
+
+def prefill(params, cfg: ModelConfig, inputs, capacity=None):
+    """Run the full prompt, return (last-position logits, decode cache)."""
+    B, S = inputs.shape[:2]
+    capacity = capacity or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = embed_inputs(params, cfg, inputs, positions)
+
+    def unit_step(x, unit_params):
+        caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, caches[f"b{i}"] = _prefill_block(
+                unit_params[f"b{i}"], x, cfg, kind, positions, capacity)
+        return x, caches
+
+    x, unit_caches = jax.lax.scan(unit_step, x, params["units"])
+    cache = {"units": unit_caches}
+    for i, kind in enumerate(cfg.tail_pattern):
+        x, cache[f"tail{i}"] = _prefill_block(
+            params[f"tail{i}"], x, cfg, kind, positions, capacity)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    last = x[:, -1:]
+    return logits_fn(params, cfg, last), cache
+
+
+def _decode_block(p, c, x, cfg: ModelConfig, kind: str, pos):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in ATTN_KINDS:
+        h, c = attn.attn_decode(p["mixer"], h, cfg, kind, c, pos)
+    elif kind == "rglru":
+        h, c = rec.rglru_decode(p["mixer"], h, cfg, c)
+    elif kind == "mlstm":
+        h, c = rec.mlstm_decode(p["mixer"], h, cfg, c)
+    elif kind == "slstm":
+        h, c = rec.slstm_decode(p["mixer"], h, cfg, c)
+    if cfg.sandwich_norm:
+        h = apply_norm(p["post1"], h, cfg.norm)
+    x = x + h
+    if _has_ffn(cfg, kind):
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        if cfg.ffn == "moe":
+            h, _ = moe_mod.moe_forward(p["ffn"], h, cfg)
+        else:
+            h = mlp(p["ffn"], h, cfg)
+        if cfg.sandwich_norm:
+            h = apply_norm(p["post2"], h, cfg.norm)
+        x = x + h
+    return x, c
+
+
+def decode_step(params, cfg: ModelConfig, cache, inputs, pos):
+    """One decode step. inputs: (B,1) tokens or (B,1,D) frames; pos scalar.
+    Returns (logits (B,1,V), new_cache)."""
+    B = inputs.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x = embed_inputs(params, cfg, inputs, positions)
+
+    def unit_step(x, scanned):
+        unit_params, unit_cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, new_cache[f"b{i}"] = _decode_block(
+                unit_params[f"b{i}"], unit_cache[f"b{i}"], x, cfg, kind, pos)
+        return x, new_cache
+
+    x, new_unit_caches = jax.lax.scan(
+        unit_step, x, (params["units"], cache["units"]))
+    new_cache = {"units": new_unit_caches}
+    for i, kind in enumerate(cfg.tail_pattern):
+        x, new_cache[f"tail{i}"] = _decode_block(
+            params[f"tail{i}"], cache[f"tail{i}"], x, cfg, kind, pos)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return logits_fn(params, cfg, x), new_cache

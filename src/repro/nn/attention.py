@@ -1,0 +1,204 @@
+"""Attention: GQA with RoPE / biases / qk-norm / sliding-window / local-block.
+
+Three execution paths, all pure JAX (the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU fast path; this module is the
+portable path used for CPU smoke tests and for the dry-run lowering):
+
+* ``_causal_blocked``  — full causal attention, Python-unrolled over q blocks,
+  ``lax.scan`` over kv chunks with online softmax. Never materializes S×S;
+  computes only the lower-triangular chunk pairs (causal-optimal FLOPs).
+* ``_windowed_blocked`` — local / sliding-window attention: each q block of
+  width W attends to its own and the previous block (2W window, masked down
+  to W). FLOPs are O(S·W).
+* ``_decode``          — single-token query against a KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Init, accum_dtype, compute_dtype, dense, rms_norm
+from repro.nn.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def window_for(kind, cfg):
+    if kind == "local":
+        return cfg.local_window
+    if kind == "swa":
+        return cfg.swa_window
+    return None  # attn / global: full causal
+
+
+def init_attn(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": Init(ks[0], (d, cfg.q_dim), cfg.param_dtype),
+        "wk": Init(ks[1], (d, cfg.kv_dim), cfg.param_dtype),
+        "wv": Init(ks[2], (d, cfg.kv_dim), cfg.param_dtype),
+        "wo": Init(ks[3], (cfg.q_dim, d), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), cfg.param_dtype)
+    if cfg.qk_norm:
+        hd = cfg.resolved_head_dim
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(x, p["wq"], p.get("bq")).reshape(B, S, cfg.n_heads, hd)
+    k = dense(x, p["wk"], p.get("bk")).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(x, p["wv"], p.get("bv")).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.rope:
+        q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+    # (B, H, S, hd)
+    return q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2)
+
+
+def _gqa_shape(q, n_kv):
+    """(B, Hq, S, hd) -> (B, Hkv, G, S, hd)."""
+    B, Hq, S, hd = q.shape
+    return q.reshape(B, n_kv, Hq // n_kv, S, hd)
+
+
+def _online_merge(m, l, acc, scores, v_chunk):
+    """One online-softmax update.
+    scores: (B,Hkv,G,Sq,C) f32; v_chunk: (B,Hkv,C,hd)."""
+    m_new = jnp.maximum(m, scores.max(axis=-1))
+    p = jnp.exp(scores - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bhgqc,bhcd->bhgqd", p.astype(v_chunk.dtype), v_chunk,
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _causal_blocked(q, k, v, cfg):
+    """Full causal. q: (B,Hkv,G,S,hd); k,v: (B,Hkv,S,hd)."""
+    B, Hkv, G, S, hd = q.shape
+    C = min(cfg.kv_chunk, S)
+    nq = S // C
+    scale = hd ** -0.5
+    outs = []
+    for i in range(nq):  # static unroll over q blocks: causal-optimal FLOPs
+        qi = q[:, :, :, i * C:(i + 1) * C]                      # (B,Hkv,G,C,hd)
+        kv_len = (i + 1) * C
+        kb = k[:, :, :kv_len].reshape(B, Hkv, i + 1, C, hd)
+        vb = v[:, :, :kv_len].reshape(B, Hkv, i + 1, C, hd)
+        m0 = jnp.full((B, Hkv, G, C), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, C), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, C, hd), jnp.float32)
+        pos_q = i * C + jnp.arange(C)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kj, vj, j = inp
+            scores = jnp.einsum("bhgqd,bhcd->bhgqc", qi, kj,
+                                preferred_element_type=jnp.float32) * scale
+            pos_k = j * C + jnp.arange(C)
+            mask = pos_k[None, :] <= pos_q[:, None]
+            scores = jnp.where(mask, scores, NEG_INF)
+            return _online_merge(m, l, acc, scores, vj), None
+
+        js = jnp.arange(i + 1)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (kb.swapaxes(0, 2).swapaxes(1, 2),
+                                 vb.swapaxes(0, 2).swapaxes(1, 2), js))
+        outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+    return jnp.concatenate(outs, axis=3).astype(q.dtype)   # (B,Hkv,G,S,hd)
+
+
+def _windowed_blocked(q, k, v, window, cfg):
+    """Local/SWA attention: q block i attends kv blocks {i-1, i}."""
+    B, Hkv, G, S, hd = q.shape
+    W = min(window, S)
+    if S % W != 0:   # fall back (smoke-test sizes)
+        return _causal_blocked(q, k, v, cfg)
+    nb = S // W
+    scale = hd ** -0.5
+    qb = q.reshape(B, Hkv, G, nb, W, hd)
+    kb = k.reshape(B, Hkv, nb, W, hd)
+    vb = v.reshape(B, Hkv, nb, W, hd)
+    zeros = jnp.zeros_like(kb[:, :, :1])
+    k2 = jnp.concatenate([jnp.concatenate([zeros, kb[:, :, :-1]], axis=2), kb], axis=3)
+    v2 = jnp.concatenate([jnp.concatenate([zeros, vb[:, :, :-1]], axis=2), vb], axis=3)
+    scores = jnp.einsum("bhgnqd,bhnkd->bhgnqk", qb, k2,
+                        preferred_element_type=jnp.float32) * scale
+    wq = jnp.arange(W)[:, None]          # in-block q offset
+    wk = jnp.arange(2 * W)[None, :] - W  # kv offset relative to block start
+    blk = jnp.arange(nb)[:, None, None]
+    pos_q = blk * W + wq[None]
+    pos_k = blk * W + wk[None]
+    mask = (pos_k <= pos_q) & (pos_q - pos_k < W) & (pos_k >= 0)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgnqk,bhnkd->bhgnqd", probs.astype(v2.dtype), v2,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hkv, G, S, hd).astype(q.dtype)
+
+
+def attn_forward(p, x, cfg, kind, positions, return_kv=False):
+    """Training / prefill path. x: (B,S,D); positions: (B,S) int32."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    qg = _gqa_shape(q, cfg.n_kv_heads)
+    window = window_for(kind, cfg)
+    if window is not None and window < x.shape[1]:
+        out = _windowed_blocked(qg, k, v, window, cfg)
+    else:
+        out = _causal_blocked(qg, k, v, cfg)
+    B, S = x.shape[:2]
+    out = out.reshape(B, cfg.n_heads, S, -1).swapaxes(1, 2).reshape(B, S, cfg.q_dim)
+    y = dense(out, p["wo"], accum=accum_dtype(cfg))
+    if return_kv:
+        cdt = compute_dtype(jnp.bfloat16)
+        return y, {"k": k.astype(cdt), "v": v.astype(cdt)}
+    return y
+
+
+def init_kv_cache(cfg, batch, capacity, dtype=None):
+    dtype = dtype or compute_dtype(jnp.bfloat16)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, capacity, hd), dtype),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, capacity, hd), dtype),
+    }
+
+
+def attn_decode(p, x, cfg, kind, cache, pos):
+    """Single-token decode. x: (B,1,D); cache k/v: (B,Hkv,S,hd); pos: scalar."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)       # (B,H,1,hd)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, 0, pos, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, 0, pos, 0))
+    qg = _gqa_shape(q, cfg.n_kv_heads)                 # (B,Hkv,G,1,hd)
+    scores = jnp.einsum("bhgqd,bhcd->bhgqc", qg, ck,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    idx = jnp.arange(ck.shape[2])
+    mask = idx <= pos
+    window = window_for(kind, cfg)
+    if window is not None:
+        mask = mask & (pos - idx < window)
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqc,bhcd->bhgqd", probs.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, cfg.n_heads, 1, hd).swapaxes(1, 2).reshape(B, 1, cfg.q_dim)
+    y = dense(out.astype(x.dtype), p["wo"], accum=accum_dtype(cfg))
+    return y, {"k": ck, "v": cv}

@@ -1,0 +1,189 @@
+"""Core layers: norms, MLPs, embeddings. Pure-JAX, params as dicts.
+
+Numerics policy: params live in ``param_dtype`` (f32 by default); matmuls cast
+inputs to the activation dtype (bf16) and accumulate in f32 via
+``preferred_element_type``; norms/softmax/gating run in f32.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Init = jax.nn.initializers.normal(stddev=0.02)
+
+
+@functools.cache
+def _cpu_backend() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def compute_dtype(requested=jnp.bfloat16):
+    """bf16 on TPU (and for dry-run lowering, REPRO_FORCE_BF16=1); f32 when
+    actually *executing* on the CPU backend (XLA:CPU has no bf16 DotThunk)."""
+    if os.environ.get("REPRO_FORCE_BF16") == "1":
+        return jnp.dtype(requested)
+    if _cpu_backend():
+        return jnp.dtype(jnp.float32)
+    return jnp.dtype(requested)
+
+
+def accum_dtype(cfg) -> jnp.dtype:
+    """Cross-shard reduction dtype for row-parallel (TP) matmuls. bf16
+    halves the TP all-reduce bytes (§Perf knob); forced to f32 when actually
+    executing on CPU."""
+    req = getattr(cfg, "reduce_dtype", "float32")
+    if req == "bfloat16" and compute_dtype(jnp.bfloat16) == jnp.bfloat16:
+        return jnp.dtype(jnp.bfloat16)
+    return jnp.dtype(jnp.float32)
+
+
+import contextlib
+import contextvars
+
+_BWD_BF16 = contextvars.ContextVar("repro_bwd_bf16", default=False)
+
+
+@contextlib.contextmanager
+def bf16_backward_scope(enabled: bool = True):
+    """§Perf knob: while tracing under this scope, dense() uses a custom VJP
+    whose activation cotangents are bf16 (weight grads stay f32-accumulated).
+    Halves backward activation traffic AND the TP cotangent all-reduces."""
+    tok = _BWD_BF16.set(bool(enabled) and
+                        compute_dtype(jnp.bfloat16) == jnp.bfloat16)
+    try:
+        yield
+    finally:
+        _BWD_BF16.reset(tok)
+
+
+def _dot2d(a, b, preferred):
+    return jax.lax.dot_general(a, b, (((a.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=preferred)
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_bf16bwd(dtype, accum):
+    """custom-VJP dense with bf16 activation cotangents; statics are closed
+    over (nondiff_argnums don't survive jax.checkpoint)."""
+    dtype = jnp.dtype(dtype)
+    preferred = jnp.dtype(accum) if accum is not None else jnp.float32
+
+    def fwd_only(x, w):
+        xc, wc = x.astype(dtype), w.astype(dtype)
+        return _dot2d(xc, wc, preferred).astype(dtype)
+
+    def fwd(x, w):
+        xc, wc = x.astype(dtype), w.astype(dtype)
+        y = _dot2d(xc, wc, preferred).astype(dtype)
+        # zero-size dtype carriers (residuals must be JAX types)
+        return y, (xc, wc, jnp.zeros((0,), x.dtype), jnp.zeros((0,), w.dtype))
+
+    def bwd(res, g):
+        xc, wc, x_tag, w_tag = res
+        x_dt, w_dt = x_tag.dtype, w_tag.dtype
+        gc = g.astype(dtype)
+        # dx in bf16 (cotangents tolerate it; TP all-reduce halves)
+        dx = jax.lax.dot_general(gc, wc, (((gc.ndim - 1,), (1,)), ((), ())),
+                                 preferred_element_type=dtype)
+        # dw accumulated in f32 (optimizer-quality gradients)
+        lead = tuple(range(gc.ndim - 1))
+        dw = jax.lax.dot_general(xc, gc, ((lead, lead), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return dx.astype(x_dt), dw.astype(w_dt)
+
+    f = jax.custom_vjp(fwd_only)
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def dense(x, w, b=None, *, dtype=jnp.bfloat16, accum=None):
+    """x @ w with bf16 inputs, f32 accumulation (``accum`` overrides the
+    partial-sum dtype for TP row-parallel projections)."""
+    dtype = compute_dtype(dtype)
+    if _BWD_BF16.get():
+        y = _dense_bf16bwd(str(dtype), str(accum) if accum else None)(x, w)
+    else:
+        y = _dot2d(x.astype(dtype), w.astype(dtype),
+                   accum or jnp.float32).astype(dtype)
+    if b is not None:
+        y = (y.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+    return y
+
+
+def rms_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(key, d, kind):
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(p, x, kind):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_mlp(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn in ("swiglu", "geglu"):
+        return {
+            "w1": Init(ks[0], (d, ff), cfg.param_dtype),
+            "w3": Init(ks[1], (d, ff), cfg.param_dtype),
+            "w2": Init(ks[2], (ff, d), cfg.param_dtype),
+        }
+    p = {
+        "w1": Init(ks[0], (d, ff), cfg.param_dtype),
+        "w2": Init(ks[1], (ff, d), cfg.param_dtype),
+    }
+    if cfg.mlp_bias:
+        p["b1"] = jnp.zeros((ff,), cfg.param_dtype)
+        p["b2"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def mlp(p, x, cfg):
+    act = jax.nn.silu if cfg.ffn == "swiglu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    if cfg.ffn in ("swiglu", "geglu"):
+        h = act(dense(x, p["w1"])) * dense(x, p["w3"])
+        return dense(h, p["w2"], accum=accum_dtype(cfg))
+    h = act(dense(x, p["w1"], p.get("b1")))
+    return dense(h, p["w2"], p.get("b2"), accum=accum_dtype(cfg))
+
+
+def sinusoidal_positions(seq_len, d_model, offset=0):
+    pos = np.arange(seq_len)[:, None] + offset
+    dim = np.arange(0, d_model, 2)[None, :]
+    angle = pos / np.power(10_000.0, dim / d_model)
+    out = np.zeros((seq_len, d_model), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return jnp.asarray(out)
+
+
+def sinusoidal_positions_dynamic(positions, d_model):
+    """Traced-position variant for decode. positions: (S,) int."""
+    pos = positions.astype(jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d_model)
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    return jnp.stack([sin, cos], axis=-1).reshape(positions.shape[0], d_model)

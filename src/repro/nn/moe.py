@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Two implementations, selectable via ``cfg.moe_impl``:
+
+* ``dense``    — every expert computes every token, outputs combined with the
+  (mostly-zero) routing weights. Simple, exactly differentiable, no token
+  dropping — but inflates FLOPs by E/top_k. This is the *baseline* the perf
+  log starts from.
+* ``dropping`` — capacity-bounded gather/scatter dispatch (Switch-style):
+  each expert processes at most C = ceil(T/E · top_k · capacity_factor)
+  tokens, selected by routing weight. FLOPs ∝ top_k·capacity_factor instead
+  of E. The beyond-baseline §Perf path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Init, dense
+
+
+def init_moe(key, cfg):
+    d = cfg.d_model
+    e = cfg.n_experts
+    ffe = cfg.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": Init(ks[0], (d, e), jnp.float32),
+        "w1": Init(ks[1], (e, d, ffe), cfg.param_dtype),
+        "w3": Init(ks[2], (e, d, ffe), cfg.param_dtype),
+        "w2": Init(ks[3], (e, ffe, d), cfg.param_dtype),
+    }
+
+
+def _routing(p, x, cfg):
+    """x: (T,D) -> (weights (T,E) with zeros off top-k, aux losses)."""
+    logits = x.astype(jnp.float32) @ p["router"]            # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, cfg.top_k)        # (T,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(top_idx, cfg.n_experts, dtype=jnp.float32)  # (T,K,E)
+    combine = (onehot * top_w[..., None]).sum(axis=1)       # (T,E)
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    f = onehot.sum(axis=1).mean(axis=0)                     # fraction routed
+    pbar = probs.mean(axis=0)
+    aux = cfg.n_experts * jnp.sum(f * pbar)
+    return combine, top_idx, top_w, aux
+
+
+def _expert_ffn(p, x, accum=jnp.float32):
+    """Batched-over-experts gated FFN. x: (E,C,D) -> (E,C,D)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, p["w1"].astype(x.dtype),
+                               preferred_element_type=jnp.float32))
+    h3 = jnp.einsum("ecd,edf->ecf", x, p["w3"].astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    h = (h * h3).astype(x.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype),
+                      preferred_element_type=accum).astype(x.dtype)
+
+
+def moe_dense(p, x, cfg):
+    """x: (B,S,D). Every expert computes every token."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    combine, _, _, aux = _routing(p, xt, cfg)
+    from repro.nn.layers import accum_dtype
+    xe = jnp.broadcast_to(xt[None], (cfg.n_experts,) + xt.shape)  # (E,T,D)
+    ye = _expert_ffn(p, xe, accum=accum_dtype(cfg))               # (E,T,D)
+    y = jnp.einsum("etd,te->td", ye.astype(jnp.float32), combine)
+    return y.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_dropping(p, x, cfg):
+    """Capacity-bounded dispatch: gather top-C tokens per expert.
+
+    With ``cfg.moe_groups > 1`` the token axis is split into G groups that
+    align with the DP shards (the group axis carries the 'batch' sharding
+    constraint), so the gather/scatter never crosses data shards — expert
+    parallelism without the all-shard token shuffle (§Perf: this removed the
+    dominant (E, C_global, d) all-reduces on mixtral)."""
+    from repro.launch.sharding import constrain
+    from repro.nn.layers import accum_dtype
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    combine, top_idx, top_w, aux = _routing(p, xt, cfg)     # combine: (T,E)
+    E = cfg.n_experts
+    G = cfg.moe_groups if cfg.moe_groups > 1 and T % cfg.moe_groups == 0 else 1
+    Tl = T // G
+    C = int(math.ceil(Tl / E * cfg.top_k * cfg.capacity_factor))
+    C = min(C, Tl)
+    xg_t = constrain(xt.reshape(G, Tl, D), ("batch", None, None))
+    gate = constrain(combine.reshape(G, Tl, E), ("batch", None, None))
+
+    def dispatch(xt_l, gate_l):
+        # per-group: select, per expert, the C tokens with largest weight
+        sel_w, sel_idx = jax.lax.top_k(gate_l.T, C)          # (E,C)
+        xg = jnp.take(xt_l, sel_idx.reshape(-1), axis=0).reshape(E, C, D)
+        yg = _expert_ffn(p, xg, accum=accum_dtype(cfg))      # (E,C,D)
+        yg = yg.astype(jnp.float32) * sel_w[..., None]
+        y = jnp.zeros((Tl, D), jnp.float32)
+        return y.at[sel_idx.reshape(-1)].add(yg.reshape(E * C, D))
+
+    if G == 1:
+        y = dispatch(xt, combine)
+    else:
+        y = jax.vmap(dispatch)(xg_t, gate)
+        y = constrain(y, ("batch", None, None))
+    return y.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_forward(p, x, cfg):
+    if cfg.moe_impl == "dropping":
+        return moe_dropping(p, x, cfg)
+    return moe_dense(p, x, cfg)

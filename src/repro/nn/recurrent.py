@@ -1,0 +1,422 @@
+"""Recurrent mixers: RG-LRU (Griffin/RecurrentGemma), mLSTM and sLSTM (xLSTM).
+
+RG-LRU is a *diagonal* linear recurrence -> parallelized with
+``jax.lax.associative_scan`` (the Pallas ``lru_scan`` kernel is the TPU fast
+path). mLSTM (matrix memory) and sLSTM (scalar memory with recurrent gate
+connections) use stabilized exponential gating and run as ``lax.scan`` over
+time; every block also exposes a single-step decode update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Init, dense
+
+C_RGLRU = 8.0
+
+
+# ---------------------------------------------------------------- causal conv
+def init_conv(key, width, channels, dtype):
+    return {"w": Init(key, (width, channels), dtype)}
+
+
+def causal_conv(p, x):
+    """Depthwise causal conv. x: (B,S,C); kernel (W,C)."""
+    w = p["w"].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    out = jnp.zeros_like(xf)
+    for k in range(w.shape[0]):
+        shifted = jnp.pad(xf, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[k]
+    return out.astype(x.dtype)
+
+
+def causal_conv_step(p, x_t, state):
+    """x_t: (B,C); state: (B, W-1, C) of prior inputs (most recent last)."""
+    w = p["w"].astype(jnp.float32)
+    width = w.shape[0]
+    hist = jnp.concatenate([state, x_t[:, None].astype(jnp.float32)], axis=1)
+    taps = hist[:, -width:]                                  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", taps, w)
+    return out.astype(x_t.dtype), hist[:, 1:]
+
+
+# -------------------------------------------------------------------- RG-LRU
+def init_rglru_block(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 8)
+    return {
+        "in_x": Init(ks[0], (d, w), cfg.param_dtype),
+        "in_gate": Init(ks[1], (d, w), cfg.param_dtype),
+        "conv": init_conv(ks[2], cfg.conv_width, w, cfg.param_dtype),
+        # per-channel gate affines + recurrence parameter Lambda
+        "w_ig": Init(ks[3], (w,), jnp.float32),
+        "b_ig": jnp.zeros((w,), jnp.float32),
+        "w_rg": Init(ks[4], (w,), jnp.float32),
+        "b_rg": jnp.zeros((w,), jnp.float32),
+        "a_param": jnp.full((w,), 2.0, jnp.float32),  # softplus^-1-ish init
+        "out": Init(ks[5], (w, d), cfg.param_dtype),
+    }
+
+
+def _rglru_coeffs(p, u):
+    """u: (B,S,W) f32 conv output -> per-step (a, b) of the recurrence."""
+    r = jax.nn.sigmoid(u * p["w_rg"] + p["b_rg"])
+    i = jax.nn.sigmoid(u * p["w_ig"] + p["b_ig"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["a_param"]) * r
+    a = jnp.exp(log_a)
+    # 1 - a^2 computed stably
+    b = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12)) * (i * u)
+    return a, b
+
+
+def rglru_forward(p, x, cfg, use_kernel=False, return_state=False):
+    """x: (B,S,D) -> (B,S,D). Diagonal linear recurrence via associative scan."""
+    conv_in = dense(x, p["in_x"]).astype(jnp.float32)
+    gate = jax.nn.gelu(dense(x, p["in_gate"]).astype(jnp.float32))
+    u = causal_conv({"w": p["conv"]["w"]}, conv_in)
+    a, b = _rglru_coeffs(p, u)
+    if use_kernel:
+        from repro.kernels import ops
+        h = ops.lru_scan(a, b)
+    else:
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h * gate).astype(x.dtype)
+    y = dense(out, p["out"])
+    if return_state:
+        cw = cfg.conv_width
+        state = {"h": h[:, -1], "conv": conv_in[:, x.shape[1] - (cw - 1):]}
+        return y, state
+    return y
+
+
+def init_rglru_cache(cfg, batch):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }
+
+
+def rglru_decode(p, x, cfg, cache):
+    """x: (B,1,D) -> (B,1,D) with carried state."""
+    xt = x[:, 0]
+    u = dense(xt, p["in_x"]).astype(jnp.float32)
+    gate = jax.nn.gelu(dense(xt, p["in_gate"]).astype(jnp.float32))
+    u, conv_state = causal_conv_step({"w": p["conv"]["w"]}, u, cache["conv"])
+    a, b = _rglru_coeffs(p, u.astype(jnp.float32))
+    h = a * cache["h"] + b
+    out = dense((h * gate).astype(x.dtype), p["out"])
+    return out[:, None], {"h": h, "conv": conv_state}
+
+
+# --------------------------------------------------------------------- mLSTM
+def init_mlstm_block(key, cfg):
+    d = cfg.d_model
+    dp = int(cfg.mlstm_proj_factor * d)
+    h = cfg.n_heads
+    hd = dp // h
+    ks = jax.random.split(key, 8)
+    return {
+        "up": Init(ks[0], (d, 2 * dp), cfg.param_dtype),
+        "conv": init_conv(ks[1], cfg.conv_width, dp, cfg.param_dtype),
+        "wq": Init(ks[2], (h, hd, hd), cfg.param_dtype),
+        "wk": Init(ks[3], (h, hd, hd), cfg.param_dtype),
+        "wv": Init(ks[4], (h, hd, hd), cfg.param_dtype),
+        "w_if": Init(ks[5], (dp, 2 * h), cfg.param_dtype),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]).astype(jnp.float32),
+        "head_norm": jnp.zeros((dp,), jnp.float32),
+        "down": Init(ks[6], (dp, d), cfg.param_dtype),
+    }
+
+
+def _mlstm_qkvif(p, xm, cfg):
+    B, S, dp = xm.shape
+    h = cfg.n_heads
+    hd = dp // h
+    conv_out = jax.nn.silu(causal_conv({"w": p["conv"]["w"]}, xm).astype(jnp.float32))
+    xh = conv_out.reshape(B, S, h, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"].astype(jnp.float32))
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"].astype(jnp.float32)) * hd ** -0.5
+    v = jnp.einsum("bshd,hde->bshe",
+                   xm.reshape(B, S, h, hd).astype(jnp.float32),
+                   p["wv"].astype(jnp.float32))
+    gates = xm.astype(jnp.float32) @ p["w_if"].astype(jnp.float32) + p["b_if"]
+    i_pre, f_pre = gates[..., :h], gates[..., h:]          # (B,S,H)
+    return q, k, v, i_pre, f_pre
+
+
+def _mlstm_cell_step(carry, inp):
+    C, n, m = carry                                        # (B,H,hd,hd),(B,H,hd),(B,H)
+    q, k, v, i_pre, f_pre = inp                            # (B,H,hd)...,(B,H)
+    log_f = -jax.nn.softplus(-f_pre)                       # log sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    C_new = f[..., None, None] * C + i[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n_new = f[..., None] * n + i[..., None] * k
+    h_num = jnp.einsum("bhde,bhe->bhd", C_new, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)),
+                        jnp.exp(-m_new))[..., None]
+    return (C_new, n_new, m_new), h_num / h_den
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, L):
+    """Chunkwise-parallel stabilized mLSTM (exact reformulation of the
+    sequential recurrence; TFLA-style TPU adaptation).
+
+    Within a chunk of L steps the outputs are computed with (L,L) decay-
+    masked attention matmuls (MXU work, no per-step (hd,hd) matrix-memory
+    materialization); only chunk-boundary (C~, n~, m) carries cross chunks.
+    Inputs: q,k,v (B,S,H,hd) f32 (k pre-scaled by hd^-0.5); i_pre,f_pre
+    (B,S,H). Returns (h (B,S,H,hd), final carry).
+    """
+    B, S, H, hd = q.shape
+    nch = S // L
+
+    def to_chunks(t, feat):
+        if feat:
+            return t.reshape(B, nch, L, H, hd).transpose(1, 0, 3, 2, 4)
+        return t.reshape(B, nch, L, H).transpose(1, 0, 3, 2)
+
+    qc, kc, vc = (to_chunks(t, True) for t in (q, k, v))     # (nch,B,H,L,hd)
+    ic = to_chunks(i_pre, False)                             # (nch,B,H,L)
+    lfc = to_chunks(-jax.nn.softplus(-f_pre), False)         # log sigmoid(f)
+
+    neg_inf = jnp.float32(-1e30)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    @jax.checkpoint
+    def chunk(carry, xs):
+        Cin, nin, m_in = carry              # (B,H,hd,hd),(B,H,hd),(B,H)
+        qL, kL, vL, iL, lfL = xs
+        b = jnp.cumsum(lfL, axis=-1)                         # (B,H,L)
+        D = b[..., :, None] - b[..., None, :] + iL[..., None, :]
+        D = jnp.where(tri, D, neg_inf)                       # (B,H,L,L)
+        m_intra = D.max(axis=-1)
+        m_t = jnp.maximum(m_intra, b + m_in[..., None])      # (B,H,L)
+        A = jnp.exp(D - m_t[..., None])
+        scores = jnp.einsum("bhtd,bhsd->bhts", qL, kL)
+        P = A * scores
+        inter = jnp.exp(b + m_in[..., None] - m_t)           # (B,H,L)
+        h_num = (jnp.einsum("bhts,bhsd->bhtd", P, vL)
+                 + inter[..., None] * jnp.einsum("bhvk,bhtk->bhtv", Cin, qL))
+        den_raw = P.sum(axis=-1) + inter * jnp.einsum("bhk,bhtk->bht", nin, qL)
+        h = h_num / jnp.maximum(jnp.abs(den_raw),
+                                jnp.exp(-m_t))[..., None]
+        # chunk-boundary carry (same stabilizer as the sequential form)
+        bL = b[..., -1]
+        m_out = m_t[..., -1]
+        wgt = jnp.exp(bL[..., None] - b + iL - m_out[..., None])  # (B,H,L)
+        decay_in = jnp.exp(bL + m_in - m_out)
+        C_out = (jnp.einsum("bhs,bhsv,bhsk->bhvk", wgt, vL, kL)
+                 + decay_in[..., None, None] * Cin)
+        n_out = (jnp.einsum("bhs,bhsk->bhk", wgt, kL)
+                 + decay_in[..., None] * nin)
+        return (C_out, n_out, m_out), h
+
+    c0 = (jnp.zeros((B, H, hd, hd), jnp.float32),
+          jnp.zeros((B, H, hd), jnp.float32),
+          jnp.zeros((B, H), jnp.float32))
+    carry, hs = jax.lax.scan(chunk, c0, (qc, kc, vc, ic, lfc))
+    # hs: (nch,B,H,L,hd) -> (B,S,H,hd)
+    hs = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    return hs, carry
+
+
+def mlstm_forward(p, x, cfg, return_state=False):
+    B, S, d = x.shape
+    dp = int(cfg.mlstm_proj_factor * d)
+    h = cfg.n_heads
+    hd = dp // h
+    z = dense(x, p["up"])
+    xm, og = z[..., :dp], z[..., dp:]
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(p, xm, cfg)
+    tc = cfg.mlstm_chunk
+    if cfg.mlstm_impl == "chunkwise" and tc and S % tc == 0:
+        hs, (C, n, m) = _mlstm_chunkwise(q, k, v, i_pre, f_pre, tc)
+        hs = hs.reshape(B, S, dp)
+        hs = _headwise_rms(hs, p["head_norm"], h)
+        out = hs * jax.nn.silu(og.astype(jnp.float32))
+        y = dense(out.astype(x.dtype), p["down"])
+        if return_state:
+            cw = cfg.conv_width
+            return y, {"C": C, "n": n, "m": m,
+                       "conv": xm.astype(jnp.float32)[:, S - (cw - 1):]}
+        return y
+    c0 = (jnp.zeros((B, h, hd, hd), jnp.float32),
+          jnp.zeros((B, h, hd), jnp.float32),
+          jnp.zeros((B, h), jnp.float32))
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (q, k, v))  # (S,B,H,hd)
+    xs = xs + (i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+    if tc and S % tc == 0 and S > tc:
+        # §Perf: chunked scan + remat. The plain scan saves per-STEP
+        # residuals (incl. the (B,H,hd,hd) matrix memory) for backward; the
+        # chunked form saves only per-chunk carries and recomputes inside
+        # each chunk, cutting saved-residual bytes by ~tc/1.
+        nch = S // tc
+        xs_c = tuple(t.reshape(nch, tc, *t.shape[1:]) for t in xs)
+
+        @jax.checkpoint
+        def chunk_body(carry, xc):
+            return jax.lax.scan(_mlstm_cell_step, carry, xc)
+
+        (C, n, m), hs = jax.lax.scan(chunk_body, c0, xs_c)
+        hs = hs.reshape(S, B, h, hd)
+    else:
+        (C, n, m), hs = jax.lax.scan(_mlstm_cell_step, c0, xs)  # (S,B,H,hd)
+    hs = hs.swapaxes(0, 1).reshape(B, S, dp)
+    hs = _headwise_rms(hs, p["head_norm"], h)
+    out = hs * jax.nn.silu(og.astype(jnp.float32))
+    y = dense(out.astype(x.dtype), p["down"])
+    if return_state:
+        cw = cfg.conv_width
+        state = {"C": C, "n": n, "m": m,
+                 "conv": xm.astype(jnp.float32)[:, S - (cw - 1):]}
+        return y, state
+    return y
+
+
+def _headwise_rms(x, scale, n_heads, eps=1e-6):
+    B, S, dp = x.shape
+    xh = x.reshape(B, S, n_heads, dp // n_heads)
+    var = jnp.mean(xh * xh, axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + eps)
+    return xh.reshape(B, S, dp) * (1.0 + scale)
+
+
+def init_mlstm_cache(cfg, batch):
+    dp = int(cfg.mlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    hd = dp // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dp), jnp.float32),
+    }
+
+
+def mlstm_decode(p, x, cfg, cache):
+    B, _, d = x.shape
+    dp = int(cfg.mlstm_proj_factor * d)
+    h = cfg.n_heads
+    hd = dp // h
+    z = dense(x[:, 0], p["up"])
+    xm, og = z[..., :dp], z[..., dp:]
+    conv_out, conv_state = causal_conv_step({"w": p["conv"]["w"]},
+                                            xm.astype(jnp.float32), cache["conv"])
+    xh = jax.nn.silu(conv_out.astype(jnp.float32)).reshape(B, h, hd)
+    q = jnp.einsum("bhd,hde->bhe", xh, p["wq"].astype(jnp.float32))
+    k = jnp.einsum("bhd,hde->bhe", xh, p["wk"].astype(jnp.float32)) * hd ** -0.5
+    v = jnp.einsum("bhd,hde->bhe",
+                   xm.reshape(B, h, hd).astype(jnp.float32),
+                   p["wv"].astype(jnp.float32))
+    gates = xm.astype(jnp.float32) @ p["w_if"].astype(jnp.float32) + p["b_if"]
+    i_pre, f_pre = gates[..., :h], gates[..., h:]
+    (C, n, m), hvec = _mlstm_cell_step(
+        (cache["C"], cache["n"], cache["m"]), (q, k, v, i_pre, f_pre))
+    hs = _headwise_rms(hvec.reshape(B, 1, dp), p["head_norm"], h)[:, 0]
+    out = hs * jax.nn.silu(og.astype(jnp.float32))
+    y = dense(out.astype(x.dtype), p["down"])
+    return y[:, None], {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+# --------------------------------------------------------------------- sLSTM
+def init_slstm_block(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    dff = int(cfg.slstm_proj_factor * d)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gates": Init(ks[0], (d, 4 * d), cfg.param_dtype),   # z,i,f,o preacts
+        "r_gates": Init(ks[1], (h, hd, 4 * hd), cfg.param_dtype),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "head_norm": jnp.zeros((d,), jnp.float32),
+        "up1": Init(ks[2], (d, dff), cfg.param_dtype),
+        "up2": Init(ks[3], (d, dff), cfg.param_dtype),
+        "down": Init(ks[4], (dff, d), cfg.param_dtype),
+    }
+
+
+def _slstm_step(p_r, carry, wx_t):
+    """carry: (c,n,m,h_prev) each (B,H,hd); wx_t: (B,H,4*hd)."""
+    c, n, m, h_prev = carry
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, p_r)          # (B,H,4hd)
+    pre = wx_t + rec
+    hd = c.shape[-1]
+    z_pre, i_pre, f_pre, o_pre = [pre[..., j * hd:(j + 1) * hd] for j in range(4)]
+    z = jnp.tanh(z_pre)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h), h
+
+
+def slstm_forward(p, x, cfg, return_state=False):
+    B, S, d = x.shape
+    h_heads = cfg.n_heads
+    hd = d // h_heads
+    wx = (x.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32) + p["b_gates"])
+    wx = wx.reshape(B, S, 4, h_heads, hd).transpose(1, 0, 3, 2, 4)  # (S,B,H,4,hd)
+    wx = wx.reshape(S, B, h_heads, 4 * hd)
+    zeros = jnp.zeros((B, h_heads, hd), jnp.float32)
+    carry0 = (zeros, zeros, jnp.zeros((B, h_heads, hd), jnp.float32), zeros)
+    r = p["r_gates"].astype(jnp.float32)
+    tc = cfg.mlstm_chunk
+    if tc and S % tc == 0 and S > tc:
+        # §Perf: chunk + remat the sequential sLSTM scan — backward saves
+        # only per-chunk (c,n,m,h) carries instead of per-step residuals.
+        @jax.checkpoint
+        def chunk_body(cr, wxc):
+            return jax.lax.scan(lambda c2, w: _slstm_step(r, c2, w), cr, wxc)
+        wx_c = wx.reshape(S // tc, tc, *wx.shape[1:])
+        (c, n, m, hstate), hs = jax.lax.scan(chunk_body, carry0, wx_c)
+        hs = hs.reshape(S, B, h_heads, hd)
+    else:
+        (c, n, m, hstate), hs = jax.lax.scan(
+            lambda cr, w: _slstm_step(r, cr, w), carry0, wx)
+    hs = hs.swapaxes(0, 1).reshape(B, S, d)
+    hs = _headwise_rms(hs, p["head_norm"], h_heads)
+    up = jax.nn.gelu(dense(hs.astype(x.dtype), p["up1"]).astype(jnp.float32))
+    gate = dense(hs.astype(x.dtype), p["up2"]).astype(jnp.float32)
+    y = dense((up * gate).astype(x.dtype), p["down"])
+    if return_state:
+        return y, {"c": c, "n": n, "m": m, "h": hstate}
+    return y
+
+
+def init_slstm_cache(cfg, batch):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def slstm_decode(p, x, cfg, cache):
+    B, _, d = x.shape
+    h_heads = cfg.n_heads
+    hd = d // h_heads
+    wx = (x[:, 0].astype(jnp.float32) @ p["w_gates"].astype(jnp.float32)
+          + p["b_gates"])
+    wx = wx.reshape(B, 4, h_heads, hd).transpose(0, 2, 1, 3).reshape(B, h_heads, 4 * hd)
+    r = p["r_gates"].astype(jnp.float32)
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    (c, n, m, hstate), hvec = _slstm_step(r, carry, wx)
+    hs = _headwise_rms(hvec.reshape(B, 1, d), p["head_norm"], h_heads)
+    up = jax.nn.gelu(dense(hs.astype(x.dtype), p["up1"]).astype(jnp.float32))
+    gate = dense(hs.astype(x.dtype), p["up2"]).astype(jnp.float32)
+    y = dense((up * gate).astype(x.dtype), p["down"])
+    return y, {"c": c, "n": n, "m": m, "h": hstate}

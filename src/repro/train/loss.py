@@ -1,0 +1,55 @@
+"""Chunked-vocab cross entropy.
+
+Never materializes the full (B·S, V) logits: tokens are processed in chunks
+(scan) and each chunk is rematerialized in the backward pass
+(``jax.checkpoint``), bounding peak memory at (chunk, V). This is the memory
+trick that keeps the 262k-vocab gemma3 train cell inside 16 GB/chip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.nn.layers import dense
+
+
+def chunked_cross_entropy(lm_head, hidden, labels, *, chunk=2048,
+                          softcap=0.0):
+    """hidden: (B,S,D); labels: (B,S) int32, -1 = ignore.
+    Returns (sum_loss, token_count)."""
+    B, S, D = hidden.shape
+    T = B * S
+    h = hidden.reshape(T, D)
+    y = labels.reshape(T)
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad), constant_values=-1)
+    n = (T + pad) // chunk
+    h = h.reshape(n, chunk, D)
+    y = y.reshape(n, chunk)
+
+    @jax.checkpoint
+    def chunk_loss(hc, yc):
+        logits = dense(hc, lm_head).astype(jnp.float32)     # (chunk, V)
+        logits = constrain(logits, ("batch", "vocab"))
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        yc_safe = jnp.maximum(yc, 0)
+        ll = jnp.take_along_axis(logits, yc_safe[:, None], axis=-1)[:, 0]
+        mask = (yc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - ll) * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        loss, cnt = carry
+        l, c = chunk_loss(*xs)
+        return (loss + l, cnt + c), None
+
+    (loss, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (h, y))
+    return loss, cnt

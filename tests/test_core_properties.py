@@ -1,0 +1,207 @@
+"""Property tests (hypothesis) for the paper's core invariants."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.clock import Event, EventLog, LamportClock
+from repro.core.replica import ReplicaManager
+from repro.core.snapshotter import (DataNode, IngestNode, Mutation,
+                                    SnapshotCoordinator)
+from repro.core.versioned import Version, VersionedArray, VersionedStore
+from repro.core.views import View
+
+
+# ------------------------------------------------------------- versioned
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 100)),
+                min_size=1, max_size=40, unique=True),
+       st.integers(0, 5), st.integers(0, 100))
+def test_snapshot_rule_matches_max_leq(writes, qe, qn):
+    """snapshot(v) returns d(i_v) with i_v = max{v' <= v} — paper §2.3.1."""
+    store = VersionedStore()
+    for e, n in writes:
+        store.put("k", Version(e, n), (e, n))
+    q = Version(qe, qn)
+    eligible = [Version(e, n) for e, n in writes if Version(e, n) <= q]
+    if not eligible:
+        with pytest.raises(KeyError):
+            store.get("k", q)
+    else:
+        expect = max(eligible)
+        assert store.get("k", q) == (expect.epoch, expect.number)
+
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 100)),
+                min_size=2, max_size=30, unique=True))
+def test_snapshot_monotone(writes):
+    """Later snapshots never see older values than earlier snapshots."""
+    store = VersionedStore()
+    for e, n in writes:
+        store.put("k", Version(e, n), Version(e, n).pack())
+    versions = sorted(Version(e, n) for e, n in writes)
+    seen = []
+    for v in versions:
+        seen.append(store.get("k", v))
+    assert seen == sorted(seen)
+
+
+def test_versioned_store_immutable_versions():
+    store = VersionedStore()
+    store.put("k", Version(0, 1), "a")
+    with pytest.raises(ValueError):
+        store.put("k", Version(0, 1), "b")
+
+
+def test_versioned_store_gc():
+    store = VersionedStore()
+    for i in range(10):
+        store.put("k", Version(0, i), i)
+    dropped = store.gc_below(Version(0, 5))
+    assert dropped == 5
+    assert store.get("k", Version(0, 5)) == 5   # still resolvable
+    assert store.get("k", Version(0, 9)) == 9
+
+
+def test_versioned_array_matches_store():
+    va = VersionedArray(4, 8)
+    store = VersionedStore()
+    for t, (item, val) in enumerate([(0, 1.0), (1, 2.0), (0, 3.0), (2, 4.0)]):
+        v = Version(0, t + 1)
+        va.write(np.array([item]), v, np.array([val]))
+        store.put(item, v, val)
+    for q in range(5):
+        got = np.asarray(va.read_snapshot(Version(0, q), default=-1.0))
+        for item in range(4):
+            try:
+                expect = store.get(item, Version(0, q))
+            except KeyError:
+                expect = -1.0
+            assert got[item] == expect, (item, q)
+
+
+# ----------------------------------------------------------------- clocks
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3)),
+                min_size=1, max_size=50))
+def test_lamport_condition(sends):
+    """If e1 -> e2 then T(e1) < T(e2): message receive is after its send."""
+    clocks = [LamportClock(i) for i in range(4)]
+    for src, dst in sends:
+        s = clocks[src].send()
+        r = clocks[dst].receive(s)
+        assert s < r   # total order extends the causal order
+
+
+def test_event_log_causal_delivery():
+    log = EventLog()
+    c1, c2 = LamportClock(1), LamportClock(2)
+    s = c1.send()
+    log.record(Event(s, "send", {"id": 1}))
+    r = c2.receive(s)
+    log.record(Event(r, "recv", {"id": 1}))
+    log.register_relation(
+        lambda e1, e2: True if (e1.kind == "send" and e2.kind == "recv"
+                                and e1.payload["id"] == e2.payload["id"])
+        else None)
+    delivered = log.deliver()
+    assert [e.kind for e in delivered] == ["send", "recv"]
+    assert log.check_causal_consistency(delivered)
+
+
+# -------------------------------------------------------------- snapshotter
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 3)),
+                min_size=1, max_size=60))
+def test_no_wait_dispatch_and_monotone_global(muts):
+    """Mutations dispatch when the TARGET node's local frontier covers prior
+    epochs (never waiting on the global frontier); global frontier is
+    monotone and trails local frontiers."""
+    nodes = [DataNode(i) for i in range(4)]
+    coord = SnapshotCoordinator(nodes)
+    ingest = IngestNode(nodes, route=lambda k: k % 4)
+    max_epoch = 3
+    frontiers = []
+    by_epoch = sorted(muts, key=lambda m: m[1])
+    for epoch in range(max_epoch + 1):
+        for key, e in by_epoch:
+            if e == epoch:
+                ingest.dispatch(Mutation(key, e))
+        for n in nodes:
+            n.seal_epoch(epoch)
+        ingest.retry_blocked()
+        g = coord.advance()
+        frontiers.append(g)
+        assert g <= min(n.local_frontier for n in nodes)
+    assert frontiers == sorted(frontiers)
+    assert not ingest.blocked
+
+
+def test_computation_waits_for_global_snapshot():
+    nodes = [DataNode(0), DataNode(1)]
+    coord = SnapshotCoordinator(nodes)
+    ran = []
+    coord.schedule_on_snapshot(1, lambda: ran.append("job"))
+    nodes[0].seal_epoch(0)
+    nodes[0].seal_epoch(1)
+    coord.advance()
+    assert not ran          # node 1 hasn't sealed epoch 1
+    nodes[1].seal_epoch(0)
+    nodes[1].seal_epoch(1)
+    coord.advance()
+    assert ran == ["job"]
+
+
+# ------------------------------------------------------------------ replica
+def test_replica_coherence_invalidate_on_write():
+    rm = ReplicaManager(4, mirror_threshold=2)
+    rm.add_item("x", owner=0, value=1)
+    # node 2 reads often -> mirror created at rebalance
+    for _ in range(3):
+        rm.read(2, "x")
+    rm.rebalance()
+    assert rm.holds(2, "x")
+    # write at owner invalidates mirror; next mirror read re-pulls new value
+    rm.write(0, "x", Version(0, 1), 42)
+    assert rm.read(2, "x") == 42
+
+
+def test_replica_rebalance_reduces_cost():
+    rm = ReplicaManager(4, mirror_threshold=4)
+    for i in range(16):
+        rm.add_item(i, owner=i % 4, value=i)
+    rng = np.random.default_rng(0)
+    def workload():
+        for _ in range(200):
+            item = int(rng.integers(0, 16))
+            rm.read((item * 2 + 1) % 4, item)   # skewed remote access
+    workload()
+    before = rm.stats()["hit_rate"]
+    rm.rebalance()
+    rm.local_hits = rm.remote_misses = 0
+    workload()
+    after = rm.stats()["hit_rate"]
+    assert after > before
+
+
+def test_stale_write_rejected():
+    rm = ReplicaManager(2)
+    rm.add_item("x", owner=0, value=0)
+    rm.write(0, "x", Version(0, 2), 1)
+    with pytest.raises(ValueError):
+        rm.write(0, "x", Version(0, 1), 2)
+
+
+# -------------------------------------------------------------------- views
+def test_view_lineage_recovery():
+    calls = {"n": 0}
+    def produce():
+        calls["n"] += 1
+        return list(range(10))
+    base = View.source("base", produce)
+    doubled = base.map("doubled", lambda xs: [2 * x for x in xs])
+    total = doubled.map("total", sum)
+    assert total.value() == 90
+    assert calls["n"] == 1
+    total.invalidate(recursive=True)
+    assert total.recover() == 90        # recomputed along lineage
+    assert calls["n"] == 2
+    assert total.lineage() == ["base", "doubled", "total"]

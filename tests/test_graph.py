@@ -1,0 +1,229 @@
+"""Dynamic-graph engine tests: schema evolution, versioned mutations,
+snapshot isolation, algorithms (vs NetworkX-free oracles), programming models
+vs the pure-jnp oracle, distributed modes vs single-device oracle."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.versioned import Version
+from repro.graph import compute as gc
+from repro.graph.dyngraph import DynamicGraph, MutationBatch, synthesize_stream
+from repro.graph.models import (pagerank_program, run_edge_centric,
+                                run_mapreduce, run_pregel)
+from repro.graph.partition import (comm_model, distributed_join_group_by,
+                                   partition_graph)
+from repro.graph.schema import citation_schema
+
+
+# ------------------------------------------------------------------- schema
+def test_schema_evolution_fig2():
+    reg = citation_schema()
+    assert reg.fields_of("Author", 1) == {"name": "String"}
+    # V2 inherits V1's fields (template-like inheritance)
+    assert reg.fields_of("Author", 2) == {"name": "String", "contact": "String"}
+    assert reg.versions_of("Author") == [1, 2]
+    assert reg.link_allowed(("Author", 1), ("Paper", 1))
+    assert reg.link_allowed(("Author", 2), ("School", 1))
+    assert not reg.link_allowed(("Author", 1), ("School", 1))  # V2-only link
+    assert reg.validate("Author", 2, {"name": "a", "contact": "b"})
+    assert not reg.validate("Author", 1, {"contact": "b"})
+
+
+def test_schema_versions_immutable():
+    reg = citation_schema()
+    with pytest.raises(ValueError):
+        reg.declare_node("Author", 1, {"x": "Int"})
+
+
+# ----------------------------------------------------------------- dyngraph
+def _mini_graph():
+    g = DynamicGraph(8, 64)
+    g.apply(MutationBatch(Version(0, 0),
+                          add_src=np.array([0, 1, 2], np.int32),
+                          add_dst=np.array([1, 2, 3], np.int32)))
+    g.apply(MutationBatch(Version(1, 0),
+                          add_src=np.array([3], np.int32),
+                          add_dst=np.array([0], np.int32),
+                          del_src=np.array([0], np.int32),
+                          del_dst=np.array([1], np.int32)))
+    return g
+
+
+def test_snapshot_isolation():
+    g = _mini_graph()
+    m0 = g.snapshot_mask(Version(0, 0))
+    m1 = g.snapshot_mask(Version(1, 0))
+    assert m0.sum() == 3                      # 0->1,1->2,2->3
+    assert m1.sum() == 3                      # (0->1 deleted) + 3->0
+    v0 = g.join_view(Version(0, 0))
+    v1 = g.join_view(Version(1, 0))
+    assert v0.m == 3 and v1.m == 3
+    # old snapshot still addressable after mutation (multi-version semantics)
+    assert g.join_view(Version(0, 0)).m == 3
+
+
+def test_view_gc():
+    g = _mini_graph()
+    for e in range(2):
+        g.join_view(Version(e, 0))
+    assert g.gc_views(keep_latest=1) == 1
+
+
+# --------------------------------------------------------------- algorithms
+def _pagerank_dense_oracle(view, damping=0.85, iters=200):
+    n = view.n
+    A = np.zeros((n, n))
+    src, dst = np.asarray(view.src), np.asarray(view.dst)
+    for s, d in zip(src, dst):
+        A[d, s] += 1.0
+    out_deg_raw = np.asarray(view.out_degree)
+    out_deg = np.maximum(out_deg_raw, 1.0)
+    pr = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        dmass = pr[out_deg_raw == 0].sum()
+        pr = (1 - damping) / n + damping * (A @ (pr / out_deg) + dmass / n)
+    return pr
+
+
+def test_pagerank_matches_dense_oracle():
+    g, _ = synthesize_stream(32, 4, 40, seed=1)
+    view = g.join_view(Version(3, 0))
+    res = gc.pagerank(view, tol=1e-10, max_iter=500)
+    oracle = _pagerank_dense_oracle(view)
+    np.testing.assert_allclose(np.asarray(res.ranks), oracle, atol=1e-6)
+
+
+def test_incremental_pagerank_matches_full_and_converges_faster():
+    # realistic online scenario: a SMALL mutation delta on a converged graph
+    g, _ = synthesize_stream(64, 6, 60, seed=2)
+    g.apply(MutationBatch(Version(6, 0),
+                          add_src=np.array([1, 2, 3], np.int32),
+                          add_dst=np.array([5, 6, 7], np.int32)))
+    v_old, v_new = Version(5, 0), Version(6, 0)
+    old = gc.pagerank(g.join_view(v_old), tol=1e-7, max_iter=500)
+    cold = gc.pagerank(g.join_view(v_new), tol=1e-7, max_iter=500)
+    warm = gc.incremental_pagerank(old, g.join_view(v_old),
+                                   g.join_view(v_new), tol=1e-7, max_iter=500)
+    np.testing.assert_allclose(np.asarray(warm.ranks), np.asarray(cold.ranks),
+                               atol=1e-5)
+    assert warm.iterations <= cold.iterations   # warm start converges faster
+
+
+def _sssp_oracle(view, source):
+    n = view.n
+    src, dst = np.asarray(view.src), np.asarray(view.dst)
+    dist = np.full(n, np.inf)
+    dist[source] = 0
+    for _ in range(n):
+        nd = dist.copy()
+        for s, d in zip(src, dst):
+            nd[d] = min(nd[d], dist[s] + 1.0)
+        if np.array_equal(nd, dist, equal_nan=True):
+            break
+        dist = nd
+    return dist
+
+
+def test_sssp_both_schedulers_match_oracle():
+    g, _ = synthesize_stream(48, 4, 80, seed=3)
+    view = g.join_view(Version(3, 0))
+    oracle = _sssp_oracle(view, 0)
+    plain = gc.sssp(view, 0)
+    prio = gc.sssp(view, 0, priority_fraction=0.25)
+    np.testing.assert_allclose(np.asarray(plain.dist), oracle)
+    np.testing.assert_allclose(np.asarray(prio.dist), oracle)
+    # priority scheduling trades rounds for fewer relaxations
+    assert prio.relaxations <= plain.relaxations
+
+
+def test_wcc_matches_union_find():
+    g, _ = synthesize_stream(40, 3, 30, seed=4)
+    view = g.join_view(Version(2, 0))
+    labels = np.asarray(gc.wcc(view))
+    # union-find oracle
+    parent = list(range(view.n))
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+    for s, d in zip(np.asarray(view.src), np.asarray(view.dst)):
+        parent[find(int(s))] = find(int(d))
+    for a in range(view.n):
+        for b in range(a):
+            assert (labels[a] == labels[b]) == (find(a) == find(b))
+
+
+def test_khop_and_reachability():
+    g = _mini_graph()
+    view = g.join_view(Version(0, 0))       # 0->1->2->3 chain
+    reach = np.asarray(gc.k_hop(view, jnp.array([0]), 2))
+    assert reach[:3].all() and not reach[3]
+    assert gc.reachability(view, 0, 3)
+    assert not gc.reachability(view, 3, 0)
+    view1 = g.join_view(Version(1, 0))      # 3->0 added
+    assert gc.reachability(view1, 3, 0)
+
+
+def test_temporal_analytics():
+    g, _ = synthesize_stream(32, 5, 40, seed=5)
+    versions = [Version(e, 0) for e in range(5)]
+    tl = gc.degree_timeline(g, versions)
+    assert tl.shape == (5, 32)
+    assert (tl[-1].sum() >= tl[0].sum())     # graph grows
+    top = gc.emerging_vertices(g, versions[1], versions[-1], top_k=3)
+    growth = tl[-1] - tl[1]
+    assert growth[top[0]] == growth.max()
+    prs = gc.pagerank_timeline(g, versions, incremental=True, tol=1e-8)
+    assert len(prs) == 5
+
+
+# --------------------------------------------------- models on protocol dataflow
+def test_pregel_pagerank_matches_oracle():
+    g, _ = synthesize_stream(24, 3, 30, seed=6)
+    view = g.join_view(Version(2, 0))
+    ref = gc.pagerank(view, tol=1e-12, max_iter=60, handle_dangling=False)
+    got = run_pregel(view, pagerank_program(n=view.n), n_parts=3,
+                     init_value=1.0 / view.n, supersteps=60)
+    np.testing.assert_allclose(got, np.asarray(ref.ranks), atol=1e-4)
+
+
+def test_edge_centric_pagerank_matches_oracle():
+    g, _ = synthesize_stream(24, 3, 30, seed=7)
+    view = g.join_view(Version(2, 0))
+    ref = gc.pagerank(view, tol=1e-12, max_iter=40, handle_dangling=False)
+    got = run_edge_centric(view, n_parts=4, iters=40)
+    np.testing.assert_allclose(got, np.asarray(ref.ranks), atol=1e-5)
+
+
+def test_mapreduce_wordcount():
+    records = ["a b a", "b c", "a"]
+    out = run_mapreduce(records,
+                        map_fn=lambda line: [(w, 1) for w in line.split()],
+                        reduce_fn=lambda k, vs: sum(vs))
+    assert out == {"a": 3, "b": 2, "c": 1}
+
+
+# ------------------------------------------------------------- distribution
+@pytest.mark.parametrize("mode", ["allgather", "scatter", "hub"])
+def test_distributed_join_group_by_matches_single(mode):
+    g, _ = synthesize_stream(32, 3, 60, seed=8)
+    view = g.join_view(Version(2, 0))
+    pg = partition_graph(view, 1, hub_k=4)
+    mesh = jax.make_mesh((1,), ("data",))
+    vals = jnp.arange(pg.n, dtype=jnp.float32)
+    got = distributed_join_group_by(pg, vals, mesh, mode=mode)
+    expect = jax.ops.segment_sum(vals[view.src], view.dst, num_segments=pg.n)
+    np.testing.assert_allclose(np.asarray(got)[:view.n],
+                               np.asarray(expect)[:view.n], rtol=1e-6)
+
+
+def test_comm_model_hub_beats_allgather():
+    g, _ = synthesize_stream(64, 3, 120, seed=9)
+    view = g.join_view(Version(2, 0))
+    pg = partition_graph(view, 8, hub_k=4)
+    cm = comm_model(pg)
+    assert cm["hub"] < cm["allgather"]
