@@ -145,6 +145,28 @@ def bench_ingest(quick=False):
     row("ingest.nowait_dispatch", t,
         f"muts_per_s={dispatched/t:.3e};delayed={delayed_nw}")
 
+    def run_nowait_batched():
+        nodes = [DataNode(i) for i in range(8)]
+        ingest = IngestNode(nodes, route=lambda k: k % 8)
+        coord = SnapshotCoordinator(nodes)
+        for e in range(epochs):
+            sel = ep == e
+            ingest.dispatch_batch(keys[sel], ep[sel])
+            for node in nodes[:-1]:
+                node.seal_epoch(e)
+            if e > 0:
+                nodes[-1].seal_epoch(e - 1)
+            ingest.retry_blocked_batches()
+            coord.advance()
+        nodes[-1].seal_epoch(epochs - 1)
+        ingest.retry_blocked_batches()
+        coord.advance()
+        return ingest.dispatched
+
+    t_b, dispatched_b = _time(run_nowait_batched, repeat=2)
+    row("ingest.nowait_dispatch_batched", t_b,
+        f"muts_per_s={dispatched_b/t_b:.3e};speedup=x{t/t_b:.1f}")
+
     def run_central():
         # central snapshoter: mutations of epoch e+1 buffered until the
         # GLOBAL snapshot of epoch e is sealed (straggler gates everyone)
@@ -167,6 +189,113 @@ def bench_ingest(quick=False):
 
     t2, delays = _time(run_central, repeat=2)
     row("ingest.central_snapshoter", t2, f"delayed={delays}")
+
+
+# ----------------------------------------------------- ingestion (data plane)
+def bench_ingest_graph(quick=False):
+    """Graph-store ingestion + snapshot view maintenance.
+
+    Measures (a) mutations/sec of the vectorized hash-indexed ``apply``
+    against the seed's loop path (O(E) scan per delete) on a delete-heavy
+    stream, and (b) join-view build latency: delta patch vs full rebuild at
+    several delete fractions. Emits ``BENCH_ingest.json`` next to the repo
+    root so later PRs have a perf trajectory to diff against.
+    """
+    import json
+    import pathlib
+
+    from repro.core.versioned import Version
+    from repro.graph.dyngraph import (DynamicGraph, MutationBatch,
+                                      synthesize_churn_stream)
+    from repro.graph.reference import LoopDynamicGraph
+
+    report = {"mutation_ingest": {}, "view_build": {}}
+
+    # --- (a) ingestion throughput, delete-heavy stream -----------------
+    n = 2_000 if quick else 8_000
+    epochs = 10
+    adds = 400 if quick else 1_000
+    # same generator the equivalence tests use — identical stream semantics
+    batches = synthesize_churn_stream(n, epochs, adds, seed=0,
+                                      delete_frac=0.5)
+    n_muts = sum(b.size for b in batches)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+
+    def run_vectorized():
+        g = DynamicGraph(n, e_max)
+        for b in batches:
+            g.apply(b)
+        return g
+
+    def run_loop():
+        g = LoopDynamicGraph(n, e_max)
+        for b in batches:
+            g.apply(b)
+        return g
+
+    t_vec, _ = _time(run_vectorized, repeat=3)
+    t_loop, _ = _time(run_loop, repeat=1)
+    speedup = t_loop / t_vec
+    row("ingest.apply_vectorized", t_vec,
+        f"muts={n_muts};muts_per_s={n_muts/t_vec:.3e}")
+    row("ingest.apply_loop_reference", t_loop,
+        f"muts={n_muts};muts_per_s={n_muts/t_loop:.3e}")
+    row("ingest.apply_speedup", 0, f"x{speedup:.1f}")
+    report["mutation_ingest"] = {
+        "n_mutations": int(n_muts),
+        "vectorized_s": t_vec, "loop_reference_s": t_loop,
+        "vectorized_muts_per_s": n_muts / t_vec,
+        "loop_muts_per_s": n_muts / t_loop,
+        "speedup": speedup,
+    }
+
+    # --- (b) view maintenance: delta patch vs full rebuild -------------
+    # a larger snapshot so the O(E + m log m) rebuild vs O(m + k log k)
+    # patch asymptotics are visible; the delta carries adds AND deletes
+    n2 = 4_000 if quick else 20_000
+    adds2 = 4_000 if quick else 20_000
+    epochs2 = 8
+    rng2 = np.random.default_rng(1)
+    for churn_frac in (0.005, 0.02, 0.10):
+        g = DynamicGraph(n2, (epochs2 + 1) * adds2 + 16, churn_threshold=10.0)
+        for e in range(epochs2):
+            g.apply(MutationBatch(
+                Version(e, 0),
+                add_src=rng2.integers(0, n2, adds2).astype(np.int32),
+                add_dst=rng2.integers(0, n2, adds2).astype(np.int32)))
+        base = g.join_view(Version(epochs2 - 1, 0))   # warm base view
+        k = max(8, int(base.m * churn_frac / 2))
+        rows_del = rng2.choice(g.n_edges, size=k, replace=False)
+        g.apply(MutationBatch(
+            Version(epochs2, 0),
+            add_src=rng2.integers(0, n2, k).astype(np.int32),
+            add_dst=rng2.integers(0, n2, k).astype(np.int32),
+            del_src=g.src[rows_del].copy(), del_dst=g.dst[rows_del].copy()))
+        v_new = Version(epochs2, 0)
+
+        def build_delta():
+            g._views.pop(v_new.pack(), None)
+            return g._delta_patch(v_new.pack(), v_new)
+
+        def build_full():
+            return g._full_rebuild(v_new)
+
+        t_delta, view_d = _time(build_delta, repeat=3)
+        t_full, view_f = _time(build_full, repeat=3)
+        assert view_d is not None and view_d.m == view_f.m
+        row(f"ingest.view_delta_c{churn_frac}", t_delta,
+            f"m={view_d.m};churn={2*k}")
+        row(f"ingest.view_full_c{churn_frac}", t_full,
+            f"m={view_f.m};speedup=x{t_full/t_delta:.1f}")
+        report["view_build"][str(churn_frac)] = {
+            "m": view_d.m, "churn_edges": int(2 * k),
+            "delta_patch_s": t_delta, "full_rebuild_s": t_full,
+            "speedup": t_full / t_delta,
+        }
+
+    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
+    out.write_text(json.dumps(report, indent=2))
+    row("ingest.report", 0, str(out))
 
 
 # ---------------------------------------------------------------- §3.3 axis 4
@@ -252,11 +381,12 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: online,offline,ingest,"
-                         "replica,kernels,roofline")
+                         "ingest_graph,replica,kernels,roofline")
     args = ap.parse_args()
     benches = {
         "online": bench_online, "offline": bench_offline,
-        "ingest": bench_ingest, "replica": bench_replica,
+        "ingest": bench_ingest, "ingest_graph": bench_ingest_graph,
+        "replica": bench_replica,
         "kernels": bench_kernels, "roofline": bench_roofline,
     }
     wanted = args.only.split(",") if args.only else list(benches)

@@ -21,6 +21,8 @@ import dataclasses
 from collections import defaultdict
 from typing import Callable, Optional
 
+import numpy as np
+
 from repro.core.versioned import Version
 
 
@@ -37,11 +39,17 @@ class DataNode:
     def __init__(self, node_id: int):
         self.node_id = node_id
         self.pending: dict[int, list[Mutation]] = defaultdict(list)
+        self.pending_batches: dict[int, list[np.ndarray]] = defaultdict(list)
         self.local_frontier = -1          # highest epoch locally sealed
         self.applied: list[Mutation] = []
+        self.applied_batches: list[np.ndarray] = []
 
     def receive(self, mut: Mutation) -> None:
         self.pending[mut.epoch].append(mut)
+
+    def receive_batch(self, epoch: int, keys: np.ndarray) -> None:
+        """Vectorized ingress: a whole key array for one epoch at once."""
+        self.pending_batches[epoch].append(np.asarray(keys))
 
     def seal_epoch(self, epoch: int) -> None:
         """Define the local snapshot for `epoch` (applies its mutations)."""
@@ -50,7 +58,12 @@ class DataNode:
                 f"node {self.node_id}: seal {epoch} out of order "
                 f"(local frontier {self.local_frontier})")
         self.applied.extend(self.pending.pop(epoch, []))
+        self.applied_batches.extend(self.pending_batches.pop(epoch, []))
         self.local_frontier = epoch
+
+    @property
+    def applied_count(self) -> int:
+        return len(self.applied) + sum(len(a) for a in self.applied_batches)
 
 
 class SnapshotCoordinator:
@@ -98,6 +111,7 @@ class IngestNode:
         self.nodes = nodes
         self.route = route
         self.blocked: list[Mutation] = []
+        self.blocked_batches: list[tuple[int, np.ndarray]] = []
         self.dispatched = 0
 
     def dispatch(self, mut: Mutation) -> bool:
@@ -114,3 +128,53 @@ class IngestNode:
     def retry_blocked(self) -> int:
         muts, self.blocked = self.blocked, []
         return sum(self.dispatch(m) for m in muts)
+
+    def dispatch_batch(self, keys: np.ndarray, epochs: np.ndarray) -> int:
+        """Vectorized no-wait dispatch: route a whole mutation array at once.
+
+        Applies the same per-mutation rule as :meth:`dispatch` (target
+        node's LOCAL frontier must cover prior epochs), but routing,
+        eligibility, and (node, epoch) grouping are NumPy ops — one Python
+        step per distinct (node, epoch) group instead of per mutation.
+        Ineligible mutations are parked in ``blocked_batches``. Returns the
+        number dispatched now.
+        """
+        keys = np.asarray(keys)
+        epochs = np.asarray(epochs)
+        if keys.size == 0:
+            return 0
+        try:
+            node_ids = np.asarray(self.route(keys))
+            if node_ids.shape != keys.shape:
+                raise TypeError
+        except Exception:  # route not vectorizable — apply elementwise
+            node_ids = np.asarray([self.route(int(k)) for k in keys],
+                                  np.int64)
+        frontiers = np.asarray([n.local_frontier for n in self.nodes])
+        ok = frontiers[node_ids] >= epochs - 1
+        for eligible, sink in ((ok, True), (~ok, False)):
+            idx = np.flatnonzero(eligible)
+            if not idx.size:
+                continue
+            order = idx[np.lexsort((epochs[idx], node_ids[idx]))]
+            group = node_ids[order].astype(np.int64) << 32 | epochs[order]
+            starts = np.flatnonzero(np.r_[True, group[1:] != group[:-1]])
+            bounds = np.r_[starts, len(order)]
+            for a, b in zip(bounds[:-1], bounds[1:]):
+                rows = order[a:b]
+                epoch = int(epochs[rows[0]])
+                if sink:
+                    self.nodes[int(node_ids[rows[0]])].receive_batch(
+                        epoch, keys[rows])
+                else:
+                    self.blocked_batches.append((epoch, keys[rows]))
+        n_ok = int(ok.sum())
+        self.dispatched += n_ok
+        return n_ok
+
+    def retry_blocked_batches(self) -> int:
+        batches, self.blocked_batches = self.blocked_batches, []
+        done = 0
+        for epoch, keys in batches:
+            done += self.dispatch_batch(keys, np.full(len(keys), epoch))
+        return done

@@ -33,8 +33,12 @@ def join_group_by(view: JoinView, values: jnp.ndarray, *, reduce: str = "sum",
     values: (n,) or (n, F). Returns same feature shape grouped by dst.
     """
     gathered = values[view.src]
-    if use_kernel and values.ndim == 2:
+    if use_kernel and reduce == "sum":
         from repro.kernels import ops
+        if values.ndim == 1:
+            # CSR rows are dst-sorted, so the Pallas sorted-segment-sum
+            # applies directly; lift to (m, 1) for the MXU formulation
+            return ops.segment_sum(gathered[:, None], view.dst, view.n)[:, 0]
         return ops.segment_sum(gathered, view.dst, view.n)
     if reduce == "sum":
         return jax.ops.segment_sum(gathered, view.dst, num_segments=view.n)
@@ -199,30 +203,35 @@ def reachability(view: JoinView, src: int, dst: int,
 
 
 # --------------------------------------------------------- temporal analytics
-def degree_timeline(g: DynamicGraph, versions: list[Version]) -> np.ndarray:
+def degree_timeline(g: DynamicGraph, versions: list[Version],
+                    use_kernel: bool = False) -> np.ndarray:
     """(T, n) in-degree per snapshot — 'who makes the most friends this
-    month?' is an argmax over a diff of this."""
+    month?' is an argmax over a diff of this. ``use_kernel`` resolves the
+    snapshot masks through the Pallas ``snapshot_resolve`` kernel."""
     out = []
     for v in versions:
-        view = g.join_view(v)
+        view = g.join_view(v, use_kernel=use_kernel)
         out.append(np.asarray(view.in_degree))
     return np.stack(out)
 
 
 def pagerank_timeline(g: DynamicGraph, versions: list[Version],
-                      incremental: bool = True, **kw) -> list[PageRankResult]:
+                      incremental: bool = True, use_kernel: bool = False,
+                      **kw) -> list[PageRankResult]:
     """PageRank over an evolving sequence of snapshots; incremental mode
     warm-starts each epoch from the previous one (paper stage-4 temporal
-    mining)."""
+    mining). ``use_kernel`` routes both the snapshot resolve and the
+    segment reductions through the Pallas kernels."""
     results: list[PageRankResult] = []
     prev: Optional[PageRankResult] = None
     prev_view: Optional[JoinView] = None
     for v in versions:
-        view = g.join_view(v)
+        view = g.join_view(v, use_kernel=use_kernel)
         if incremental and prev is not None:
-            res = incremental_pagerank(prev, prev_view, view, **kw)
+            res = incremental_pagerank(prev, prev_view, view,
+                                       use_kernel=use_kernel, **kw)
         else:
-            res = pagerank(view, **kw)
+            res = pagerank(view, use_kernel=use_kernel, **kw)
         results.append(res)
         prev, prev_view = res, view
     return results

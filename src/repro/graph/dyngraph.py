@@ -7,21 +7,72 @@ stamped ``created=v``; an edge delete stamps ``deleted=v``. A snapshot is a
 *mask* (``created <= v < deleted``), which is exactly the paper's Fig 3(b)
 multi-version item semantics (every version stays addressable), vectorized.
 
+Ingestion (``apply``) is fully vectorized and indexed:
+
+* vertex adds, edge-row appends, and endpoint auto-creation are batched
+  NumPy ops — O(batch) with no per-element Python work on arrays;
+* edge deletes resolve through a ``(src, dst) -> latest live row`` hash
+  index backed by a per-row ``prev-live`` chain (a LIFO stack per key), so
+  a delete is O(1) amortized instead of the seed's O(E) scan per edge —
+  O(batch) per mutation batch overall.
+
 The per-snapshot CSR ("join view", §2.3.3.2) is built once per queried
 version and cached — it is what makes the join-group-by operator a segment
-reduction.
+reduction. Views are maintained **delta-first**: when a view for an earlier
+version is cached, the CSR for the requested version is patched from the
+mutation delta (sorted-merge row insert/remove + incremental degree
+updates) in O(m + |delta| log |delta|) instead of the full O(E + m log m)
+mask-and-re-sort rebuild; past a churn threshold (delta larger than
+``churn_threshold`` · m) it falls back to the full rebuild. Rows are kept
+in canonical ``(dst, src)`` order so the delta patch and the full rebuild
+produce byte-identical CSRs.
+
+``apply`` also evicts cached views with version >= the incoming batch (a
+snapshot cached for a not-yet-applied future version would silently go
+stale otherwise).
+
+On TPU the snapshot-mask resolution can route through the Pallas
+``snapshot_resolve`` kernel (``use_kernel=True``): liveness is a 2-slot
+multi-version resolve per edge ([created, deleted] -> [1, 0]).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Iterable, Optional
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.versioned import Version
+from repro.core.versioned import PACK_BITS, Version
 
 MAXV = np.iinfo(np.int64).max
+
+# Delta-patching a cached view wins while the delta is small relative to the
+# live edge count; past this fraction a full mask-and-sort rebuild is cheaper.
+DEFAULT_CHURN_THRESHOLD = 0.25
+
+_I32MAX = np.iinfo(np.int32).max
+
+
+def _pack64_to32(packed: np.ndarray) -> np.ndarray:
+    """Re-pack 64-bit (epoch<<32|number) version stamps into the int32
+    data-plane packing (versioned.PACK_BITS). MAXV (the 'never' sentinel)
+    maps to int32 max."""
+    epoch = packed >> 32
+    number = packed & 0xFFFFFFFF
+    real = packed != MAXV
+    out = (epoch << PACK_BITS) | number
+    # overflow would silently corrupt the int32 stamps and diverge the
+    # kernel mask from the host mask; int32 max itself is reserved as the
+    # 'never' sentinel
+    if np.any(real & ((epoch >= 1 << (31 - PACK_BITS))
+                      | (number >= 1 << PACK_BITS)
+                      | (out >= _I32MAX))):
+        raise ValueError("version stamp exceeds int32 data-plane packing "
+                         f"(epoch < 2^{31 - PACK_BITS}, "
+                         f"number < 2^{PACK_BITS}, int32 max reserved)")
+    return np.where(real, out, _I32MAX).astype(np.int32)
 
 
 @dataclasses.dataclass
@@ -47,8 +98,22 @@ class MutationBatch:
 
 
 @dataclasses.dataclass
+class _BatchDelta:
+    """Per-batch ingestion record: which store rows the batch touched.
+    Lets ``join_view`` enumerate a version delta in O(|delta|)."""
+    version: int                # packed
+    row_start: int              # appended rows: [row_start, row_end)
+    row_end: int
+    del_rows: np.ndarray        # rows tombstoned by this batch
+
+
+@dataclasses.dataclass
 class JoinView:
-    """CSR of one snapshot: dst-grouped in-edges (the join view)."""
+    """CSR of one snapshot: dst-grouped in-edges (the join view).
+
+    Rows are in canonical (dst, src) order. The trailing ``np_*`` fields are
+    host-side state for O(delta) incremental maintenance.
+    """
     version: Version
     n: int
     offsets: jnp.ndarray       # (n+1,)
@@ -56,18 +121,32 @@ class JoinView:
     dst: jnp.ndarray           # (m,)
     out_degree: jnp.ndarray    # (n,)
     in_degree: jnp.ndarray     # (n,)
+    np_keys: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)    # (m,) int64 (dst<<32)|src, ascending
+    np_src: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+    np_dst: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+    np_in_deg: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)    # (n,) int64
+    np_out_deg: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)    # (n,) int64
 
     @property
     def m(self) -> int:
         return int(self.src.shape[0])
 
 
+def _edge_keys(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    return (dst.astype(np.int64) << 32) | src.astype(np.int64)
+
+
 class DynamicGraph:
     """Capacity-bounded versioned edge store + vertex table."""
 
-    def __init__(self, n_max: int, e_max: int):
+    def __init__(self, n_max: int, e_max: int,
+                 churn_threshold: float = DEFAULT_CHURN_THRESHOLD):
         self.n_max = n_max
         self.e_max = e_max
+        self.churn_threshold = churn_threshold
         self.src = np.zeros(e_max, np.int32)
         self.dst = np.zeros(e_max, np.int32)
         self.created = np.full(e_max, MAXV, np.int64)
@@ -78,48 +157,103 @@ class DynamicGraph:
         self.n_vertices = 0
         self.versions: list[Version] = []
         self._views: dict[int, JoinView] = {}
+        # (src, dst) -> latest live row; _prev_live chains to the previous
+        # live row with the same key (LIFO, matching "delete the newest
+        # live duplicate" semantics).
+        self._live_index: dict[int, int] = {}
+        self._prev_live = np.full(e_max, -1, np.int64)
+        self._batch_log: list[_BatchDelta] = []
+        # records with version <= _log_floor have been trimmed (gc_views);
+        # delta patching is only valid from bases at or above the floor
+        self._log_floor = -1
+        # telemetry for the delta-view path (benchmarks read these)
+        self.view_full_builds = 0
+        self.view_delta_patches = 0
 
     # -- ingestion ---------------------------------------------------------
     def apply(self, batch: MutationBatch) -> None:
         v = batch.version.pack()
         if self.versions and v <= self.versions[-1].pack():
             raise ValueError("mutation batches must have increasing versions")
-        # vertex adds
-        for vid, vt in zip(batch.add_vertices, batch.vertex_types):
-            if self.v_created[vid] == MAXV:
-                self.v_created[vid] = v
-                self.v_type[vid] = vt
-                self.n_vertices += 1
+        if self.n_edges + len(batch.add_src) > self.e_max:
+            # checked before any state mutates so a failed apply is a no-op
+            raise MemoryError("edge capacity exceeded")
+        # a view cached for a future version is invalidated by this batch
+        stale = [k for k in self._views if k >= v]
+        for k in stale:
+            del self._views[k]
+        # vertex adds (typed): first occurrence per id wins within a batch
+        n_typed = min(len(batch.add_vertices), len(batch.vertex_types))
+        if n_typed:
+            vids, first = np.unique(batch.add_vertices[:n_typed],
+                                    return_index=True)
+            new = self.v_created[vids] == MAXV
+            vids, first = vids[new], first[new]
+            self.v_created[vids] = v
+            self.v_type[vids] = batch.vertex_types[:n_typed][first]
+            self.n_vertices += len(vids)
         # edge adds: append rows
         k = len(batch.add_src)
+        row_start = self.n_edges
         if k:
-            if self.n_edges + k > self.e_max:
-                raise MemoryError("edge capacity exceeded")
             sl = slice(self.n_edges, self.n_edges + k)
             self.src[sl] = batch.add_src
             self.dst[sl] = batch.add_dst
             self.created[sl] = v
             self.deleted[sl] = MAXV
-            # auto-create endpoint vertices
-            for vid in np.concatenate([batch.add_src, batch.add_dst]):
-                if self.v_created[vid] == MAXV:
-                    self.v_created[vid] = v
-                    self.n_vertices += 1
+            # auto-create endpoint vertices (untyped)
+            ends = np.unique(np.concatenate([batch.add_src, batch.add_dst]))
+            new = ends[self.v_created[ends] == MAXV]
+            self.v_created[new] = v
+            self.n_vertices += len(new)
+            # push each new row onto its key's live stack
+            index = self._live_index
+            prev = self._prev_live
+            for row, key in enumerate(
+                    _edge_keys(batch.add_src, batch.add_dst).tolist(),
+                    row_start):
+                old = index.get(key, -1)
+                prev[row] = old
+                index[key] = row
             self.n_edges += k
-        # edge deletes: stamp the *live* row matching (src, dst)
-        for s, d in zip(batch.del_src, batch.del_dst):
-            live = np.flatnonzero(
-                (self.src[:self.n_edges] == s) & (self.dst[:self.n_edges] == d)
-                & (self.deleted[:self.n_edges] == MAXV))
-            if live.size:
-                self.deleted[live[-1]] = v
+        # edge deletes: pop the newest live row matching (src, dst)
+        del_rows: list[int] = []
+        if len(batch.del_src):
+            index = self._live_index
+            prev = self._prev_live
+            deleted = self.deleted
+            for key in _edge_keys(batch.del_src, batch.del_dst).tolist():
+                row = index.get(key, -1)
+                if row < 0:
+                    continue            # no live row — ignore (seed semantics)
+                deleted[row] = v
+                del_rows.append(row)
+                p = prev[row]
+                if p >= 0:
+                    index[key] = p
+                else:
+                    del index[key]
+        self._batch_log.append(_BatchDelta(
+            v, row_start, self.n_edges, np.asarray(del_rows, np.int64)))
         self.versions.append(batch.version)
 
     # -- snapshots -----------------------------------------------------------
-    def snapshot_mask(self, version: Version) -> np.ndarray:
-        """created <= v < deleted — the paper's snapshot rule on edges."""
+    def snapshot_mask(self, version: Version,
+                      use_kernel: bool = False) -> np.ndarray:
+        """created <= v < deleted — the paper's snapshot rule on edges.
+
+        ``use_kernel`` routes the resolve through the Pallas
+        ``snapshot_resolve`` kernel (liveness as a 2-slot multi-version
+        resolve); the NumPy path is the portable host fallback.
+        """
         v = version.pack()
         e = self.n_edges
+        if use_kernel:
+            from repro.kernels import ops
+            mask = ops.liveness_mask(_pack64_to32(self.created[:e]),
+                                     _pack64_to32(self.deleted[:e]),
+                                     int(_pack64_to32(np.asarray([v]))[0]))
+            return np.asarray(mask)
         return (self.created[:e] <= v) & (v < self.deleted[:e])
 
     def num_vertices(self, version: Optional[Version] = None) -> int:
@@ -127,46 +261,184 @@ class DynamicGraph:
             return self.n_vertices
         return int((self.v_created <= version.pack()).sum())
 
-    def join_view(self, version: Version) -> JoinView:
-        """Build (and cache) the dst-grouped CSR for a snapshot."""
+    def join_view(self, version: Version,
+                  use_kernel: bool = False) -> JoinView:
+        """Return (and cache) the dst-grouped CSR for a snapshot.
+
+        Prefers patching the newest cached view at an earlier version with
+        the mutation delta; falls back to a full rebuild when no usable base
+        exists or the delta exceeds the churn threshold.
+        """
         key = version.pack()
         if key in self._views:
             return self._views[key]
-        mask = self.snapshot_mask(version)
-        src = self.src[:self.n_edges][mask]
-        dst = self.dst[:self.n_edges][mask]
-        n = self.n_max
-        order = np.argsort(dst, kind="stable")
-        src_s, dst_s = src[order], dst[order]
-        counts = np.bincount(dst_s, minlength=n)
-        offsets = np.zeros(n + 1, np.int64)
-        np.cumsum(counts, out=offsets[1:])
-        out_deg = np.bincount(src, minlength=n)
-        view = JoinView(version, n, jnp.asarray(offsets),
-                        jnp.asarray(src_s), jnp.asarray(dst_s),
-                        jnp.asarray(out_deg.astype(np.float32)),
-                        jnp.asarray(counts.astype(np.float32)))
+        view = self._delta_patch(key, version)
+        if view is None:
+            view = self._full_rebuild(version, use_kernel=use_kernel)
+            self.view_full_builds += 1
+        else:
+            self.view_delta_patches += 1
         self._views[key] = view
         return view
 
+    def _full_rebuild(self, version: Version,
+                      use_kernel: bool = False) -> JoinView:
+        mask = self.snapshot_mask(version, use_kernel=use_kernel)
+        src = self.src[:self.n_edges][mask]
+        dst = self.dst[:self.n_edges][mask]
+        keys = _edge_keys(src, dst)
+        order = np.argsort(keys, kind="stable")
+        return self._make_view(version, keys[order], src[order], dst[order],
+                               np.bincount(dst, minlength=self.n_max),
+                               np.bincount(src, minlength=self.n_max))
+
+    def _make_view(self, version: Version, keys, src_s, dst_s,
+                   in_deg, out_deg) -> JoinView:
+        n = self.n_max
+        offsets = np.zeros(n + 1, np.int64)
+        np.cumsum(in_deg, out=offsets[1:])
+        return JoinView(version, n, jnp.asarray(offsets),
+                        jnp.asarray(src_s), jnp.asarray(dst_s),
+                        jnp.asarray(out_deg.astype(np.float32)),
+                        jnp.asarray(in_deg.astype(np.float32)),
+                        np_keys=keys, np_src=src_s, np_dst=dst_s,
+                        np_in_deg=np.asarray(in_deg, np.int64),
+                        np_out_deg=np.asarray(out_deg, np.int64))
+
+    def _delta_patch(self, key: int, version: Version) -> Optional[JoinView]:
+        """Patch the newest cached view with version < key, or None if no
+        base is usable / the churn threshold is exceeded."""
+        bases = [k for k in self._views if self._log_floor <= k < key
+                 and self._views[k].np_keys is not None]
+        if not bases:
+            return None
+        base_key = max(bases)
+        base = self._views[base_key]
+        # edge delta between base_key and key: the log is version-sorted,
+        # so the record range is found by bisection — O(|delta| + log B)
+        lo = bisect.bisect_right(self._batch_log, base_key,
+                                 key=lambda r: r.version)
+        hi = bisect.bisect_right(self._batch_log, key,
+                                 key=lambda r: r.version)
+        add_rows: list[np.ndarray] = []
+        del_rows: list[np.ndarray] = []
+        for rec in self._batch_log[lo:hi]:
+            add_rows.append(np.arange(rec.row_start, rec.row_end, dtype=np.int64))
+            del_rows.append(rec.del_rows)
+        adds = (np.concatenate(add_rows) if add_rows
+                else np.zeros(0, np.int64))
+        dels = (np.concatenate(del_rows) if del_rows
+                else np.zeros(0, np.int64))
+        # rows added in the delta count only if still live at `key`; rows
+        # deleted in the delta count only if present in the base (a row both
+        # added and deleted inside the delta cancels out of both sets)
+        adds = adds[self.deleted[adds] > key]
+        dels = dels[self.created[dels] <= base_key]
+        churn = len(adds) + len(dels)
+        if churn > self.churn_threshold * max(base.m, 1):
+            return None
+        if churn == 0:
+            return self._make_view(version, base.np_keys, base.np_src,
+                                   base.np_dst, base.np_in_deg.copy(),
+                                   base.np_out_deg.copy())
+        keys, src_s, dst_s = base.np_keys, base.np_src, base.np_dst
+        in_deg = base.np_in_deg.copy()
+        out_deg = base.np_out_deg.copy()
+        if len(dels):
+            dkeys = np.sort(_edge_keys(self.src[dels], self.dst[dels]))
+            # multiset removal: j-th duplicate of a key removes the j-th of
+            # its contiguous run in the (sorted) base rows
+            left = np.searchsorted(keys, dkeys, side="left")
+            occ = np.arange(len(dkeys)) - np.searchsorted(dkeys, dkeys,
+                                                          side="left")
+            keep = np.ones(len(keys), bool)
+            keep[left + occ] = False
+            keys, src_s, dst_s = keys[keep], src_s[keep], dst_s[keep]
+            np.subtract.at(in_deg, self.dst[dels], 1)
+            np.subtract.at(out_deg, self.src[dels], 1)
+        if len(adds):
+            asrc, adst = self.src[adds], self.dst[adds]
+            akeys = _edge_keys(asrc, adst)
+            order = np.argsort(akeys, kind="stable")
+            akeys, asrc, adst = akeys[order], asrc[order], adst[order]
+            pos = np.searchsorted(keys, akeys, side="left")
+            keys = np.insert(keys, pos, akeys)
+            src_s = np.insert(src_s, pos, asrc)
+            dst_s = np.insert(dst_s, pos, adst)
+            np.add.at(in_deg, adst, 1)
+            np.add.at(out_deg, asrc, 1)
+        return self._make_view(version, keys, src_s, dst_s, in_deg, out_deg)
+
     def gc_views(self, keep_latest: int = 4) -> int:
-        """Collect obsolete join views (paper §2.2 obsolete-replica GC)."""
+        """Collect obsolete join views (paper §2.2 obsolete-replica GC).
+
+        Also trims the ingestion delta log: records at or below the oldest
+        retained view's version can never contribute to a future delta
+        patch from a retained base, so the log stays bounded by the churn
+        since the oldest view instead of growing with the whole stream.
+        """
         if len(self._views) <= keep_latest:
             return 0
         keys = sorted(self._views)
         drop = keys[:-keep_latest]
         for k in drop:
             del self._views[k]
+        floor = min(self._views)
+        self._batch_log = [r for r in self._batch_log if r.version > floor]
+        self._log_floor = max(self._log_floor, floor)
         return len(drop)
 
 
 # ----------------------------------------------------------- synthetic data
+def synthesize_churn_stream(n_vertices: int, n_epochs: int,
+                            adds_per_epoch: int, *, seed: int = 0,
+                            delete_frac: float = 0.0,
+                            readd_frac: float = 0.0) -> list[MutationBatch]:
+    """Uniform-random mutation batches with controllable churn: each epoch
+    deletes ``delete_frac`` of the live edges and re-adds ``readd_frac`` of
+    the previously deleted ones. Shared by the equivalence tests and the
+    ingestion benchmark so both exercise identical stream semantics."""
+    rng = np.random.default_rng(seed)
+    live: list[tuple[int, int]] = []
+    dead: list[tuple[int, int]] = []
+    batches = []
+    for e in range(n_epochs):
+        src = rng.integers(0, n_vertices, adds_per_epoch).astype(np.int32)
+        dst = rng.integers(0, n_vertices, adds_per_epoch).astype(np.int32)
+        adds_s, adds_d = list(src), list(dst)
+        if readd_frac and dead:
+            k = int(len(dead) * readd_frac)
+            for i in rng.choice(len(dead), size=k, replace=False):
+                s, d = dead[i]
+                adds_s.append(s)
+                adds_d.append(d)
+        n_del = int(len(live) * delete_frac)
+        if n_del:
+            idx = rng.choice(len(live), size=n_del, replace=False)
+            sel = set(idx.tolist())
+            dels = [live[i] for i in idx]
+            live = [x for i, x in enumerate(live) if i not in sel]
+            dead.extend(dels)
+            del_s = np.array([x[0] for x in dels], np.int32)
+            del_d = np.array([x[1] for x in dels], np.int32)
+        else:
+            del_s = del_d = np.zeros(0, np.int32)
+        live.extend(zip(adds_s, adds_d))
+        batches.append(MutationBatch(
+            Version(e, 0),
+            add_src=np.array(adds_s, np.int32),
+            add_dst=np.array(adds_d, np.int32),
+            del_src=del_s, del_dst=del_d))
+    return batches
+
+
 def synthesize_stream(n_vertices: int, n_epochs: int, adds_per_epoch: int,
                       *, seed: int = 0, delete_frac: float = 0.05,
                       n_types: int = 3) -> tuple[DynamicGraph, list[MutationBatch]]:
     """Preferential-attachment mutation stream (citation-graph-like: papers
     cite earlier papers; new vertex types appear in later epochs — the
-    paper's Fig 1 evolution)."""
+    paper's Fig 1 evolution). Vertices grown in each epoch arrive as typed
+    ``add_vertices`` with the epoch's type."""
     rng = np.random.default_rng(seed)
     e_max = n_epochs * adds_per_epoch * 2 + 16
     g = DynamicGraph(n_vertices, e_max)
@@ -175,6 +447,7 @@ def synthesize_stream(n_vertices: int, n_epochs: int, adds_per_epoch: int,
     grown = 8
     live: list[tuple[int, int]] = []
     for epoch in range(n_epochs):
+        prev_grown = grown
         grown = min(n_vertices, grown + max(1, n_vertices // (n_epochs + 1)))
         p = deg[:grown] / deg[:grown].sum()
         dsts = rng.choice(grown, size=adds_per_epoch, p=p).astype(np.int32)
@@ -193,14 +466,17 @@ def synthesize_stream(n_vertices: int, n_epochs: int, adds_per_epoch: int,
         else:
             del_src = del_dst = np.zeros(0, np.int32)
         live.extend(zip(srcs.tolist(), dsts.tolist()))
-        # vertex type evolution: later epochs introduce new types
-        vtypes = np.minimum(epoch * n_types // max(n_epochs, 1), n_types - 1)
+        # vertex type evolution: later epochs introduce new types; this
+        # epoch's newly grown vertices carry the epoch's type (Fig 1)
+        vtype = np.minimum(epoch * n_types // max(n_epochs, 1), n_types - 1)
+        new_vertices = np.arange(0 if epoch == 0 else prev_grown, grown,
+                                 dtype=np.int32)
         batch = MutationBatch(
             version=Version(epoch, 0),
             add_src=srcs, add_dst=dsts,
             del_src=del_src, del_dst=del_dst,
-            add_vertices=np.zeros(0, np.int32),
-            vertex_types=np.full(0, vtypes, np.int32))
+            add_vertices=new_vertices,
+            vertex_types=np.full(len(new_vertices), vtype, np.int32))
         g.apply(batch)
         batches.append(batch)
     return g, batches

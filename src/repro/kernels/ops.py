@@ -12,6 +12,7 @@ import jax
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lru_scan as _lru
 from repro.kernels import segment_sum as _ss
+from repro.kernels import snapshot_resolve as _sr
 
 
 def _interpret() -> bool:
@@ -21,6 +22,16 @@ def _interpret() -> bool:
 def segment_sum(values, segment_ids, num_segments, **kw):
     kw.setdefault("interpret", _interpret())
     return _ss.segment_sum(values, segment_ids, num_segments, **kw)
+
+
+def snapshot_resolve(versions, values, query_version, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _sr.snapshot_resolve(versions, values, query_version, **kw)
+
+
+def liveness_mask(created, deleted, query_version, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _sr.liveness_mask(created, deleted, query_version, **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, **kw):

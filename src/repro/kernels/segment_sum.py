@@ -54,6 +54,8 @@ def segment_sum(values, segment_ids, num_segments: int, *,
     """values: (m, F) sorted by segment; segment_ids: (m,) int32 ascending.
     Returns (num_segments, F) f32. Pads m/F internally."""
     m, F = values.shape
+    if m == 0:
+        return jnp.zeros((num_segments, F), jnp.float32)
     eb = min(edge_block, max(m, 8))
     fb = min(feat_block, F)
     m_pad = (-m) % eb

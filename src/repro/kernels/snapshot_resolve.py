@@ -43,6 +43,8 @@ def snapshot_resolve(versions, values, query_version, *,
     query_version: scalar int32. Returns (resolved (N,), index (N,) with -1
     for items having no version <= query)."""
     N, K = versions.shape
+    if N == 0:
+        return (jnp.zeros((0,), values.dtype), jnp.zeros((0,), jnp.int32))
     nb = min(item_block, N)
     pad = (-N) % nb
     if pad:
@@ -70,3 +72,26 @@ def snapshot_resolve(versions, values, query_version, *,
         interpret=interpret,
     )(q, versions, values)
     return out[:N], idx[:N]
+
+
+@functools.partial(jax.jit, static_argnames=("item_block", "interpret"))
+def liveness_mask(created, deleted, query_version, *,
+                  item_block: int = DEFAULT_ITEM_BLOCK,
+                  interpret: bool = False):
+    """Edge liveness (``created <= q < deleted``) as a 2-slot multi-version
+    resolve: versions (N, 2) = [created, deleted], values [1, 0]. The newest
+    eligible slot at q is 'created' exactly when the edge is live, so the
+    resolved value IS the mask. Same single-HBM-pass roofline as
+    :func:`snapshot_resolve`; the snapshot-mask hot path of the dynamic
+    graph store routes here on TPU.
+
+    created/deleted: (N,) int32 data-plane-packed version stamps (ascending
+    per row: deleted is MAX-padded until tombstoned). Returns (N,) bool.
+    """
+    versions = jnp.stack([jnp.asarray(created, jnp.int32),
+                          jnp.asarray(deleted, jnp.int32)], axis=1)
+    values = jnp.broadcast_to(jnp.asarray([1.0, 0.0], jnp.float32),
+                              versions.shape)
+    out, _ = snapshot_resolve(versions, values, query_version,
+                              item_block=item_block, interpret=interpret)
+    return out > 0.5

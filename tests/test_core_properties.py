@@ -1,8 +1,28 @@
-"""Property tests (hypothesis) for the paper's core invariants."""
-import hypothesis.strategies as st
+"""Property tests (hypothesis) for the paper's core invariants.
+
+``hypothesis`` is optional (not installable in network-less environments):
+without it the ``@given`` property tests are skipped but the plain tests in
+this module still collect and run.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:        # pragma: no cover - exercised in offline envs
+    class _StrategyStub:
+        """Stands in for hypothesis.strategies at decoration time only."""
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda fn: fn
 
 from repro.core.clock import Event, EventLog, LamportClock
 from repro.core.replica import ReplicaManager

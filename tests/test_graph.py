@@ -1,12 +1,10 @@
 """Dynamic-graph engine tests: schema evolution, versioned mutations,
 snapshot isolation, algorithms (vs NetworkX-free oracles), programming models
 vs the pure-jnp oracle, distributed modes vs single-device oracle."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core.versioned import Version
 from repro.graph import compute as gc
