@@ -1,0 +1,110 @@
+"""CI benchmark smoke check for BENCH_ingest.json.
+
+Validates that a fresh benchmark run produced every required section/metric
+and that the scale-free ratio metrics (speedups — robust across machine
+speeds, unlike raw latencies) have not collapsed versus the committed
+baseline. "Regressed" means a ratio fell below half its baseline value:
+generous enough for noisy CI runners, tight enough to catch the
+vectorized/delta/sharded fast paths silently degrading to their fallbacks.
+
+    python benchmarks/check_bench.py --fresh BENCH_ingest.json \
+        --baseline /tmp/baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REQUIRED = {
+    "mutation_ingest": ["speedup", "vectorized_muts_per_s"],
+    "view_build": [],          # at least one churn entry, checked below
+    "sharded_ingest": ["single_store_muts_per_s", "shards"],
+}
+SHARD_COUNTS = ("1", "2", "4")
+SHARD_METRICS = ["modeled_muts_per_s", "modeled_speedup_vs_single",
+                 "per_shard_muts_per_s", "stitch_s"]
+# (path-description, getter) pairs of scale-free ratios compared 2x
+REGRESSION_FACTOR = 2.0
+
+
+def _ratio_metrics(report: dict) -> dict[str, float]:
+    out = {"mutation_ingest.speedup": report["mutation_ingest"]["speedup"]}
+    for churn, entry in report["view_build"].items():
+        out[f"view_build.{churn}.speedup"] = entry["speedup"]
+    for ns, entry in report["sharded_ingest"]["shards"].items():
+        out[f"sharded_ingest.shards.{ns}.modeled_speedup_vs_single"] = \
+            entry["modeled_speedup_vs_single"]
+    return out
+
+
+def check(fresh: dict, baseline: dict | None) -> list[str]:
+    errors = []
+    for section, metrics in REQUIRED.items():
+        if section not in fresh:
+            errors.append(f"missing section {section!r}")
+            continue
+        for m in metrics:
+            if m not in fresh[section]:
+                errors.append(f"missing metric {section}.{m}")
+    if not fresh.get("view_build"):
+        errors.append("view_build has no churn entries")
+    shards = fresh.get("sharded_ingest", {}).get("shards", {})
+    for ns in SHARD_COUNTS:
+        if ns not in shards:
+            errors.append(f"missing sharded_ingest.shards[{ns!r}]")
+            continue
+        for m in SHARD_METRICS:
+            if m not in shards[ns]:
+                errors.append(f"missing sharded_ingest.shards.{ns}.{m}")
+    if errors or baseline is None:
+        return errors
+    try:
+        base_ratios = _ratio_metrics(baseline)
+    except KeyError as exc:   # old-format baseline: keys-only check
+        print(f"note: baseline lacks {exc}; skipping regression check")
+        return errors
+    try:
+        fresh_ratios = _ratio_metrics(fresh)
+    except KeyError as exc:   # e.g. a partially-written report
+        return errors + [f"fresh report lacks ratio metric {exc}"]
+    for name, base in base_ratios.items():
+        got = fresh_ratios.get(name)
+        if got is None:
+            errors.append(f"ratio {name} missing from fresh report")
+        elif got < base / REGRESSION_FACTOR:
+            errors.append(
+                f"{name} regressed >{REGRESSION_FACTOR}x: "
+                f"{got:.2f} vs baseline {base:.2f}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, type=pathlib.Path)
+    ap.add_argument("--baseline", type=pathlib.Path, default=None,
+                    help="committed BENCH_ingest.json to diff ratios against"
+                         " (omit for a keys-only check)")
+    args = ap.parse_args()
+    if not args.fresh.exists():
+        print(f"FAIL: {args.fresh} was not produced")
+        return 1
+    fresh = json.loads(args.fresh.read_text())
+    baseline = (json.loads(args.baseline.read_text())
+                if args.baseline and args.baseline.exists() else None)
+    errors = check(fresh, baseline)
+    for e in errors:
+        print(f"FAIL: {e}")
+    if not errors:
+        try:
+            ratios = ", ".join(f"{k}={v:.2f}"
+                               for k, v in _ratio_metrics(fresh).items())
+        except KeyError:
+            ratios = "(not all ratio metrics present)"
+        print(f"OK: all required metrics present; ratios: {ratios}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -86,6 +86,21 @@ def bench_offline(quick=False):
         f"rounds={res4.rounds};relax={res4.relaxations}")
 
 
+def _merge_bench_json(path, sections):
+    """Update sections of BENCH_ingest.json in one read-modify-write,
+    preserving the sections other axes wrote (ingest_graph and
+    ingest_sharded share the file)."""
+    import json
+    report = {}
+    if path.exists():
+        try:
+            report = json.loads(path.read_text())
+        except ValueError:
+            report = {}
+    report.update(sections)
+    path.write_text(json.dumps(report, indent=2))
+
+
 def _small_delta(g, n):
     from repro.core.versioned import Version
     from repro.graph.dyngraph import MutationBatch
@@ -201,7 +216,6 @@ def bench_ingest_graph(quick=False):
     several delete fractions. Emits ``BENCH_ingest.json`` next to the repo
     root so later PRs have a perf trajectory to diff against.
     """
-    import json
     import pathlib
 
     from repro.core.versioned import Version
@@ -294,8 +308,123 @@ def bench_ingest_graph(quick=False):
         }
 
     out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
-    out.write_text(json.dumps(report, indent=2))
+    _merge_bench_json(out, {"mutation_ingest": report["mutation_ingest"],
+                            "view_build": report["view_build"]})
     row("ingest.report", 0, str(out))
+
+
+# ------------------------------------------------- sharded ingestion (§2.3.1)
+def bench_ingest_sharded(quick=False):
+    """Sharded graph-store ingestion: N DynamicGraph shards behind
+    dst-hash-routed DataNodes (``graph.sharded.ShardedDynamicGraph``).
+
+    Shards of a real deployment ingest concurrently, so throughput is
+    modeled as the critical path: serial routing/dispatch (the single
+    ingest node) + the slowest shard's cumulative apply time, both measured
+    directly. Also measures stitch latency — merging the per-shard CSRs
+    into the global join view — against the single store's full view
+    build. Per-shard mutations/sec and stitch latency land in
+    ``BENCH_ingest.json`` under ``sharded_ingest``.
+    """
+    import pathlib
+
+    from repro.core.versioned import Version
+    from repro.graph.dyngraph import DynamicGraph, synthesize_churn_stream
+    from repro.graph.sharded import ShardedDynamicGraph, stitch_join_views
+
+    n = 5_000 if quick else 20_000
+    epochs = 8 if quick else 10
+    adds = 2_500 if quick else 10_000
+    # same generator/churn profile as the single-store ingest axis
+    batches = synthesize_churn_stream(n, epochs, adds, seed=0,
+                                      delete_frac=0.5)
+    n_muts = sum(b.size for b in batches)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    v_last = Version(epochs - 1, 0)
+
+    def run_single():
+        g = DynamicGraph(n, e_max)
+        for b in batches:
+            g.apply(b)
+        return g
+
+    # single-store and sharded runs are measured back-to-back within each
+    # repeat, and the speedup is the median of the per-repeat ratios —
+    # paired ratios cancel host-load drift that independent best-of-N
+    # timings (measured seconds apart) do not
+    shard_counts = (1, 2, 4)
+    repeats = 5
+    singles = []
+    reps = {ns: [] for ns in shard_counts}
+    last_sg = {}          # one store per shard count (for the stitch bench)
+    g_single = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        g_single = run_single()
+        singles.append(time.perf_counter() - t0)
+        for ns in shard_counts:
+            sg = ShardedDynamicGraph(ns, n, e_max)
+            t0 = time.perf_counter()
+            for b in batches:
+                sg.apply(b)
+            wall = time.perf_counter() - t0
+            shard_s = sg.shard_apply_seconds
+            route_s = max(wall - sum(shard_s), 0.0)
+            reps[ns].append({
+                "wall_s": wall,
+                "route_s": route_s,
+                "per_shard_apply_s": shard_s,
+                "modeled_parallel_s": route_s + max(shard_s),
+                "speedup": singles[-1] / (route_s + max(shard_s)),
+            })
+            last_sg[ns] = sg
+
+    t_single = min(singles)
+    row("ingest_sharded.single_store", t_single,
+        f"muts={n_muts};muts_per_s={n_muts/t_single:.3e}")
+    t_single_view, single_view = _time(
+        lambda: g_single._full_rebuild(v_last), repeat=3)
+
+    report = {"n_mutations": int(n_muts),
+              "single_store_s": t_single,
+              "single_store_muts_per_s": n_muts / t_single,
+              "single_view_build_s": t_single_view,
+              "shards": {}}
+    for ns in shard_counts:
+        by_speedup = sorted(reps[ns], key=lambda r: r["speedup"])
+        rep = by_speedup[len(by_speedup) // 2]      # median-speedup repeat
+        speedup = rep["speedup"]
+        modeled = rep["modeled_parallel_s"]
+        shard_s = rep["per_shard_apply_s"]
+        # stitch latency with warm shard views (the steady-state query path)
+        views = last_sg[ns].shard_views(v_last)
+        t_stitch, stitched = _time(
+            lambda: stitch_join_views(v_last, views), repeat=3)
+        assert stitched.m == single_view.m, "sharded/single view diverged"
+        per_shard_rate = [
+            (n_muts / ns) / s if s > 0 else 0.0 for s in shard_s]
+        row(f"ingest_sharded.shards{ns}", modeled,
+            f"modeled_muts_per_s={n_muts/modeled:.3e};"
+            f"route_ms={rep['route_s']*1e3:.1f};"
+            f"max_shard_ms={max(shard_s)*1e3:.1f};"
+            f"speedup_vs_single=x{speedup:.2f}")
+        row(f"ingest_sharded.stitch{ns}", t_stitch,
+            f"m={stitched.m};vs_full_build=x{t_single_view/t_stitch:.2f}")
+        report["shards"][str(ns)] = {
+            "wall_s": rep["wall_s"],
+            "route_s": rep["route_s"],
+            "per_shard_apply_s": shard_s,
+            "per_shard_muts_per_s": per_shard_rate,
+            "modeled_parallel_s": modeled,
+            "modeled_muts_per_s": n_muts / modeled,
+            "modeled_speedup_vs_single": speedup,
+            "stitch_s": t_stitch,
+            "stitched_m": int(stitched.m),
+        }
+
+    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
+    _merge_bench_json(out, {"sharded_ingest": report})
+    row("ingest_sharded.report", 0, str(out))
 
 
 # ---------------------------------------------------------------- §3.3 axis 4
@@ -381,11 +510,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: online,offline,ingest,"
-                         "ingest_graph,replica,kernels,roofline")
+                         "ingest_graph,ingest_sharded,replica,kernels,"
+                         "roofline")
     args = ap.parse_args()
     benches = {
         "online": bench_online, "offline": bench_offline,
         "ingest": bench_ingest, "ingest_graph": bench_ingest_graph,
+        "ingest_sharded": bench_ingest_sharded,
         "replica": bench_replica,
         "kernels": bench_kernels, "roofline": bench_roofline,
     }

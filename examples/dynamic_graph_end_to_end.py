@@ -25,13 +25,14 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core.replica import ReplicaManager
-from repro.core.snapshotter import DataNode, IngestNode, Mutation, SnapshotCoordinator
 from repro.core.versioned import Version
 from repro.core.views import View
 from repro.graph import compute as gc
 from repro.graph.dyngraph import synthesize_stream
-from repro.graph.partition import comm_model, partition_graph
+from repro.graph.partition import (comm_model, partition_graph,
+                                   partition_graph_sharded)
 from repro.graph.schema import citation_schema
+from repro.graph.sharded import ShardedDynamicGraph
 
 N, EPOCHS, ADDS = 256, 8, 300
 
@@ -43,21 +44,28 @@ def main():
     print("  Author versions:", reg.versions_of("Author"),
           "| Author<2> fields:", reg.fields_of("Author", 2))
 
-    # 2) async ingestion -----------------------------------------------------
+    # 2) async sharded ingestion ----------------------------------------------
     g, batches = synthesize_stream(N, EPOCHS, ADDS, seed=42)
-    nodes = [DataNode(i) for i in range(4)]
-    coord = SnapshotCoordinator(nodes)
-    ingest = IngestNode(nodes, route=lambda k: k % 4)
-    print("\n== ingestion (no-wait dispatch, async snapshots) ==")
+    sg = ShardedDynamicGraph(4, N, EPOCHS * ADDS * 2 + 16)
+    print("\n== sharded ingestion (dst-hash routing, no-wait dispatch) ==")
     for e, batch in enumerate(batches):
-        for s, d in zip(batch.add_src, batch.add_dst):
-            ingest.dispatch(Mutation(int(d), e, (int(s), int(d))))
-        for n in nodes:
-            n.seal_epoch(e)
-        ingest.retry_blocked()
-        coord.advance()
-    print(f"  dispatched={ingest.dispatched} mutations, "
-          f"global frontier={coord.global_frontier}")
+        sg.ingest(batch)              # no-wait dispatch to 4 DataNode shards
+        if e == 0:                    # straggler demo: shard 0 seals late
+            for shard in range(1, 4):
+                sg.seal_shard(shard, e)
+            print(f"  shard 0 lagging: global frontier = "
+                  f"{sg.coordinator.global_frontier} (snapshot 0 not yet "
+                  "queryable)")
+        sg.seal_epoch(e)              # every shard sealed -> frontier moves
+    print(f"  dispatched={sg.ingest_node.dispatched} mutations, "
+          f"edges/shard={sg.shard_edge_counts()}, "
+          f"global frontier={sg.coordinator.global_frontier}")
+    stitched = sg.join_view(Version(EPOCHS - 1, 0))
+    single = g.join_view(Version(EPOCHS - 1, 0))
+    assert np.array_equal(np.asarray(stitched.src), np.asarray(single.src))
+    assert np.array_equal(np.asarray(stitched.offsets),
+                          np.asarray(single.offsets))
+    print(f"  stitched join view == single-store view ({stitched.m} edges)")
 
     # 3) online queries on sealed snapshots -----------------------------------
     v_mid = Version(EPOCHS // 2, 0)
@@ -106,6 +114,9 @@ def main():
     cm = comm_model(pg)
     print(f"  comm bytes/superstep: allgather={cm['allgather']:.0f} "
           f"scatter={cm['scatter']:.0f} hub={cm['hub']:.0f}")
+    pgs = partition_graph_sharded(sg.shard_views(v_last), hub_k=8)
+    print(f"  sharded fast path: {pgs.n_parts} partitions consumed "
+          f"pre-bucketed ({pgs.placement}-placed, no re-bucketing pass)")
 
     # 6) distributed views: failure + lineage recovery ------------------------
     print("\n== distributed views (lineage fault tolerance) ==")

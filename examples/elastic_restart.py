@@ -13,10 +13,9 @@ import tempfile
 sys.path.insert(0, "src")
 
 import jax
-import numpy as np
 
 from repro.configs import all_configs, reduced
-from repro.launch.steps import init_train_state, make_train_step
+from repro.launch.steps import make_train_step
 from repro.launch.train import run
 from repro.train.checkpoint import CheckpointManager
 from repro.train.elastic import elastic_restart

@@ -8,7 +8,7 @@ over), the mixer kinds, FFN kind, and attention details. The same
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Optional, Sequence
+from typing import Literal, Sequence
 
 MixerKind = Literal["attn", "swa", "local", "global", "rglru", "mlstm", "slstm"]
 FFNKind = Literal["swiglu", "geglu", "gelu_mlp", "moe", "none"]

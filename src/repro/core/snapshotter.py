@@ -19,11 +19,9 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Callable, Optional
+from typing import Callable
 
 import numpy as np
-
-from repro.core.versioned import Version
 
 
 @dataclasses.dataclass
@@ -34,36 +32,66 @@ class Mutation:
 
 
 class DataNode:
-    """Holds a shard of the data; seals local snapshots per epoch."""
+    """Holds a shard of the data; seals local snapshots per epoch.
 
-    def __init__(self, node_id: int):
+    ``on_seal(epoch, payloads)`` (optional) is the hook that turns the node
+    from a progress tracker into a real store: it fires inside
+    :meth:`seal_epoch` with the payload arrays received for that epoch, in
+    arrival order — the sharded graph store applies its slice of each
+    mutation batch there, so the local snapshot and the shard's state seal
+    atomically.
+    """
+
+    def __init__(self, node_id: int,
+                 on_seal: Callable[[int, list], None] | None = None):
         self.node_id = node_id
+        self.on_seal = on_seal
         self.pending: dict[int, list[Mutation]] = defaultdict(list)
         self.pending_batches: dict[int, list[np.ndarray]] = defaultdict(list)
+        self.pending_payloads: dict[int, list] = defaultdict(list)
         self.local_frontier = -1          # highest epoch locally sealed
         self.applied: list[Mutation] = []
-        self.applied_batches: list[np.ndarray] = []
+        # batched ingress is counted, not retained: the payloads were
+        # handed to on_seal and the keys would otherwise pin O(stream)
+        # memory per node
+        self.applied_batch_count = 0
 
     def receive(self, mut: Mutation) -> None:
         self.pending[mut.epoch].append(mut)
 
-    def receive_batch(self, epoch: int, keys: np.ndarray) -> None:
-        """Vectorized ingress: a whole key array for one epoch at once."""
+    def receive_batch(self, epoch: int, keys: np.ndarray,
+                      payload=None) -> None:
+        """Vectorized ingress: a whole key array for one epoch at once.
+        ``payload`` is an optional array-like riding along with the keys
+        (same leading dimension), handed to ``on_seal`` when the epoch
+        seals."""
         self.pending_batches[epoch].append(np.asarray(keys))
+        if payload is not None:
+            self.pending_payloads[epoch].append(payload)
 
     def seal_epoch(self, epoch: int) -> None:
-        """Define the local snapshot for `epoch` (applies its mutations)."""
+        """Define the local snapshot for `epoch` (applies its mutations).
+
+        ``on_seal`` runs first and the seal only commits (pending drained,
+        frontier advanced) if it returns: a failing hook — e.g. a shard
+        hitting capacity — leaves the epoch pending and re-sealable instead
+        of silently destroying its mutations.
+        """
         if epoch != self.local_frontier + 1:
             raise ValueError(
                 f"node {self.node_id}: seal {epoch} out of order "
                 f"(local frontier {self.local_frontier})")
+        if self.on_seal is not None:
+            self.on_seal(epoch, self.pending_payloads.get(epoch, []))
         self.applied.extend(self.pending.pop(epoch, []))
-        self.applied_batches.extend(self.pending_batches.pop(epoch, []))
+        self.applied_batch_count += sum(
+            len(a) for a in self.pending_batches.pop(epoch, []))
+        self.pending_payloads.pop(epoch, None)
         self.local_frontier = epoch
 
     @property
     def applied_count(self) -> int:
-        return len(self.applied) + sum(len(a) for a in self.applied_batches)
+        return len(self.applied) + self.applied_batch_count
 
 
 class SnapshotCoordinator:
@@ -111,7 +139,7 @@ class IngestNode:
         self.nodes = nodes
         self.route = route
         self.blocked: list[Mutation] = []
-        self.blocked_batches: list[tuple[int, np.ndarray]] = []
+        self.blocked_batches: list[tuple[int, np.ndarray, object]] = []
         self.dispatched = 0
 
     def dispatch(self, mut: Mutation) -> bool:
@@ -129,7 +157,8 @@ class IngestNode:
         muts, self.blocked = self.blocked, []
         return sum(self.dispatch(m) for m in muts)
 
-    def dispatch_batch(self, keys: np.ndarray, epochs: np.ndarray) -> int:
+    def dispatch_batch(self, keys: np.ndarray, epochs: np.ndarray,
+                       payload=None) -> int:
         """Vectorized no-wait dispatch: route a whole mutation array at once.
 
         Applies the same per-mutation rule as :meth:`dispatch` (target
@@ -138,6 +167,12 @@ class IngestNode:
         step per distinct (node, epoch) group instead of per mutation.
         Ineligible mutations are parked in ``blocked_batches``. Returns the
         number dispatched now.
+
+        ``payload`` optionally carries per-mutation data (any array-like
+        supporting fancy row indexing, same leading dimension as ``keys``);
+        each (node, epoch) group's payload slice is delivered with its keys
+        and surfaced to the node's ``on_seal`` hook at seal time. Grouping
+        is stable, so a group's payload rows keep their original order.
         """
         keys = np.asarray(keys)
         epochs = np.asarray(epochs)
@@ -152,6 +187,22 @@ class IngestNode:
                                   np.int64)
         frontiers = np.asarray([n.local_frontier for n in self.nodes])
         ok = frontiers[node_ids] >= epochs - 1
+        # steady-state fast path: one epoch, every node caught up — group by
+        # node with a single stable sort, no eligibility partition
+        if ok.all() and (epochs == epochs[0]).all():
+            epoch = int(epochs[0])
+            order = np.argsort(node_ids, kind="stable")
+            sorted_nodes = node_ids[order]
+            starts = np.flatnonzero(
+                np.r_[True, sorted_nodes[1:] != sorted_nodes[:-1]])
+            bounds = np.r_[starts, len(order)]
+            for a, b in zip(bounds[:-1], bounds[1:]):
+                rows = order[a:b]
+                self.nodes[int(sorted_nodes[a])].receive_batch(
+                    epoch, keys[rows],
+                    payload[rows] if payload is not None else None)
+            self.dispatched += len(keys)
+            return len(keys)
         for eligible, sink in ((ok, True), (~ok, False)):
             idx = np.flatnonzero(eligible)
             if not idx.size:
@@ -163,11 +214,13 @@ class IngestNode:
             for a, b in zip(bounds[:-1], bounds[1:]):
                 rows = order[a:b]
                 epoch = int(epochs[rows[0]])
+                rows_payload = payload[rows] if payload is not None else None
                 if sink:
                     self.nodes[int(node_ids[rows[0]])].receive_batch(
-                        epoch, keys[rows])
+                        epoch, keys[rows], rows_payload)
                 else:
-                    self.blocked_batches.append((epoch, keys[rows]))
+                    self.blocked_batches.append(
+                        (epoch, keys[rows], rows_payload))
         n_ok = int(ok.sum())
         self.dispatched += n_ok
         return n_ok
@@ -175,6 +228,7 @@ class IngestNode:
     def retry_blocked_batches(self) -> int:
         batches, self.blocked_batches = self.blocked_batches, []
         done = 0
-        for epoch, keys in batches:
-            done += self.dispatch_batch(keys, np.full(len(keys), epoch))
+        for epoch, keys, payload in batches:
+            done += self.dispatch_batch(keys, np.full(len(keys), epoch),
+                                        payload)
         return done

@@ -8,7 +8,7 @@ online side reads materialized views; the offline side (re)builds them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional
 
 from repro.core.versioned import Version
 

@@ -15,7 +15,7 @@ usable while mutations stream (snapshot isolation via the versioned store).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -139,6 +139,76 @@ def _edge_keys(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
     return (dst.astype(np.int64) << 32) | src.astype(np.int64)
 
 
+def prune_views(views: dict, budget: int) -> int:
+    """Drop cached views down to the :func:`ladder_keep` retention set,
+    in place. Shared by the single store and the sharded stitched cache so
+    the retention policy cannot diverge. Returns the number dropped."""
+    if len(views) <= budget:
+        return 0
+    keep = set(ladder_keep(sorted(views, reverse=True), budget))
+    drop = [k for k in views if k not in keep]
+    for k in drop:
+        del views[k]
+    return len(drop)
+
+
+def build_join_view(version: Version, n: int, keys, src_s, dst_s,
+                    in_deg, out_deg) -> JoinView:
+    """Assemble a JoinView from canonical (dst, src)-ordered rows + degree
+    arrays. Shared by the single store, the delta patcher, and the sharded
+    stitcher so all three produce byte-identical CSRs."""
+    offsets = np.zeros(n + 1, np.int64)
+    np.cumsum(in_deg, out=offsets[1:])
+    return JoinView(version, n, jnp.asarray(offsets),
+                    jnp.asarray(src_s), jnp.asarray(dst_s),
+                    jnp.asarray(out_deg.astype(np.float32)),
+                    jnp.asarray(in_deg.astype(np.float32)),
+                    np_keys=keys, np_src=src_s, np_dst=dst_s,
+                    np_in_deg=np.asarray(in_deg, np.int64),
+                    np_out_deg=np.asarray(out_deg, np.int64))
+
+
+def ladder_keep(keys_desc: list[int], budget: int) -> list[int]:
+    """Pick which cached view versions to retain under a budget: a
+    version-spaced ladder rather than the newest K.
+
+    With delta maintenance the best rebuild base is the *nearest older*
+    view, so newest-K retention leaves every pre-window version with no
+    nearby base (ROADMAP: churn-adaptive view GC). Retention is an
+    exponential histogram over distance-from-newest: bucket j spans
+    distances [d·2^j, d·2^(j+1)) where d is the gap to the second-newest
+    view, and the nearest view per bucket is kept, for at most
+    ``budget - 1`` buckets. Any version inside the span then has a
+    retained base within ~2x its distance from the frontier, and —
+    crucially for repeated GC under a live stream — views beyond the last
+    rung are dropped no matter what, so the retained set (and the
+    ingestion delta log floored at its minimum) tracks the frontier
+    instead of pinning the oldest view forever. ``budget`` is a cap (a
+    bucket can swallow several views, so fewer may be retained).
+
+    ``keys_desc`` must be sorted descending; returns the retained subset
+    (descending). The two newest entries are always kept, so budget 2
+    degenerates to newest-2 exactly.
+    """
+    n = len(keys_desc)
+    if budget <= 0 or n == 0:
+        return []
+    if budget >= n:
+        return list(keys_desc)
+    newest = keys_desc[0]
+    d_min = max(newest - keys_desc[1], 1)
+    keep = [newest]
+    last_bucket = -1
+    for k in keys_desc[1:]:
+        bucket = ((newest - k) // d_min).bit_length() - 1
+        if bucket > budget - 2:
+            break                      # beyond the last rung: drop the tail
+        if bucket > last_bucket and len(keep) < budget:
+            keep.append(k)
+            last_bucket = bucket
+    return keep
+
+
 class DynamicGraph:
     """Capacity-bounded versioned edge store + vertex table."""
 
@@ -294,16 +364,8 @@ class DynamicGraph:
 
     def _make_view(self, version: Version, keys, src_s, dst_s,
                    in_deg, out_deg) -> JoinView:
-        n = self.n_max
-        offsets = np.zeros(n + 1, np.int64)
-        np.cumsum(in_deg, out=offsets[1:])
-        return JoinView(version, n, jnp.asarray(offsets),
-                        jnp.asarray(src_s), jnp.asarray(dst_s),
-                        jnp.asarray(out_deg.astype(np.float32)),
-                        jnp.asarray(in_deg.astype(np.float32)),
-                        np_keys=keys, np_src=src_s, np_dst=dst_s,
-                        np_in_deg=np.asarray(in_deg, np.int64),
-                        np_out_deg=np.asarray(out_deg, np.int64))
+        return build_join_view(version, self.n_max, keys, src_s, dst_s,
+                               in_deg, out_deg)
 
     def _delta_patch(self, key: int, version: Version) -> Optional[JoinView]:
         """Patch the newest cached view with version < key, or None if no
@@ -372,21 +434,30 @@ class DynamicGraph:
     def gc_views(self, keep_latest: int = 4) -> int:
         """Collect obsolete join views (paper §2.2 obsolete-replica GC).
 
+        Retention is churn-adaptive: instead of the newest ``keep_latest``
+        views, a version-spaced *ladder* (:func:`ladder_keep`) is kept, so a
+        request for any past version finds a delta-patch base within ~2x its
+        distance from the frontier under the same budget.
+
         Also trims the ingestion delta log: records at or below the oldest
         retained view's version can never contribute to a future delta
         patch from a retained base, so the log stays bounded by the churn
         since the oldest view instead of growing with the whole stream.
+        The trim runs even when no view is dropped (with no cached views
+        at all, everything up to the newest applied version is trimmed —
+        any later-cached old view is then below the floor and rebuilds
+        from scratch, never from missing records).
         """
-        if len(self._views) <= keep_latest:
+        dropped = prune_views(self._views, keep_latest)
+        if self._views:
+            floor = min(self._views)
+        elif self.versions:
+            floor = self.versions[-1].pack()
+        else:
             return 0
-        keys = sorted(self._views)
-        drop = keys[:-keep_latest]
-        for k in drop:
-            del self._views[k]
-        floor = min(self._views)
         self._batch_log = [r for r in self._batch_log if r.version > floor]
         self._log_floor = max(self._log_floor, floor)
-        return len(drop)
+        return dropped
 
 
 # ----------------------------------------------------------- synthetic data

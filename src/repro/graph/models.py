@@ -13,15 +13,12 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Callable, Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.protocol_dataflow import (CoalescingOutput, Dataflow, Egress,
-                                          Ingress, PriorityScheduler,
-                                          Protocol, Vertex)
+                                          Ingress, Protocol, Vertex)
 from repro.graph.dyngraph import JoinView
 
 

@@ -22,7 +22,6 @@ benchmark (and tests) can verify the policy's decision analytically — on the
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +43,10 @@ class PartitionedGraph:
     out_degree: jnp.ndarray     # (n,)
     hubs: jnp.ndarray           # (k,) global ids of mirrored hub vertices
     is_hub: jnp.ndarray         # (n,) bool
+    # "src": contiguous src-range placement (edge values local at scatter
+    # time — all modes valid). "dst_hash": pre-sharded by destination hash
+    # (the ShardedDynamicGraph layout — allgather mode only).
+    placement: str = "src"
 
     @property
     def n_local(self) -> int:
@@ -79,6 +82,49 @@ def partition_graph(view: JoinView, n_parts: int, *, hub_k: int = 0,
                             jnp.asarray(hubs), jnp.asarray(is_hub))
 
 
+def partition_graph_sharded(shard_views, *, hub_k: int = 0,
+                            pad_to: int | None = None) -> PartitionedGraph:
+    """Fast path: build a PartitionedGraph from pre-sharded per-shard join
+    views (``ShardedDynamicGraph.shard_views``) without re-bucketing.
+
+    ``partition_graph`` pays an O(P·m) mask-and-gather pass to bucket a
+    global edge list; here each shard's rows ARE its partition's rows
+    already, so construction is one padded copy per shard. The placement is
+    the store's dst-hash layout, which supports the ``allgather`` compute
+    mode (partial aggregates merge by ``psum_scatter`` regardless of edge
+    placement); ``scatter``/``hub`` need src placement and are rejected by
+    ``distributed_join_group_by``.
+    """
+    if not shard_views:
+        raise ValueError("no shard views")
+    n_parts = len(shard_views)
+    n = ((shard_views[0].n + n_parts - 1) // n_parts) * n_parts
+    widest = max(v.m for v in shard_views)
+    m_pad = pad_to or max(1, widest)
+    if m_pad < widest:
+        raise ValueError(
+            f"pad_to={m_pad} would silently drop edges (widest shard has "
+            f"{widest}); pass pad_to >= {widest}")
+    ps = np.zeros((n_parts, m_pad), np.int32)
+    pd = np.zeros((n_parts, m_pad), np.int32)
+    pm = np.zeros((n_parts, m_pad), bool)
+    deg = np.zeros(n, np.float32)
+    for p, view in enumerate(shard_views):
+        m = view.m
+        ps[p, :m] = view.np_src
+        pd[p, :m] = view.np_dst
+        pm[p, :m] = True
+        deg[:view.n] += view.np_out_deg
+    hubs = np.argsort(-deg)[:hub_k].astype(np.int32) if hub_k else \
+        np.zeros(0, np.int32)
+    is_hub = np.zeros(n, bool)
+    is_hub[hubs] = True
+    return PartitionedGraph(n, n_parts, jnp.asarray(ps), jnp.asarray(pd),
+                            jnp.asarray(pm), jnp.asarray(deg),
+                            jnp.asarray(hubs), jnp.asarray(is_hub),
+                            placement="dst_hash")
+
+
 def _local_partials(src, dst, mask, values_full, n, exclude_hubs=None):
     contrib = values_full[src] * mask
     if exclude_hubs is not None:
@@ -91,6 +137,10 @@ def distributed_join_group_by(pg: PartitionedGraph, values: jnp.ndarray,
     """values: (n,) globally sharded over 'data' as (P, n_local) rows.
     Returns the aggregate, sharded the same way."""
     n, nl = pg.n, pg.n_local
+    if pg.placement != "src" and mode in ("scatter", "hub"):
+        raise ValueError(
+            f"mode {mode!r} needs src-placed edges (local values at scatter "
+            f"time); this graph is {pg.placement!r}-placed — use 'allgather'")
     values = values.reshape(pg.n_parts, nl)
 
     if mode == "allgather":

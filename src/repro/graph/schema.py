@@ -14,7 +14,7 @@ The registry supports the paper's two usage patterns:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,7 +34,8 @@ class NodeSchema:
 @dataclasses.dataclass(frozen=True)
 class LinkSchema:
     src_type: str
-    src_version: Optional[int]   # None = any version (paper: Author<V2> -> School<Version V>)
+    # None = any version (paper: Author<V2> -> School<Version V>)
+    src_version: Optional[int]
     dst_type: str
     dst_version: Optional[int]
 

@@ -1,0 +1,345 @@
+"""Sharded dynamic-graph store — the paper's distributed data model on top
+of the vectorized single store.
+
+The evolving graph is distributed across ``core.snapshotter.DataNode``s,
+one :class:`~repro.graph.dyngraph.DynamicGraph` shard per node, with
+mutations routed by **destination vertex** — the same hash route
+``IngestNode`` uses — so every edge (and every delete of it) lands on
+exactly one shard and shard-local LIFO delete semantics equal the global
+ones. Ingestion goes through ``IngestNode.dispatch_batch`` with the encoded
+mutations riding along as a payload: the paper's no-wait rule applies
+unchanged (a shard whose local frontier lags parks its slice in
+``blocked_batches``; healthy shards keep ingesting), and a shard *applies*
+its slice inside ``DataNode.seal_epoch`` via the ``on_seal`` hook, so the
+local snapshot and the shard store seal atomically.
+
+Each shard maintains its own delta-patched join view over its slice;
+:meth:`ShardedDynamicGraph.join_view` stitches the per-shard CSRs into a
+global :class:`~repro.graph.dyngraph.JoinView` that is byte-identical to
+the single store's (per-shard rows are already in canonical (dst, src)
+order and a key can only live on one shard, so a stable merge reproduces
+the canonical global order exactly). The ``SnapshotCoordinator`` frontier
+gates which epochs are queryable: a snapshot is only addressable once every
+shard has sealed it, which is the paper's global-snapshot rule.
+
+For distributed compute, :meth:`shard_views` exposes the pre-sharded
+per-shard views directly — ``partition.partition_graph_sharded`` consumes
+them without re-bucketing edges.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.snapshotter import DataNode, IngestNode, SnapshotCoordinator
+from repro.core.versioned import Version
+from repro.graph.dyngraph import (DEFAULT_CHURN_THRESHOLD, DynamicGraph,
+                                  JoinView, MutationBatch, build_join_view,
+                                  prune_views)
+
+# payload row kinds, in the order DynamicGraph.apply processes them
+K_VERTEX, K_ADD, K_DEL = 0, 1, 2
+
+
+def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
+                                                    np.ndarray]:
+    """Flatten a MutationBatch into (keys, epochs, payload) for
+    ``IngestNode.dispatch_batch``.
+
+    keys are the routing keys (dst for edges, the vertex id for vertex
+    adds); payload rows are ``(kind, a, b, packed_version)`` int64 — kind
+    ordering (vertices, then edge adds, then deletes) matches the order
+    ``DynamicGraph.apply`` processes a batch, so a shard replaying its rows
+    in payload order reproduces the single store's semantics.
+    """
+    v = batch.version.pack()
+    n_typed = min(len(batch.add_vertices), len(batch.vertex_types))
+    n_add = len(batch.add_src)
+    n_del = len(batch.del_src)
+    total = n_typed + n_add + n_del
+    if not total:
+        z = np.zeros(0, np.int64)
+        return z, z, np.zeros((0, 4), np.int64)
+    payload = np.empty((total, 4), np.int64)
+    payload[:, 3] = v
+    payload[:n_typed, 0] = K_VERTEX
+    payload[:n_typed, 1] = batch.add_vertices[:n_typed]
+    payload[:n_typed, 2] = batch.vertex_types[:n_typed]
+    a = n_typed + n_add
+    payload[n_typed:a, 0] = K_ADD
+    payload[n_typed:a, 1] = batch.add_src
+    payload[n_typed:a, 2] = batch.add_dst
+    payload[a:, 0] = K_DEL
+    payload[a:, 1] = batch.del_src
+    payload[a:, 2] = batch.del_dst
+    key_arr = np.empty(total, np.int64)
+    key_arr[:n_typed] = batch.add_vertices[:n_typed]  # vertex id routes home
+    key_arr[n_typed:a] = batch.add_dst
+    key_arr[a:] = batch.del_dst
+    epochs = np.full(total, batch.version.epoch, np.int64)
+    return key_arr, epochs, payload
+
+
+def decode_payloads(payloads: list[np.ndarray]) -> list[MutationBatch]:
+    """Reassemble a shard's payload rows (arrival order) into per-version
+    MutationBatches, preserving within-batch mutation order."""
+    if not payloads:
+        return []
+    rows = np.concatenate(payloads, axis=0) if len(payloads) > 1 \
+        else payloads[0]
+    out = []
+    # versions are strictly increasing across ingests, so arrival order is
+    # already version-grouped; the common case is a single version per seal
+    if rows[0, 3] == rows[-1, 3]:
+        versions = rows[:1, 3]
+    else:
+        versions = np.unique(rows[:, 3])
+    for v in versions:
+        grp = rows if len(versions) == 1 else rows[rows[:, 3] == v]
+        kind, a, b = grp[:, 0], grp[:, 1], grp[:, 2]
+        vert = kind == K_VERTEX
+        add = kind == K_ADD
+        dele = kind == K_DEL
+        out.append(MutationBatch(
+            Version.unpack(int(v)),
+            add_src=a[add].astype(np.int32),
+            add_dst=b[add].astype(np.int32),
+            del_src=a[dele].astype(np.int32),
+            del_dst=b[dele].astype(np.int32),
+            add_vertices=a[vert].astype(np.int32),
+            vertex_types=b[vert].astype(np.int32)))
+    return out
+
+
+def stitch_join_views(version: Version,
+                      views: list[JoinView]) -> JoinView:
+    """Merge per-shard canonical CSRs into the global one.
+
+    Every (src, dst) key lives on exactly one shard (dst-hash routing) and
+    each shard's rows are already (dst, src)-sorted, so a stable argsort of
+    the concatenated keys is a duplicate-safe k-way merge: the result is
+    byte-identical to the single store's canonical CSR.
+    """
+    if not views:
+        raise ValueError("no shard views to stitch")
+    n = views[0].n
+    keys = np.concatenate([v.np_keys for v in views])
+    src = np.concatenate([v.np_src for v in views])
+    dst = np.concatenate([v.np_dst for v in views])
+    order = np.argsort(keys, kind="stable")
+    in_deg = np.zeros(n, np.int64)
+    out_deg = np.zeros(n, np.int64)
+    for v in views:
+        in_deg += v.np_in_deg
+        out_deg += v.np_out_deg
+    return build_join_view(version, n, keys[order], src[order], dst[order],
+                           in_deg, out_deg)
+
+
+class ShardedDynamicGraph:
+    """N DynamicGraph shards behind an IngestNode + SnapshotCoordinator.
+
+    ``e_max`` is the **per-shard** edge capacity. ``route`` maps a routing
+    key (destination vertex / vertex id) to a shard id and must be
+    NumPy-vectorizable for the batched dispatch fast path; the default is
+    the same modular hash the examples use for ``IngestNode``.
+
+    The synchronous driving pattern is one batch per epoch::
+
+        sg.ingest(batch)                  # no-wait dispatch to shards
+        sg.seal_epoch(batch.version.epoch)  # seal + apply + advance frontier
+
+    (or ``sg.apply(batch)`` for both at once). Per-shard sealing
+    (``seal_shard``) lets a straggler shard lag: its slice stays parked and
+    the global frontier — and therefore ``join_view`` — holds back until it
+    catches up.
+    """
+
+    def __init__(self, n_shards: int, n_max: int, e_max: int, *,
+                 churn_threshold: float = DEFAULT_CHURN_THRESHOLD,
+                 route: Optional[Callable] = None):
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        self.n_shards = n_shards
+        self.n_max = n_max
+        self.e_max = e_max
+        self.route = route if route is not None else (lambda k: k % n_shards)
+        self.shards = [DynamicGraph(n_max, e_max, churn_threshold)
+                       for _ in range(n_shards)]
+        self.nodes = [DataNode(i, on_seal=self._on_seal(i))
+                      for i in range(n_shards)]
+        self.coordinator = SnapshotCoordinator(self.nodes)
+        self.ingest_node = IngestNode(self.nodes, route=self.route)
+        self._views: dict[int, JoinView] = {}
+        self._last_version = -1
+        # per-shard cumulative apply seconds — the benchmark's critical-path
+        # model of parallel shard ingestion reads these
+        self.shard_apply_seconds = [0.0] * n_shards
+
+    def _on_seal(self, shard_id: int) -> Callable[[int, list], None]:
+        def on_seal(epoch: int, payloads: list) -> None:
+            t0 = time.perf_counter()
+            shard = self.shards[shard_id]
+            batches = decode_payloads(payloads)
+            # pre-check capacity across the WHOLE epoch so a failed seal is
+            # a no-op (DynamicGraph.apply is atomic per batch; this makes
+            # the seal atomic per epoch) — the epoch stays pending and can
+            # be re-sealed after intervention
+            adds = sum(len(b.add_src) for b in batches)
+            if shard.n_edges + adds > shard.e_max:
+                raise MemoryError(
+                    f"shard {shard_id}: epoch {epoch} adds {adds} edges to "
+                    f"{shard.n_edges}/{shard.e_max}; seal aborted, epoch "
+                    "left pending")
+            for batch in batches:
+                shard.apply(batch)
+            self.shard_apply_seconds[shard_id] += time.perf_counter() - t0
+        return on_seal
+
+    # -- ingestion ---------------------------------------------------------
+    def ingest(self, batch: MutationBatch) -> int:
+        """No-wait dispatch of one mutation batch; returns the number of
+        mutations dispatched now (the rest park until shards catch up).
+
+        Multiple batches per epoch are fine, but an epoch is closed for
+        ingestion once ANY shard has sealed it — a slice delivered to a
+        sealed local snapshot could never be applied, so that is an error
+        here rather than silent loss.
+        """
+        v = batch.version.pack()
+        if v <= self._last_version:
+            raise ValueError("mutation batches must have increasing versions")
+        sealed = max(n.local_frontier for n in self.nodes)
+        if batch.version.epoch <= sealed:
+            raise ValueError(
+                f"epoch {batch.version.epoch} is already sealed on some "
+                f"shard (max local frontier {sealed}); ingest batches "
+                "before sealing their epoch")
+        self._last_version = v
+        keys, epochs, payload = encode_mutations(batch)
+        if not keys.size:
+            return 0
+        return self.ingest_node.dispatch_batch(keys, epochs, payload)
+
+    def seal_epoch(self, epoch: int) -> int:
+        """Seal ``epoch`` on every shard (applying parked + pending slices)
+        and advance the global frontier. Returns the new global frontier.
+
+        Seals one epoch per shard per round with a blocked-batch retry
+        between rounds: a slice parked because its shard lagged several
+        epochs becomes dispatchable the moment the previous epoch seals,
+        and must land before its own epoch seals.
+        """
+        while any(n.local_frontier < epoch for n in self.nodes):
+            self.ingest_node.retry_blocked_batches()
+            for node in self.nodes:
+                if node.local_frontier < epoch:
+                    node.seal_epoch(node.local_frontier + 1)
+        self.ingest_node.retry_blocked_batches()
+        return self.coordinator.advance()
+
+    def seal_shard(self, shard_id: int, epoch: int) -> int:
+        """Seal one shard through ``epoch`` (straggler-paced sealing) and
+        advance the global frontier."""
+        node = self.nodes[shard_id]
+        while node.local_frontier < epoch:
+            self.ingest_node.retry_blocked_batches()
+            node.seal_epoch(node.local_frontier + 1)
+        self.ingest_node.retry_blocked_batches()
+        return self.coordinator.advance()
+
+    def apply(self, batch: MutationBatch) -> None:
+        """Ingest + seal in one step (the DynamicGraph-compatible path)."""
+        self.ingest(batch)
+        self.seal_epoch(batch.version.epoch)
+
+    # -- snapshots ---------------------------------------------------------
+    def _gate(self, version: Version) -> None:
+        if version.epoch > self.coordinator.global_frontier:
+            raise ValueError(
+                f"epoch {version.epoch} is not globally sealed (frontier "
+                f"{self.coordinator.global_frontier}); snapshots become "
+                "queryable once every shard seals them")
+
+    def shard_views(self, version: Version,
+                    use_kernel: bool = False) -> list[JoinView]:
+        """Per-shard join views for a sealed snapshot — pre-sharded input
+        for ``partition.partition_graph_sharded`` (no re-bucketing)."""
+        self._gate(version)
+        return [s.join_view(version, use_kernel=use_kernel)
+                for s in self.shards]
+
+    def join_view(self, version: Version,
+                  use_kernel: bool = False) -> JoinView:
+        """The stitched global CSR for a sealed snapshot (cached)."""
+        key = version.pack()
+        if key in self._views:
+            return self._views[key]
+        view = stitch_join_views(version,
+                                 self.shard_views(version,
+                                                  use_kernel=use_kernel))
+        self._views[key] = view
+        return view
+
+    def gc_views(self, keep_latest: int = 4) -> int:
+        """Ladder-GC every shard's view cache plus the stitched cache."""
+        dropped = sum(s.gc_views(keep_latest) for s in self.shards)
+        return dropped + prune_views(self._views, keep_latest)
+
+    # -- merged vertex/edge state -----------------------------------------
+    @property
+    def n_edges(self) -> int:
+        return sum(s.n_edges for s in self.shards)
+
+    @property
+    def v_created(self) -> np.ndarray:
+        """Global creation stamps: a vertex exists from the earliest version
+        any shard created it (explicit add on its home shard, or endpoint
+        auto-creation wherever its edges landed)."""
+        out = self.shards[0].v_created.copy()
+        for s in self.shards[1:]:
+            np.minimum(out, s.v_created, out=out)
+        return out
+
+    @property
+    def v_type(self) -> np.ndarray:
+        """Global vertex types. Typed adds only ever land on a vertex's home
+        shard (vertex-id routing), so the home shard's type is authoritative
+        — unless another shard auto-created the vertex strictly earlier, in
+        which case the global semantics are an untyped (0) creation."""
+        created = self.v_created
+        ids = np.arange(self.n_max, dtype=np.int64)
+        try:
+            home = np.asarray(self.route(ids))
+            if home.shape != ids.shape:
+                raise TypeError
+        except Exception:
+            # route not vectorizable — elementwise, as in dispatch_batch
+            home = np.asarray([self.route(int(k)) for k in ids], np.int64)
+        out = np.zeros(self.n_max, np.int32)
+        for i, s in enumerate(self.shards):
+            mine = (home == i) & (s.v_created == created)
+            out[mine] = s.v_type[mine]
+        return out
+
+    @property
+    def n_vertices(self) -> int:
+        return int((self.v_created != np.iinfo(np.int64).max).sum())
+
+    def num_vertices(self, version: Optional[Version] = None) -> int:
+        if version is None:
+            return self.n_vertices
+        return int((self.v_created <= version.pack()).sum())
+
+    @property
+    def view_delta_patches(self) -> int:
+        return sum(s.view_delta_patches for s in self.shards)
+
+    @property
+    def view_full_builds(self) -> int:
+        return sum(s.view_full_builds for s in self.shards)
+
+    def shard_edge_counts(self) -> list[int]:
+        return [s.n_edges for s in self.shards]

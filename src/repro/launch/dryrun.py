@@ -88,9 +88,10 @@ def shardings_for(cfg, shape_name, mesh, multi_pod):
                                    serve=cell.kind != "train",
                                    expert_sharding=cfg.expert_sharding)
     rules = shd.ShardingRules(mesh, mapping)
-    ns = lambda spec: NamedSharding(mesh, spec)
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
     ins = input_specs(cfg, shape_name)
-    batch_axes = mapping["batch"]
 
     def batch_sharding(tree):
         def leaf(x):

@@ -60,7 +60,6 @@ class Server:
         params_like = jax.tree.map(
             lambda s: np.zeros(s.shape, s.dtype), like["params"])
         # checkpoints store the full train state; restore params subtree
-        import jax as _jax
         state_like = {"params": params_like}
         try:
             state = mgr.restore({"params": params_like,

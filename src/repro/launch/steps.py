@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.launch.sharding import constrain
 from repro.models import transformer as tf
 from repro.train.loss import chunked_cross_entropy
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state

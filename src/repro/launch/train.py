@@ -16,11 +16,9 @@ Usage (CPU, reduced config):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import all_configs, reduced
@@ -28,7 +26,7 @@ from repro.core.protocol_dataflow import Dataflow, Egress, Ingress, Protocol, Ve
 from repro.launch.steps import init_train_state, make_train_step
 from repro.train.checkpoint import CheckpointManager
 from repro.train.compression import compress_grads, init_error_state
-from repro.train.data import TokenPipeline, unigram_entropy_floor
+from repro.train.data import TokenPipeline
 
 TRAIN = Protocol("train-loop", validate=lambda m: isinstance(m, tuple))
 

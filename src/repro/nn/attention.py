@@ -61,8 +61,10 @@ def _project_qkv(p, x, cfg, positions):
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
     if cfg.rope:
-        q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
-        k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+        q = apply_rope(q.swapaxes(1, 2), positions[:, None, :],
+                       cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions[:, None, :],
+                       cfg.rope_theta).swapaxes(1, 2)
     # (B, H, S, hd)
     return q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2)
 

@@ -130,7 +130,8 @@ def init_mlstm_block(key, cfg):
         "wk": Init(ks[3], (h, hd, hd), cfg.param_dtype),
         "wv": Init(ks[4], (h, hd, hd), cfg.param_dtype),
         "w_if": Init(ks[5], (dp, 2 * h), cfg.param_dtype),
-        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]).astype(jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)),
+                                 jnp.full((h,), 3.0)]).astype(jnp.float32),
         "head_norm": jnp.zeros((dp,), jnp.float32),
         "down": Init(ks[6], (dp, d), cfg.param_dtype),
     }

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 
 import jax
 import numpy as np

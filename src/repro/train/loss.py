@@ -7,8 +7,6 @@ trick that keeps the 262k-vocab gemma3 train cell inside 16 GB/chip.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -6,7 +6,6 @@ PartitionSpecs), which is what makes the 110B cells fit 16 GB/chip.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

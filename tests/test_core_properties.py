@@ -155,6 +155,51 @@ def test_no_wait_dispatch_and_monotone_global(muts):
     assert not ingest.blocked
 
 
+def test_straggler_shard_holds_global_frontier():
+    """A shard whose epoch is unsealed gates the global frontier: healthy
+    shards may run arbitrarily far ahead, the min still rules."""
+    nodes = [DataNode(i) for i in range(3)]
+    coord = SnapshotCoordinator(nodes)
+    for epoch in range(4):
+        for n in nodes[:-1]:
+            n.seal_epoch(epoch)
+        assert coord.advance() == -1      # straggler never sealed anything
+    assert [n.local_frontier for n in nodes] == [3, 3, -1]
+    nodes[-1].seal_epoch(0)
+    assert coord.advance() == 0           # frontier = straggler's frontier
+    for epoch in range(1, 4):
+        nodes[-1].seal_epoch(epoch)
+        assert coord.advance() == epoch
+    # monotone history throughout
+    assert coord._history == sorted(coord._history)
+
+
+def test_schedule_on_snapshot_fires_exactly_once():
+    """Callbacks run exactly once: immediately if the snapshot is already
+    global, else on the first advance() that covers them — never again on
+    later advances."""
+    nodes = [DataNode(0), DataNode(1)]
+    coord = SnapshotCoordinator(nodes)
+    fired = []
+    coord.schedule_on_snapshot(1, lambda: fired.append("e1"))
+    nodes[0].seal_epoch(0)
+    nodes[0].seal_epoch(1)
+    for _ in range(3):                    # straggler: repeated advances
+        coord.advance()                   # must not fire (or double-fire)
+    assert fired == []
+    nodes[1].seal_epoch(0)
+    nodes[1].seal_epoch(1)
+    coord.advance()
+    assert fired == ["e1"]
+    for _ in range(3):
+        coord.advance()                   # already-fired callback stays gone
+    assert fired == ["e1"]
+    coord.schedule_on_snapshot(0, lambda: fired.append("past"))
+    assert fired == ["e1", "past"]        # past snapshot: immediate, once
+    coord.advance()
+    assert fired == ["e1", "past"]
+
+
 def test_computation_waits_for_global_snapshot():
     nodes = [DataNode(0), DataNode(1)]
     coord = SnapshotCoordinator(nodes)

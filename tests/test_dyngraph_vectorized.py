@@ -118,6 +118,76 @@ def test_gc_views_trims_batch_log_safely():
     _assert_views_equal(g, ref, Version(4, 0))
 
 
+def test_gc_views_keeps_version_spaced_ladder():
+    """Churn-adaptive GC: retention is a doubling-gap ladder (newest,
+    newest-1, newest-3, newest-7, ...) instead of newest-K, so any past
+    version keeps a nearby delta-patch base; patched results stay
+    byte-identical to full rebuilds from a cold store."""
+    batches = synthesize_churn_stream(32, 12, 30, seed=13, delete_frac=0.2)
+    g = DynamicGraph(32, 4096, churn_threshold=10.0)
+    ref = LoopDynamicGraph(32, 4096)
+    for b in batches:
+        g.apply(b)
+        ref.apply(b)
+        g.join_view(b.version)
+    g.gc_views(keep_latest=4)
+    kept = sorted(Version.unpack(k).epoch for k in g._views)
+    assert kept == [7, 9, 10, 11]   # one per doubling-distance bucket
+    # a version near an old ladder rung patches from it (not a rebuild)
+    before = g.view_delta_patches
+    _assert_views_equal(g, ref, Version(8, 0))
+    assert g.view_delta_patches == before + 1
+    # every epoch stays addressable and byte-identical
+    for e in range(12):
+        _assert_views_equal(g, ref, Version(e, 0))
+
+
+def test_gc_views_ladder_converges_under_live_stream():
+    """Regression: repeated per-epoch GC must not pin the oldest views —
+    the retained span (and therefore the ingestion delta log) has to track
+    the frontier, staying bounded by ~2^(budget-1) epochs of churn instead
+    of growing with the whole stream."""
+    budget = 4
+    n_epochs = 40
+    batches = synthesize_churn_stream(32, n_epochs, 20, seed=17,
+                                      delete_frac=0.2)
+    g = DynamicGraph(32, 8192, churn_threshold=10.0)
+    for b in batches:
+        g.apply(b)
+        g.join_view(b.version)
+        g.gc_views(keep_latest=budget)
+    span = 1 << (budget - 1)
+    oldest_kept = Version.unpack(min(g._views)).epoch
+    assert oldest_kept >= n_epochs - 1 - span
+    assert len(g._batch_log) <= span
+    assert Version.unpack(max(g._views)).epoch == n_epochs - 1
+
+
+def test_gc_views_trims_log_even_without_dropping_views():
+    """Regression: a stream that caches few views (<= keep_latest) must
+    still get its delta log trimmed by gc_views — the log otherwise grows
+    with the whole stream."""
+    batches = synthesize_churn_stream(32, 20, 10, seed=3, delete_frac=0.2)
+    g = DynamicGraph(32, 4096)
+    ref = LoopDynamicGraph(32, 4096)
+    for b in batches:
+        g.apply(b)
+        ref.apply(b)
+    g.join_view(batches[-1].version)          # one cached view
+    assert len(g._batch_log) == 20
+    assert g.gc_views(keep_latest=4) == 0     # nothing to drop...
+    assert len(g._batch_log) == 0             # ...but the log still trims
+    # with NO cached views the log trims to the newest applied version
+    g2 = DynamicGraph(32, 4096)
+    for b in batches:
+        g2.apply(b)
+    g2.gc_views()
+    assert len(g2._batch_log) == 0
+    # late queries below the floor stay correct (full rebuild, no patch)
+    _assert_views_equal(g2, ref, Version(10, 0))
+    _assert_views_equal(g2, ref, Version(19, 0))
+
+
 def test_apply_evicts_stale_future_views():
     """Regression: a view cached for a not-yet-applied version must be
     evicted when a batch at or before that version lands."""

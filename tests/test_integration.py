@@ -2,7 +2,6 @@
 offline trainer writes versioned snapshots, online server reads the newest
 one without blocking; elastic restart continues training losslessly."""
 import numpy as np
-import pytest
 
 from repro.configs import all_configs, reduced
 from repro.launch.serve import Server

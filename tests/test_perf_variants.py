@@ -5,7 +5,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import all_configs, reduced
 from repro.launch.steps import init_train_state, make_train_step

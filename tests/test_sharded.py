@@ -1,0 +1,264 @@
+"""Sharded-ingestion equivalence tests.
+
+``ShardedDynamicGraph`` (N dst-hash-routed DynamicGraph shards behind
+DataNodes + IngestNode + SnapshotCoordinator) must be observationally
+identical to the loop-based single-store reference: byte-identical stitched
+CSRs (offsets/src/dst/degrees) for synthesized churn streams at shard
+counts {1, 2, 4}, identical vertex tables, frontier-gated snapshot
+visibility, and no-wait semantics under straggler shards.
+"""
+import numpy as np
+import pytest
+
+from repro.core.versioned import Version
+from repro.graph.dyngraph import (DynamicGraph, MutationBatch,
+                                  synthesize_churn_stream, synthesize_stream)
+from repro.graph.partition import (distributed_join_group_by,
+                                   partition_graph_sharded)
+from repro.graph.reference import LoopDynamicGraph
+from repro.graph.sharded import (ShardedDynamicGraph, decode_payloads,
+                                 encode_mutations)
+
+
+def _assert_stitched_equal(sg: ShardedDynamicGraph, ref: LoopDynamicGraph,
+                           version: Version) -> None:
+    view = sg.join_view(version)
+    offsets, src, dst, out_deg, in_deg = ref.join_view_arrays(version)
+    np.testing.assert_array_equal(np.asarray(view.offsets), offsets)
+    np.testing.assert_array_equal(np.asarray(view.src), src)
+    np.testing.assert_array_equal(np.asarray(view.dst), dst)
+    np.testing.assert_array_equal(view.np_out_deg, out_deg)
+    np.testing.assert_array_equal(view.np_in_deg, in_deg)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("delete_frac,readd_frac", [
+    (0.0, 0.0),     # add-heavy
+    (0.4, 0.0),     # delete-heavy
+    (0.3, 0.5),     # re-add-after-delete
+])
+def test_sharded_matches_loop_reference(n_shards, delete_frac, readd_frac):
+    n, epochs, adds = 40, 6, 50
+    batches = synthesize_churn_stream(n, epochs, adds, seed=11,
+                                      delete_frac=delete_frac,
+                                      readd_frac=readd_frac)
+    sg = ShardedDynamicGraph(n_shards, n, 4096)
+    ref = LoopDynamicGraph(n, 4096)
+    for b in batches:
+        sg.apply(b)
+        ref.apply(b)
+    for e in range(epochs):
+        _assert_stitched_equal(sg, ref, Version(e, 0))
+    np.testing.assert_array_equal(sg.v_created, ref.v_created)
+    assert sg.n_vertices == ref.n_vertices
+    assert sg.n_edges == ref.n_edges
+
+
+def test_sharded_typed_vertices_match_reference():
+    """Typed vertex adds route to their home shard; endpoint auto-creation
+    can land anywhere — the merged v_type must still match the single
+    store's first-creation-wins semantics."""
+    _, batches = synthesize_stream(60, 6, 40, seed=3, n_types=3)
+    sg = ShardedDynamicGraph(4, 60, 4096)
+    ref = LoopDynamicGraph(60, 4096)
+    for b in batches:
+        sg.apply(b)
+        ref.apply(b)
+    np.testing.assert_array_equal(sg.v_created, ref.v_created)
+    np.testing.assert_array_equal(sg.v_type, ref.v_type)
+    counts = [sg.num_vertices(Version(e, 0)) for e in range(6)]
+    assert counts == sorted(counts)
+
+
+def test_join_view_gated_by_global_frontier():
+    """A snapshot is only queryable once EVERY shard sealed its epoch —
+    the coordinator's global-frontier rule."""
+    batches = synthesize_churn_stream(16, 2, 20, seed=0)
+    sg = ShardedDynamicGraph(2, 16, 1024)
+    sg.ingest(batches[0])
+    with pytest.raises(ValueError, match="not globally sealed"):
+        sg.join_view(Version(0, 0))
+    with pytest.raises(ValueError, match="not globally sealed"):
+        sg.shard_views(Version(0, 0))
+    sg.seal_epoch(0)
+    assert sg.join_view(Version(0, 0)).m == len(batches[0].add_src)
+
+
+def test_straggler_shard_holds_frontier_and_catches_up():
+    """No-wait dispatch keeps healthy shards ingesting while a straggler
+    parks its slice; the global frontier (and join_view) hold back until
+    the straggler seals, then the stitched view is byte-identical."""
+    batches = synthesize_churn_stream(32, 3, 40, seed=7, delete_frac=0.3)
+    sg = ShardedDynamicGraph(2, 32, 4096)
+    ref = LoopDynamicGraph(32, 4096)
+    for b in batches:
+        ref.apply(b)
+    sg.ingest(batches[0])
+    sg.seal_shard(1, 0)                   # healthy shard seals epoch 0
+    assert sg.coordinator.global_frontier == -1
+    sg.ingest(batches[1])                 # shard 0's slice parks (no-wait)
+    assert sg.ingest_node.blocked_batches
+    sg.seal_shard(1, 1)
+    assert sg.coordinator.global_frontier == -1
+    with pytest.raises(ValueError, match="not globally sealed"):
+        sg.join_view(Version(0, 0))
+    sg.seal_shard(0, 1)                   # straggler catches up; parked
+    assert sg.coordinator.global_frontier == 1   # slices applied in order
+    sg.ingest(batches[2])
+    sg.seal_epoch(2)
+    for e in range(3):
+        _assert_stitched_equal(sg, ref, Version(e, 0))
+    assert not sg.ingest_node.blocked_batches
+
+
+def test_encode_decode_roundtrip_preserves_order():
+    b = MutationBatch(Version(3, 1),
+                      add_src=np.array([5, 1, 5], np.int32),
+                      add_dst=np.array([2, 2, 2], np.int32),
+                      del_src=np.array([5], np.int32),
+                      del_dst=np.array([2], np.int32),
+                      add_vertices=np.array([7, 3], np.int32),
+                      vertex_types=np.array([1, 2], np.int32))
+    keys, epochs, payload = encode_mutations(b)
+    assert keys.tolist() == [7, 3, 2, 2, 2, 2]   # vids, add dsts, del dsts
+    assert (epochs == 3).all()
+    [decoded] = decode_payloads([payload])
+    assert decoded.version == b.version
+    np.testing.assert_array_equal(decoded.add_src, b.add_src)
+    np.testing.assert_array_equal(decoded.add_dst, b.add_dst)
+    np.testing.assert_array_equal(decoded.del_src, b.del_src)
+    np.testing.assert_array_equal(decoded.del_dst, b.del_dst)
+    np.testing.assert_array_equal(decoded.add_vertices, b.add_vertices)
+    np.testing.assert_array_equal(decoded.vertex_types, b.vertex_types)
+    # two versions in one seal decode into two ordered batches
+    b2 = MutationBatch(Version(3, 2), add_src=np.array([0], np.int32),
+                       add_dst=np.array([1], np.int32))
+    _, _, payload2 = encode_mutations(b2)
+    d1, d2 = decode_payloads([payload, payload2])
+    assert (d1.version, d2.version) == (b.version, b2.version)
+
+
+def test_partition_graph_sharded_fast_path():
+    """The fast path consumes pre-sharded views without re-bucketing:
+    partition p's rows are exactly shard p's rows, degrees sum to the
+    stitched view's, and only allgather mode accepts the placement."""
+    import jax
+    import jax.numpy as jnp
+
+    _, batches = synthesize_stream(48, 4, 60, seed=5)
+    sg = ShardedDynamicGraph(4, 48, 4096)
+    for b in batches:
+        sg.apply(b)
+    v = Version(3, 0)
+    views = sg.shard_views(v)
+    pg = partition_graph_sharded(views, hub_k=4)
+    assert pg.placement == "dst_hash"
+    assert pg.n_parts == 4
+    full = sg.join_view(v)
+    assert int(np.asarray(pg.mask).sum()) == full.m
+    for p, view in enumerate(views):
+        m = view.m
+        np.testing.assert_array_equal(np.asarray(pg.src[p, :m]), view.np_src)
+        np.testing.assert_array_equal(np.asarray(pg.dst[p, :m]), view.np_dst)
+        assert not np.asarray(pg.mask[p, m:]).any()
+    np.testing.assert_array_equal(np.asarray(pg.out_degree)[:48],
+                                  np.asarray(full.np_out_deg))
+    mesh = jax.make_mesh((1,), ("data",))
+    sg1 = ShardedDynamicGraph(1, 48, 4096)
+    for b in batches:
+        sg1.apply(b)
+    pg1 = partition_graph_sharded(sg1.shard_views(v), hub_k=4)
+    vals = jnp.arange(pg1.n, dtype=jnp.float32)
+    got = distributed_join_group_by(pg1, vals, mesh, mode="allgather")
+    expect = jax.ops.segment_sum(vals[full.src], full.dst,
+                                 num_segments=pg1.n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=1e-6)
+    for mode in ("scatter", "hub"):
+        with pytest.raises(ValueError, match="src-placed"):
+            distributed_join_group_by(pg1, vals, mesh, mode=mode)
+    # an undersized pad_to must fail loudly, not silently drop edges
+    with pytest.raises(ValueError, match="drop edges"):
+        partition_graph_sharded(views, pad_to=1)
+
+
+def test_sharded_gc_views_prunes_caches():
+    batches = synthesize_churn_stream(32, 10, 30, seed=9, delete_frac=0.2)
+    sg = ShardedDynamicGraph(2, 32, 4096)
+    ref = LoopDynamicGraph(32, 4096)
+    for b in batches:
+        sg.apply(b)
+        ref.apply(b)
+        sg.join_view(b.version)
+    assert len(sg._views) == 10
+    dropped = sg.gc_views(keep_latest=4)
+    assert dropped > 0
+    # ladder retention: one view per doubling-distance bucket
+    kept_epochs = sorted(Version.unpack(k).epoch for k in sg._views)
+    assert kept_epochs == [5, 7, 8, 9]
+    # dropped snapshots remain addressable and byte-identical (rebuilt
+    # from a nearby ladder base or from scratch)
+    for e in range(10):
+        _assert_stitched_equal(sg, ref, Version(e, 0))
+
+
+def test_sharded_capacity_overflow_leaves_epoch_pending():
+    """A shard hitting edge capacity fails the seal as a no-op: the shard
+    store is untouched, the epoch's mutations stay pending (not silently
+    destroyed), the local frontier does not advance, and other shards are
+    unaffected."""
+    sg = ShardedDynamicGraph(2, 8, 2)
+    sg.apply(MutationBatch(Version(0, 0),
+                           add_src=np.array([0, 0], np.int32),
+                           add_dst=np.array([1, 3], np.int32)))
+    with pytest.raises(MemoryError):
+        # two more edges to shard 1 (dst odd) exceed its capacity of 2
+        sg.apply(MutationBatch(Version(1, 0),
+                               add_src=np.array([0, 0], np.int32),
+                               add_dst=np.array([5, 7], np.int32)))
+    assert sg.shards[1].n_edges == 2          # overflow applied nothing
+    assert sg.nodes[1].local_frontier == 0    # seal did not commit
+    assert 1 in sg.nodes[1].pending_payloads  # mutations retained
+    # re-sealing reproduces the error (no silent empty-epoch seal)
+    with pytest.raises(MemoryError):
+        sg.seal_shard(1, 1)
+    assert sg.nodes[1].local_frontier == 0
+
+
+def test_ingest_into_sealed_epoch_is_rejected():
+    """A slice dispatched to an already-sealed local snapshot could never
+    be applied — ingest refuses it loudly instead of losing it."""
+    sg = ShardedDynamicGraph(2, 8, 64)
+    sg.apply(MutationBatch(Version(0, 0),
+                           add_src=np.array([0], np.int32),
+                           add_dst=np.array([1], np.int32)))
+    with pytest.raises(ValueError, match="already sealed"):
+        sg.ingest(MutationBatch(Version(0, 1),
+                                add_src=np.array([2], np.int32),
+                                add_dst=np.array([3], np.int32)))
+    with pytest.raises(ValueError, match="increasing versions"):
+        sg.ingest(MutationBatch(Version(0, 0),
+                                add_src=np.array([2], np.int32),
+                                add_dst=np.array([3], np.int32)))
+
+
+def test_multiple_batches_per_epoch_before_seal():
+    """Several version-numbered batches within one epoch, sealed once —
+    must match the single store applying them in sequence."""
+    sg = ShardedDynamicGraph(2, 16, 64)
+    ref = LoopDynamicGraph(16, 64)
+    b1 = MutationBatch(Version(0, 0),
+                       add_src=np.array([0, 1], np.int32),
+                       add_dst=np.array([1, 2], np.int32))
+    b2 = MutationBatch(Version(0, 1),
+                       add_src=np.array([2], np.int32),
+                       add_dst=np.array([3], np.int32),
+                       del_src=np.array([0], np.int32),
+                       del_dst=np.array([1], np.int32))
+    sg.ingest(b1)
+    sg.ingest(b2)
+    sg.seal_epoch(0)
+    for b in (b1, b2):
+        ref.apply(b)
+    for v in (Version(0, 0), Version(0, 1)):
+        _assert_stitched_equal(sg, ref, v)

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import all_configs, reduced
-from repro.launch.steps import (init_train_state, loss_fn, make_decode_step,
+from repro.launch.steps import (init_train_state, make_decode_step,
                                 make_prefill_step, make_train_step)
 from repro.models import transformer as tf
 

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import all_configs, reduced
 from repro.core.versioned import Version
-from repro.launch.steps import init_train_state, make_train_step
+from repro.launch.steps import init_train_state
 from repro.train.checkpoint import CheckpointManager
 from repro.train.compression import compress_grads, init_error_state
 from repro.train.data import TokenPipeline
