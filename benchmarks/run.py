@@ -427,6 +427,102 @@ def bench_ingest_sharded(quick=False):
     row("ingest_sharded.report", 0, str(out))
 
 
+# ------------------------------------------------- online serving (§3.3 axis 1
+# on the sharded store: the integrated online/offline claim, measured)
+def bench_serve_graph(quick=False):
+    """Graph query serving on live sharded snapshots.
+
+    Drives a ``GraphQueryServer`` through a build-up phase plus a
+    steady-state tail of small-churn epochs (the serving regime: large
+    accumulated graph, small per-epoch delta), submitting a mixed query
+    window every epoch while ingestion streams. Reports steady-state query
+    latency percentiles (windows answered by vectorized jitted calls whose
+    traces survive across snapshots thanks to pow2 edge/source padding)
+    and warm-started vs cold PageRank convergence on the final serving
+    snapshot. Lands in ``BENCH_ingest.json`` under ``serve_graph``.
+    """
+    import pathlib
+
+    from repro.core.versioned import Version
+    from repro.graph import compute as gcomp
+    from repro.graph.dyngraph import MutationBatch, synthesize_churn_stream
+    from repro.graph.query import (DegreeTopK, KHop, PageRankQuery,
+                                   Reachability)
+    from repro.graph.sharded import ShardedDynamicGraph
+    from repro.launch.serve_graph import GraphQueryServer
+
+    n = 2_000 if quick else 10_000
+    build_epochs = 4 if quick else 6
+    adds = 1_000 if quick else 5_000
+    tail_epochs = 6 if quick else 8
+    tail_adds = max(2, n // 1000)        # ~0.1% of vertices per epoch
+    # online-serving tolerance: ranks good to 1e-4 — loose enough that the
+    # warm start's head start is most of the distance to convergence
+    tol = 1e-4
+    rng = np.random.default_rng(1)
+    batches = synthesize_churn_stream(n, build_epochs, adds, seed=0,
+                                      delete_frac=0.1)
+    for e in range(build_epochs, build_epochs + tail_epochs):
+        batches.append(MutationBatch(
+            Version(e, 0),
+            add_src=rng.integers(0, n, tail_adds).astype(np.int32),
+            add_dst=rng.integers(0, n, tail_adds).astype(np.int32)))
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    sg = ShardedDynamicGraph(4, n, e_max)
+    server = GraphQueryServer(sg, prewarm_pagerank=True, tol=tol,
+                              max_iter=200)
+
+    qrng = np.random.default_rng(2)
+    steady_lat: list[float] = []
+    for b in batches:
+        server.step(b)                         # ingestion tick
+        for _ in range(8):
+            server.submit(KHop(int(qrng.integers(0, n)), k=2))
+        for _ in range(4):
+            server.submit(Reachability(int(qrng.integers(0, n)),
+                                       int(qrng.integers(0, n)),
+                                       max_hops=8))
+        server.submit(DegreeTopK(16))
+        server.submit(PageRankQuery(top_k=16))
+        results = server.flush()
+        if b.version.epoch >= build_epochs:    # steady state only
+            steady_lat.extend(r.latency_s for r in results)
+
+    lat = np.asarray(steady_lat)
+    p50, p95 = (float(np.percentile(lat, q)) for q in (50, 95))
+    stats = server.stats()
+    v_last = batches[-1].version
+    view_last = sg.join_view(v_last)
+    warm = server.engine.pagerank(view_last)   # cache hit: warm-chain result
+    cold = gcomp.pagerank(view_last, tol=tol, max_iter=200)
+    reduction = cold.iterations / max(warm.iterations, 1)
+    n_queries = stats["served"]
+    calls = sum(stats["vectorized_calls"].values())
+    row("serve_graph.query_latency", p50,
+        f"p95_us={p95*1e6:.1f};m={view_last.m};steady_windows={tail_epochs}")
+    row("serve_graph.batching", 0,
+        f"queries={n_queries};vectorized_calls={calls}")
+    row("serve_graph.pagerank_warm_vs_cold", 0,
+        f"warm_iters={warm.iterations};cold_iters={cold.iterations};"
+        f"reduction=x{reduction:.1f}")
+    report = {
+        "n_vertices": n, "n_shards": sg.n_shards,
+        "edges_final": int(view_last.m),
+        "queries_total": int(n_queries),
+        "vectorized_calls_total": int(calls),
+        "steady_state_epochs": tail_epochs,
+        "query_p50_s": p50, "query_p95_s": p95,
+        "warm_pagerank_iters": int(warm.iterations),
+        "cold_pagerank_iters": int(cold.iterations),
+        "warm_start_iter_reduction": reduction,
+        "rank_warm_starts": stats["rank_warm_starts"],
+        "rank_cold_starts": stats["rank_cold_starts"],
+    }
+    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
+    _merge_bench_json(out, {"serve_graph": report})
+    row("serve_graph.report", 0, str(out))
+
+
 # ---------------------------------------------------------------- §3.3 axis 4
 def bench_replica(quick=False):
     """Data-management efficiency: hit rate + modeled comm per mode."""
@@ -510,13 +606,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: online,offline,ingest,"
-                         "ingest_graph,ingest_sharded,replica,kernels,"
-                         "roofline")
+                         "ingest_graph,ingest_sharded,serve_graph,replica,"
+                         "kernels,roofline")
     args = ap.parse_args()
     benches = {
         "online": bench_online, "offline": bench_offline,
         "ingest": bench_ingest, "ingest_graph": bench_ingest_graph,
         "ingest_sharded": bench_ingest_sharded,
+        "serve_graph": bench_serve_graph,
         "replica": bench_replica,
         "kernels": bench_kernels, "roofline": bench_roofline,
     }

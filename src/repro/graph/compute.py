@@ -15,6 +15,7 @@ usable while mutations stream (snapshot isolation via the versioned store).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -200,6 +201,136 @@ def reachability(view: JoinView, src: int, dst: int,
             break
         reach = new
     return bool(reach[dst])
+
+
+# --------------------------------------------- batched/jitted online queries
+# Serving entry points: one jitted call answers a whole window of same-kind
+# queries. The traced functions are cached by (padded_m, n, S[, k]) shape:
+# query sources are padded to a power-of-two width and the snapshot's edge
+# list to a power-of-two length (padding rows target a phantom segment ``n``
+# that is sliced off inside the kernel), so consecutive snapshots of a live
+# stream and windows of varying size hit the jit cache instead of retracing
+# per call.
+
+def pad_pow2(size: int, floor: int = 1) -> int:
+    """Next power of two >= size (>= floor) — the padding rule the serving
+    layer uses to keep batched-query shapes (and so jit traces) stable."""
+    return max(floor, 1 << max(0, int(size - 1).bit_length()))
+
+
+def _padded_edges(view: JoinView,
+                  pad_edges: bool) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(src, dst) with the edge list padded to a pow2 length; padded rows
+    gather vertex 0 (harmless) and scatter into phantom segment ``n``
+    (sliced off). Keeps the jitted query trace stable while a live stream
+    grows/shrinks m within the bucket."""
+    m = view.m
+    if not pad_edges:
+        return view.src, view.dst
+    width = pad_pow2(m)
+    src = jnp.zeros((width,), view.src.dtype).at[:m].set(view.src)
+    dst = jnp.full((width,), view.n, view.dst.dtype).at[:m].set(view.dst)
+    return src, dst
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k"))
+def _batched_khop(src, dst, reach0, n, k):
+    def step(_, reach):
+        # num_segments=n+1: the phantom segment swallows padded edges
+        hop = jax.ops.segment_max(reach[src].astype(jnp.int32), dst,
+                                  num_segments=n + 1)[:n] > 0
+        return reach | hop
+    return jax.lax.fori_loop(0, k, step, reach0)
+
+
+def batched_k_hop(view: JoinView, sources: jnp.ndarray, k: int, *,
+                  pad_sources: bool = True,
+                  pad_edges: bool = True) -> jnp.ndarray:
+    """Per-source k-hop reachability for a whole query window at once.
+
+    Unlike :func:`k_hop` (which unions its sources into ONE frontier), this
+    answers S independent queries in a single vectorized sweep: returns
+    (S, n) bool, row i = vertices within k out-hops of ``sources[i]``.
+    Row i equals ``k_hop(view, sources[i:i+1], k)`` bit for bit.
+    """
+    sources = jnp.asarray(sources).reshape(-1)
+    s = int(sources.shape[0])
+    if s == 0:
+        return jnp.zeros((0, view.n), bool)
+    width = pad_pow2(s) if pad_sources else s
+    padded = jnp.zeros((width,), sources.dtype).at[:s].set(sources)
+    reach0 = jnp.zeros((view.n, width), bool).at[
+        padded, jnp.arange(width)].set(True)
+    src, dst = _padded_edges(view, pad_edges)
+    reach = _batched_khop(src, dst, reach0, view.n, int(k))
+    return reach.T[:s]
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _batched_reach(src, dst, reach0, dst_ids, max_hops, n):
+    cols = jnp.arange(dst_ids.shape[0])
+
+    def cond(carry):
+        reach, changed, it = carry
+        found = jnp.all(reach[dst_ids, cols])
+        return changed & ~found & (it < max_hops)
+
+    def body(carry):
+        reach, _, it = carry
+        hop = jax.ops.segment_max(reach[src].astype(jnp.int32), dst,
+                                  num_segments=n + 1)[:n] > 0
+        new = reach | hop
+        return new, jnp.any(new != reach), it + 1
+
+    reach, _, _ = jax.lax.while_loop(
+        cond, body, (reach0, jnp.asarray(True), jnp.asarray(0)))
+    return reach[dst_ids, cols]
+
+
+def batched_reachability(view: JoinView, src_ids: jnp.ndarray,
+                         dst_ids: jnp.ndarray,
+                         max_hops: Optional[int] = None, *,
+                         pad_sources: bool = True,
+                         pad_edges: bool = True) -> jnp.ndarray:
+    """Multi-source frontier reachability: answers S (src -> dst) queries in
+    one frontier sweep — the batched counterpart of :func:`reachability`.
+    Returns (S,) bool. The shared frontier stops early once every target is
+    found or no per-source frontier changed; ``max_hops`` is a traced
+    scalar, so varying it never retraces."""
+    src_ids = jnp.asarray(src_ids).reshape(-1)
+    dst_ids = jnp.asarray(dst_ids).reshape(-1)
+    if src_ids.shape != dst_ids.shape:
+        raise ValueError("src_ids and dst_ids must have the same length")
+    s = int(src_ids.shape[0])
+    if s == 0:
+        return jnp.zeros((0,), bool)
+    width = pad_pow2(s) if pad_sources else s
+    psrc = jnp.zeros((width,), src_ids.dtype).at[:s].set(src_ids)
+    pdst = jnp.zeros((width,), dst_ids.dtype).at[:s].set(dst_ids)
+    reach0 = jnp.zeros((view.n, width), bool).at[
+        psrc, jnp.arange(width)].set(True)
+    # falsy max_hops (None or 0) means unbounded — same promotion the
+    # scalar reachability() applies, so the two entry points agree
+    hops = jnp.asarray(max_hops or view.n)
+    src, dst = _padded_edges(view, pad_edges)
+    return _batched_reach(src, dst, reach0, pdst, hops, view.n)[:s]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topk(deg, k):
+    return jax.lax.top_k(deg, k)
+
+
+def degree_topk(view: JoinView, k: int, *,
+                direction: str = "in") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k vertices by in/out-degree on one snapshot — (ids, degrees),
+    degrees descending (ties by lowest vertex id, matching a stable sort on
+    (-degree, id)). ``k`` larger than n returns all n vertices."""
+    if direction not in ("in", "out"):
+        raise ValueError(direction)
+    deg = view.in_degree if direction == "in" else view.out_degree
+    vals, ids = _topk(deg, min(int(k), view.n))
+    return ids, vals
 
 
 # --------------------------------------------------------- temporal analytics

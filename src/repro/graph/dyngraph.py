@@ -92,6 +92,22 @@ class MutationBatch:
     vertex_types: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, np.int32))
 
+    def __post_init__(self):
+        # every consumer (vectorized store, loop oracle, sharded encoder)
+        # pairs add_vertices with vertex_types elementwise; a silent
+        # truncation to the shorter of the two would drop vertex adds on
+        # one path but not another, so the mismatch is resolved here once:
+        # missing types default to 0 (untyped), surplus types are an error
+        nv, nt = len(self.add_vertices), len(self.vertex_types)
+        if nt > nv:
+            raise ValueError(
+                f"vertex_types has {nt} entries for {nv} add_vertices; "
+                "a type without a vertex is meaningless")
+        if nt < nv:
+            self.vertex_types = np.concatenate(
+                [np.asarray(self.vertex_types, np.int32),
+                 np.zeros(nv - nt, np.int32)])
+
     @property
     def size(self) -> int:
         return (len(self.add_src) + len(self.del_src) + len(self.add_vertices))
@@ -253,14 +269,13 @@ class DynamicGraph:
         for k in stale:
             del self._views[k]
         # vertex adds (typed): first occurrence per id wins within a batch
-        n_typed = min(len(batch.add_vertices), len(batch.vertex_types))
-        if n_typed:
-            vids, first = np.unique(batch.add_vertices[:n_typed],
-                                    return_index=True)
+        # (lengths are normalized by MutationBatch.__post_init__)
+        if len(batch.add_vertices):
+            vids, first = np.unique(batch.add_vertices, return_index=True)
             new = self.v_created[vids] == MAXV
             vids, first = vids[new], first[new]
             self.v_created[vids] = v
-            self.v_type[vids] = batch.vertex_types[:n_typed][first]
+            self.v_type[vids] = batch.vertex_types[first]
             self.n_vertices += len(vids)
         # edge adds: append rows
         k = len(batch.add_src)

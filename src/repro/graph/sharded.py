@@ -55,7 +55,14 @@ def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
     in payload order reproduces the single store's semantics.
     """
     v = batch.version.pack()
-    n_typed = min(len(batch.add_vertices), len(batch.vertex_types))
+    # MutationBatch.__post_init__ pads/validates, so the two arrays agree by
+    # construction; a hand-built batch that bypassed it fails loudly here
+    # instead of silently dropping vertex adds on the sharded path only
+    n_typed = len(batch.add_vertices)
+    if len(batch.vertex_types) != n_typed:
+        raise ValueError(
+            f"add_vertices ({n_typed}) and vertex_types "
+            f"({len(batch.vertex_types)}) disagree in length")
     n_add = len(batch.add_src)
     n_del = len(batch.del_src)
     total = n_typed + n_add + n_del
@@ -65,8 +72,8 @@ def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
     payload = np.empty((total, 4), np.int64)
     payload[:, 3] = v
     payload[:n_typed, 0] = K_VERTEX
-    payload[:n_typed, 1] = batch.add_vertices[:n_typed]
-    payload[:n_typed, 2] = batch.vertex_types[:n_typed]
+    payload[:n_typed, 1] = batch.add_vertices
+    payload[:n_typed, 2] = batch.vertex_types
     a = n_typed + n_add
     payload[n_typed:a, 0] = K_ADD
     payload[n_typed:a, 1] = batch.add_src
@@ -75,7 +82,7 @@ def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
     payload[a:, 1] = batch.del_src
     payload[a:, 2] = batch.del_dst
     key_arr = np.empty(total, np.int64)
-    key_arr[:n_typed] = batch.add_vertices[:n_typed]  # vertex id routes home
+    key_arr[:n_typed] = batch.add_vertices      # vertex id routes home
     key_arr[n_typed:a] = batch.add_dst
     key_arr[a:] = batch.del_dst
     epochs = np.full(total, batch.version.epoch, np.int64)
@@ -90,14 +97,20 @@ def decode_payloads(payloads: list[np.ndarray]) -> list[MutationBatch]:
     rows = np.concatenate(payloads, axis=0) if len(payloads) > 1 \
         else payloads[0]
     out = []
-    # versions are strictly increasing across ingests, so arrival order is
-    # already version-grouped; the common case is a single version per seal
-    if rows[0, 3] == rows[-1, 3]:
-        versions = rows[:1, 3]
+    vcol = rows[:, 3]
+    # stable group-by on the packed version: np.unique yields versions in
+    # ascending (= apply) order and the boolean mask preserves within-version
+    # arrival order, so a straggler shard replaying several parked slices in
+    # one seal — possibly interleaved across versions — still reassembles
+    # each batch intact. (The old fast path trusted rows[0] == rows[-1],
+    # which an interleaved replay defeats.) Common case: one version per
+    # seal, detected with a full scan, not an endpoint check.
+    if (vcol == vcol[0]).all():
+        versions = vcol[:1]
     else:
-        versions = np.unique(rows[:, 3])
+        versions = np.unique(vcol)
     for v in versions:
-        grp = rows if len(versions) == 1 else rows[rows[:, 3] == v]
+        grp = rows if len(versions) == 1 else rows[vcol == v]
         kind, a, b = grp[:, 0], grp[:, 1], grp[:, 2]
         vert = kind == K_VERTEX
         add = kind == K_ADD
@@ -174,6 +187,7 @@ class ShardedDynamicGraph:
         self.ingest_node = IngestNode(self.nodes, route=self.route)
         self._views: dict[int, JoinView] = {}
         self._last_version = -1
+        self._ingested_packed: list[int] = []   # every ingested version, asc
         # per-shard cumulative apply seconds — the benchmark's critical-path
         # model of parallel shard ingestion reads these
         self.shard_apply_seconds = [0.0] * n_shards
@@ -217,8 +231,13 @@ class ShardedDynamicGraph:
                 f"epoch {batch.version.epoch} is already sealed on some "
                 f"shard (max local frontier {sealed}); ingest batches "
                 "before sealing their epoch")
-        self._last_version = v
+        # encode first: if it raises (malformed batch), no version
+        # bookkeeping has happened and the same version can be retried —
+        # otherwise latest_sealed() could later name a version whose
+        # mutations were never applied
         keys, epochs, payload = encode_mutations(batch)
+        self._last_version = v
+        self._ingested_packed.append(v)
         if not keys.size:
             return 0
         return self.ingest_node.dispatch_batch(keys, epochs, payload)
@@ -256,6 +275,33 @@ class ShardedDynamicGraph:
         self.seal_epoch(batch.version.epoch)
 
     # -- snapshots ---------------------------------------------------------
+    def latest_sealed(self) -> Optional[Version]:
+        """Newest frontier-sealed snapshot version — the only snapshot an
+        online query may be answered against (never a partially-sealed
+        epoch). Returns the newest ingested version whose epoch every shard
+        has sealed; ``Version(frontier, 0)`` if the sealed epochs carried no
+        batches (a sealed empty snapshot is queryable); ``None`` before the
+        first global seal."""
+        frontier = self.coordinator.global_frontier
+        if frontier < 0:
+            return None
+        log = self._ingested_packed
+        for i in range(len(log) - 1, -1, -1):
+            if (log[i] >> 32) <= frontier:
+                # the frontier is monotone, so entries older than this hit
+                # can never be the answer again — trim them so the log is
+                # bounded by the unsealed backlog, not the stream length
+                if i > 0:
+                    del log[:i]
+                return Version.unpack(log[0])
+        return Version(frontier, 0)
+
+    def on_frontier_advance(self, fn: Callable[[int], None]) -> None:
+        """Subscribe ``fn(new_frontier)`` to global-seal notifications —
+        fires whenever an epoch becomes sealed on every shard (i.e. a newer
+        consistent snapshot became queryable)."""
+        self.coordinator.subscribe(fn)
+
     def _gate(self, version: Version) -> None:
         if version.epoch > self.coordinator.global_frontier:
             raise ValueError(

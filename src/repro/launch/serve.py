@@ -20,7 +20,7 @@ import numpy as np
 from repro.configs import all_configs, reduced
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import transformer as tf
-from repro.train.checkpoint import CheckpointManager
+from repro.train.checkpoint import CheckpointManager, CheckpointStructureError
 
 
 class Server:
@@ -59,13 +59,17 @@ class Server:
         like = {"params": tf.param_shapes(cfg)}
         params_like = jax.tree.map(
             lambda s: np.zeros(s.shape, s.dtype), like["params"])
-        # checkpoints store the full train state; restore params subtree
+        # checkpoints store the full train state; restore params subtree.
+        # Only a STRUCTURE mismatch (params-only checkpoint lacking the
+        # optimizer leaves) falls back to the narrower shape — a corrupt
+        # checkpoint, bad dtype, or IO error must surface as itself, not
+        # masquerade as a shape probe.
         state_like = {"params": params_like}
         try:
             state = mgr.restore({"params": params_like,
                                  **_opt_like(params_like)}, version)
             return cls(cfg, state["params"])
-        except Exception:
+        except CheckpointStructureError:
             state = mgr.restore(state_like, version)
             return cls(cfg, state["params"])
 

@@ -21,6 +21,13 @@ import numpy as np
 from repro.core.versioned import Version, VersionedStore
 
 
+class CheckpointStructureError(ValueError):
+    """The checkpoint on disk does not contain the requested state
+    structure (missing leaves). Distinct from corruption/IO errors so
+    callers probing for an alternative state shape (e.g. params-only vs
+    full train state) can retry on THIS and re-raise everything else."""
+
+
 def _flatten(tree):
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
@@ -75,7 +82,8 @@ class CheckpointManager:
         flat_like = _flatten(like)
         missing = set(flat_like) - set(data.files)
         if missing:
-            raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:4]}")
+            raise CheckpointStructureError(
+                f"checkpoint missing leaves: {sorted(missing)[:4]}")
         leaves_paths = jax.tree_util.tree_flatten_with_path(like)
         restored = []
         for path, leaf in leaves_paths[0]:

@@ -1,11 +1,15 @@
 """End-to-end integration: the paper's online/offline loop at LM scale —
 offline trainer writes versioned snapshots, online server reads the newest
 one without blocking; elastic restart continues training losslessly."""
+import jax
 import numpy as np
+import pytest
 
 from repro.configs import all_configs, reduced
-from repro.launch.serve import Server
+from repro.launch.serve import Server, _opt_like
 from repro.launch.train import run
+from repro.models import transformer as tf
+from repro.train.checkpoint import CheckpointManager
 
 
 def test_train_snapshot_then_serve(tmp_path):
@@ -18,6 +22,46 @@ def test_train_snapshot_then_serve(tmp_path):
     out = srv.generate(prompts, 4)
     assert out.shape == (2, 4)
     assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def _tiny_cfg():
+    return reduced(all_configs()["qwen2.5-14b"], num_layers=1, d_model=32,
+                   vocab_size=64, head_dim=8, d_ff=64, loss_chunk=32)
+
+
+def _params_like(cfg):
+    return jax.tree.map(lambda s: np.zeros(s.shape, s.dtype),
+                        tf.param_shapes(cfg))
+
+
+def test_from_checkpoint_params_only_fallback(tmp_path):
+    """A params-only checkpoint (no optimizer leaves) is a legitimate
+    STRUCTURE mismatch: from_checkpoint falls back to the narrower shape."""
+    cfg = _tiny_cfg()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    CheckpointManager(tmp_path).save({"params": params}, epoch=0, step=1)
+    srv = Server.from_checkpoint(cfg, str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(jax.tree.leaves(srv.params)[0]),
+                                  np.asarray(jax.tree.leaves(params)[0]))
+
+
+def test_from_checkpoint_surfaces_corruption(tmp_path):
+    """Regression: a corrupt checkpoint must raise its REAL error, not be
+    swallowed by the structure-shape retry. Here the optimizer subtree is
+    corrupted (pickled object array): the old bare-except fallback would
+    silently serve params and mask the corruption."""
+    cfg = _tiny_cfg()
+    params_like = _params_like(cfg)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save({"params": params_like, **_opt_like(params_like)},
+             epoch=0, step=1)
+    fname = mgr.index.get("ckpt")
+    data = dict(np.load(tmp_path / fname))
+    corrupt_key = next(k for k in data if k.startswith("opt/"))
+    data[corrupt_key] = np.array([object()], dtype=object)   # needs pickle
+    np.savez(tmp_path / fname, **data)
+    with pytest.raises(ValueError, match="allow_pickle|Object arrays"):
+        Server.from_checkpoint(cfg, str(tmp_path))
 
 
 def test_failure_plus_serve_consistency(tmp_path):

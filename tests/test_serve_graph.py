@@ -1,0 +1,241 @@
+"""GraphQueryServer: online serving on live sharded snapshots.
+
+The server must (a) answer strictly against the newest frontier-sealed
+snapshot — never a partially-sealed epoch, (b) produce results
+byte-identical to one-shot queries on the single store at the same
+version, (c) collapse same-kind query windows into one vectorized call,
+(d) warm-start PageRank incrementally per epoch and keep its caches
+bounded under the ladder GC, and (e) keep serving while ingestion streams
+on a background thread.
+"""
+import numpy as np
+import pytest
+
+from repro.core.versioned import Version
+from repro.graph import compute as gc
+from repro.graph.dyngraph import (DynamicGraph, MutationBatch,
+                                  synthesize_churn_stream)
+from repro.graph.query import (DegreeTopK, KHop, PageRankQuery, Reachability,
+                               SnapshotQueryEngine)
+from repro.graph.sharded import ShardedDynamicGraph
+from repro.launch.serve_graph import GraphQueryServer
+
+
+def _setup(n=64, epochs=5, adds=60, n_shards=3, seed=13, **server_kw):
+    batches = synthesize_churn_stream(n, epochs, adds, seed=seed,
+                                      delete_frac=0.2)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    sg = ShardedDynamicGraph(n_shards, n, e_max)
+    g = DynamicGraph(n, e_max)
+    server = GraphQueryServer(sg, **server_kw)
+    return server, g, batches
+
+
+def test_flush_before_any_seal_raises():
+    server, _, batches = _setup()
+    server.submit(KHop(0, 2))
+    with pytest.raises(RuntimeError, match="no globally sealed"):
+        server.flush()
+    # the window survives the failed flush and answers after the seal
+    server.step(batches[0])
+    [res] = server.flush()
+    assert res.version == batches[0].version
+
+
+def test_results_byte_identical_to_single_store():
+    server, g, batches = _setup(tol=1e-8, max_iter=300)
+    for b in batches:
+        g.apply(b)
+        server.step(b)
+        for q in (KHop(1, 2), KHop(5, 2), Reachability(0, 63, max_hops=6),
+                  DegreeTopK(5), PageRankQuery()):
+            server.submit(q)
+        results = server.flush()
+        assert all(r.version == b.version for r in results)
+        view = g.join_view(b.version)
+        for r in results:
+            if isinstance(r.query, KHop):
+                exp = np.asarray(gc.k_hop(view, np.array([r.query.source]),
+                                          r.query.k))
+                np.testing.assert_array_equal(r.value, exp)
+            elif isinstance(r.query, Reachability):
+                assert r.value == gc.reachability(view, r.query.src,
+                                                  r.query.dst,
+                                                  r.query.max_hops)
+            elif isinstance(r.query, DegreeTopK):
+                ids, degs = r.value
+                exp_deg, exp_ids = np.asarray(view.in_degree), None
+                np.testing.assert_array_equal(degs, exp_deg[ids])
+                assert (np.diff(degs) <= 0).all()
+
+
+def test_pagerank_warm_chain_matches_incremental_timeline():
+    """The server's per-epoch PageRank equals the single store's
+    incremental (warm-started) timeline bit for bit — the online/offline
+    shared-data goal."""
+    server, g, batches = _setup(prewarm_pagerank=True, tol=1e-8,
+                                max_iter=300)
+    served = []
+    for b in batches:
+        g.apply(b)
+        server.step(b)
+        served.append(server.query(PageRankQuery()).value)
+    versions = [b.version for b in batches]
+    timeline = gc.pagerank_timeline(g, versions, incremental=True, tol=1e-8,
+                                    max_iter=300)
+    for got, exp in zip(served, timeline):
+        np.testing.assert_array_equal(got, np.asarray(exp.ranks))
+    # every epoch after the first warm-started; queries all hit the cache
+    assert server.engine.rank_cold_starts == 1
+    assert server.engine.rank_warm_starts == len(batches) - 1
+    assert server.engine.rank_cache_hits == len(batches)
+
+
+def test_window_batches_same_kind_into_one_vectorized_call():
+    server, _, batches = _setup()
+    for b in batches[:2]:
+        server.step(b)
+    for src in (0, 5, 9, 11, 17):
+        server.submit(KHop(src, 2))           # same k: ONE batched call
+    for src in (1, 2, 3):
+        server.submit(Reachability(src, 40))  # same bound: ONE frontier
+    server.submit(DegreeTopK(4))
+    server.submit(DegreeTopK(4))              # deduped group
+    results = server.flush()
+    assert len(results) == 10
+    calls = server.engine.vectorized_calls
+    assert calls["k_hop"] == 1
+    assert calls["reachability"] == 1
+    assert calls["degree_topk"] == 1
+    # different k -> separate traces/groups, still one call per group
+    server.submit(KHop(0, 1))
+    server.submit(KHop(4, 2))
+    server.flush()
+    assert server.engine.vectorized_calls["k_hop"] == 3
+
+
+def test_serves_newest_sealed_never_partial_epoch():
+    """While a straggler shard lags, the server keeps answering at the last
+    globally-sealed version; once the straggler seals, the next flush moves
+    to the new snapshot."""
+    server, g, batches = _setup(n_shards=2)
+    sg = server.graph
+    for b in batches[:-1]:
+        g.apply(b)
+        server.step(b)
+    last = batches[-1]
+    sg.ingest(last)
+    sg.seal_shard(1, last.version.epoch)       # shard 0 straggles
+    res = server.query(KHop(3, 2))
+    assert res.version == batches[-2].version  # not the partial epoch
+    view = g.join_view(batches[-2].version)
+    np.testing.assert_array_equal(
+        res.value, np.asarray(gc.k_hop(view, np.array([3]), 2)))
+    sg.seal_shard(0, last.version.epoch)       # straggler catches up
+    g.apply(last)
+    res2 = server.query(KHop(3, 2))
+    assert res2.version == last.version
+    np.testing.assert_array_equal(
+        res2.value,
+        np.asarray(gc.k_hop(g.join_view(last.version), np.array([3]), 2)))
+
+
+def test_caches_stay_bounded_under_churn():
+    n, epochs = 48, 12
+    batches = synthesize_churn_stream(n, epochs, 40, seed=3,
+                                      delete_frac=0.2)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    sg = ShardedDynamicGraph(2, n, e_max)
+    server = GraphQueryServer(sg, view_keep=4, rank_keep=3,
+                              prewarm_pagerank=True)
+    for b in batches:
+        server.step(b)
+        server.query(PageRankQuery())
+    assert len(sg._views) <= 4
+    for shard in sg.shards:
+        assert len(shard._views) <= 4
+    assert len(server.engine.cached_rank_versions) <= 3
+    # the newest version is always retained (it is the serving snapshot)
+    assert max(server.engine.cached_rank_versions) == \
+        batches[-1].version.pack()
+    assert max(sg._views) == batches[-1].version.pack()
+
+
+def test_background_ingest_serves_while_streaming():
+    server, g, batches = _setup(epochs=8, adds=40)
+    for b in batches:
+        g.apply(b)
+    t = server.start_background_ingest(iter(batches), delay_s=0.002)
+    seen = []
+    while t.is_alive():
+        try:
+            res = server.query(KHop(2, 2))
+        except RuntimeError:       # nothing sealed yet
+            continue
+        seen.append(res)
+    t.join()
+    # every answer was consistent with the single store at ITS version
+    assert seen, "no query completed while the stream was live"
+    for r in seen:
+        view = g.join_view(r.version)
+        np.testing.assert_array_equal(
+            r.value, np.asarray(gc.k_hop(view, np.array([2]), 2)))
+    # after the stream drains, the server serves the final snapshot
+    final = server.query(KHop(2, 2))
+    assert final.version == batches[-1].version
+
+
+def test_query_returns_its_own_result_with_pending_window():
+    """query() flushes the whole window but must return the result of the
+    query it just submitted — not whatever was first in the queue."""
+    server, _, batches = _setup()
+    server.step(batches[0])
+    server.submit(DegreeTopK(2))              # someone else's pending query
+    r = server.query(KHop(0, 1))
+    assert isinstance(r.query, KHop) and r.query.source == 0
+    assert server.served == 2                 # both were answered
+
+
+def test_engine_rejects_unknown_query_type():
+    engine = SnapshotQueryEngine()
+    g = DynamicGraph(8, 16)
+    g.apply(MutationBatch(Version(0, 0),
+                          add_src=np.array([0], np.int32),
+                          add_dst=np.array([1], np.int32)))
+    with pytest.raises(TypeError, match="unknown query"):
+        engine.execute(g.join_view(Version(0, 0)), ["not-a-query"])
+
+
+def test_failed_window_is_requeued_not_lost():
+    """One bad query must not silently discard the whole window: the
+    window is restored for a retry after the error surfaces."""
+    server, _, batches = _setup()
+    server.step(batches[0])
+    server.submit(KHop(0, 2))
+    server._pending.append(("not-a-query", 0.0))
+    with pytest.raises(TypeError, match="unknown query"):
+        server.flush()
+    assert len(server._pending) == 2          # nothing lost
+    server._pending = [p for p in server._pending
+                       if not isinstance(p[0], str)]
+    [res] = server.flush()                    # innocent query still answers
+    assert isinstance(res.query, KHop)
+
+
+def test_degree_topk_k_larger_than_n_returns_all():
+    server, _, batches = _setup(n=64)
+    server.step(batches[0])
+    ids, degs = server.query(DegreeTopK(1000)).value
+    assert len(ids) == 64
+    assert (np.diff(degs) <= 0).all()
+
+
+def test_ingested_version_log_stays_bounded():
+    """latest_sealed() trims versions older than the newest sealed one, so
+    a long-lived stream does not pin one entry per epoch forever."""
+    server, _, batches = _setup(epochs=8)
+    for b in batches:
+        server.step(b)
+        server.graph.latest_sealed()
+    assert len(server.graph._ingested_packed) == 1
+    assert server.graph.latest_sealed() == batches[-1].version

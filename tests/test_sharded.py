@@ -242,6 +242,145 @@ def test_ingest_into_sealed_epoch_is_rejected():
                                 add_dst=np.array([3], np.int32)))
 
 
+def test_mismatched_vertex_types_pad_or_raise():
+    """Fewer types than vertex adds means 'untyped' (padded with 0) — the
+    old behavior silently DROPPED the excess adds on whichever path
+    truncated first; surplus types are an error."""
+    b = MutationBatch(Version(0, 0),
+                      add_vertices=np.array([4, 5, 6], np.int32),
+                      vertex_types=np.array([2], np.int32))
+    assert b.vertex_types.tolist() == [2, 0, 0]
+    with pytest.raises(ValueError, match="meaningless"):
+        MutationBatch(Version(0, 0),
+                      add_vertices=np.array([4], np.int32),
+                      vertex_types=np.array([1, 2], np.int32))
+    # a batch mutated after construction (bypassing __post_init__) must
+    # fail loudly in the encoder, not silently drop vertex adds
+    b2 = MutationBatch(Version(0, 0),
+                       add_vertices=np.array([1, 2], np.int32),
+                       vertex_types=np.array([3, 3], np.int32))
+    b2.vertex_types = np.array([3], np.int32)
+    with pytest.raises(ValueError, match="disagree in length"):
+        encode_mutations(b2)
+    # a malformed batch rejected by ingest() leaves NO version bookkeeping:
+    # the corrected batch retries at the same version
+    sg = ShardedDynamicGraph(2, 8, 64)
+    with pytest.raises(ValueError, match="disagree in length"):
+        sg.ingest(b2)
+    assert sg._ingested_packed == []
+    b2.vertex_types = np.array([3, 3], np.int32)
+    sg.ingest(b2)
+    sg.seal_epoch(0)
+    assert sg.latest_sealed() == b2.version
+
+
+def test_padded_vertex_types_sharded_matches_reference():
+    """A padded batch must produce identical vertex tables on the sharded
+    and single-store paths (the divergence the truncation bug allowed)."""
+    batches = [
+        MutationBatch(Version(0, 0),
+                      add_vertices=np.array([0, 1, 2, 3], np.int32),
+                      vertex_types=np.array([2, 1], np.int32)),
+        MutationBatch(Version(1, 0),
+                      add_src=np.array([0, 2], np.int32),
+                      add_dst=np.array([3, 5], np.int32)),
+    ]
+    sg = ShardedDynamicGraph(2, 8, 64)
+    ref = LoopDynamicGraph(8, 64)
+    for b in batches:
+        sg.apply(b)
+        ref.apply(b)
+    np.testing.assert_array_equal(sg.v_created, ref.v_created)
+    np.testing.assert_array_equal(sg.v_type, ref.v_type)
+    assert sg.v_type[:4].tolist() == [2, 1, 0, 0]
+
+
+def test_decode_payloads_interleaved_replay_is_order_robust():
+    """A replay can deliver one version's rows split around another's (the
+    straggler-replay interleave): grouping must key on the packed version,
+    not trust endpoint rows. The old fast path saw rows[0] == rows[-1] and
+    collapsed ALL rows into one batch."""
+    b1 = MutationBatch(Version(2, 0),
+                       add_src=np.array([0, 1], np.int32),
+                       add_dst=np.array([1, 2], np.int32))
+    b2 = MutationBatch(Version(2, 1),
+                       del_src=np.array([0], np.int32),
+                       del_dst=np.array([1], np.int32))
+    _, _, p1 = encode_mutations(b1)
+    _, _, p2 = encode_mutations(b2)
+    out = decode_payloads([p1[:1], p2, p1[1:]])
+    assert [d.version for d in out] == [b1.version, b2.version]
+    np.testing.assert_array_equal(out[0].add_src, b1.add_src)
+    np.testing.assert_array_equal(out[0].add_dst, b1.add_dst)
+    assert len(out[0].del_src) == 0
+    np.testing.assert_array_equal(out[1].del_src, b2.del_src)
+
+
+def test_straggler_replays_parked_epochs_out_of_order():
+    """Straggler-replay regression: two parked slices delivered in REVERSED
+    order must still apply in version order and stitch byte-identically."""
+    b1 = MutationBatch(Version(1, 0),
+                       add_src=np.array([0, 2], np.int32),
+                       add_dst=np.array([1, 3], np.int32))
+    b2 = MutationBatch(Version(1, 1),
+                       add_src=np.array([4], np.int32),
+                       add_dst=np.array([1], np.int32),
+                       del_src=np.array([0], np.int32),
+                       del_dst=np.array([1], np.int32))
+    sg = ShardedDynamicGraph(1, 8, 64)     # one shard: everything parks on it
+    ref = LoopDynamicGraph(8, 64)
+    sg.apply(MutationBatch(Version(0, 0),
+                           add_src=np.array([6], np.int32),
+                           add_dst=np.array([7], np.int32)))
+    ref.apply(MutationBatch(Version(0, 0),
+                            add_src=np.array([6], np.int32),
+                            add_dst=np.array([7], np.int32)))
+    # both epoch-1 slices sit pending on the node; scramble their arrival
+    # order before the seal replays them (what an out-of-order straggler
+    # replay delivers)
+    node = sg.nodes[0]
+    sg.ingest(b1)
+    sg.ingest(b2)
+    pending = node.pending_payloads[1]
+    assert len(pending) == 2
+    node.pending_payloads[1] = pending[::-1]      # adversarial arrival order
+    sg.seal_epoch(1)
+    ref.apply(b1)
+    ref.apply(b2)
+    for v in (Version(1, 0), Version(1, 1)):
+        _assert_stitched_equal(sg, ref, v)
+
+
+def test_latest_sealed_and_frontier_subscription():
+    """latest_sealed() tracks the newest globally-sealed ingested version;
+    subscribers fire exactly when the global frontier moves."""
+    sg = ShardedDynamicGraph(2, 16, 64)
+    fired = []
+    sg.on_frontier_advance(fired.append)
+    assert sg.latest_sealed() is None
+    sg.ingest(MutationBatch(Version(0, 0),
+                            add_src=np.array([0], np.int32),
+                            add_dst=np.array([1], np.int32)))
+    assert sg.latest_sealed() is None             # ingested, not sealed
+    sg.seal_epoch(0)
+    assert sg.latest_sealed() == Version(0, 0)
+    assert fired == [0]
+    # straggler: shard 0 lags epoch 1 — the newest SEALED snapshot stays 0
+    sg.ingest(MutationBatch(Version(1, 0),
+                            add_src=np.array([2], np.int32),
+                            add_dst=np.array([3], np.int32)))
+    sg.seal_shard(1, 1)
+    assert sg.latest_sealed() == Version(0, 0)
+    assert fired == [0]
+    sg.seal_shard(0, 1)
+    assert sg.latest_sealed() == Version(1, 0)
+    assert fired == [0, 1]
+    # an empty sealed epoch advances the frontier but not the version
+    sg.seal_epoch(2)
+    assert sg.latest_sealed() == Version(1, 0)
+    assert fired == [0, 1, 2]
+
+
 def test_multiple_batches_per_epoch_before_seal():
     """Several version-numbered batches within one epoch, sealed once —
     must match the single store applying them in sequence."""
