@@ -7,6 +7,11 @@ baseline. "Regressed" means a ratio fell below half its baseline value:
 generous enough for noisy CI runners, tight enough to catch the
 vectorized/delta/sharded fast paths silently degrading to their fallbacks.
 
+One check is absolute rather than baseline-relative: the ``resharding``
+section must show splits firing and adaptive routing beating static
+dst-hash (speedup > 1.0) on the skewed stream — the claim itself, not
+just its trend.
+
     python benchmarks/check_bench.py --fresh BENCH_ingest.json \
         --baseline /tmp/baseline.json
 """
@@ -21,6 +26,9 @@ REQUIRED = {
     "mutation_ingest": ["speedup", "vectorized_muts_per_s"],
     "view_build": [],          # at least one churn entry, checked below
     "sharded_ingest": ["single_store_muts_per_s", "shards"],
+    "resharding": ["adaptive_vs_static_speedup", "adaptive_tail_muts_per_s",
+                   "static_tail_muts_per_s", "splits", "final_shards",
+                   "static_tail_max_shard_s", "adaptive_tail_max_shard_s"],
     "serve_graph": ["query_p50_s", "query_p95_s", "warm_pagerank_iters",
                     "cold_pagerank_iters", "warm_start_iter_reduction"],
 }
@@ -42,6 +50,8 @@ def _ratio_metrics(report: dict) -> dict[str, float]:
     # latencies are machine-bound, so only the warm-start ratio is gated
     out["serve_graph.warm_start_iter_reduction"] = \
         report["serve_graph"]["warm_start_iter_reduction"]
+    out["resharding.adaptive_vs_static_speedup"] = \
+        report["resharding"]["adaptive_vs_static_speedup"]
     return out
 
 
@@ -56,6 +66,18 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
                 errors.append(f"missing metric {section}.{m}")
     if not fresh.get("view_build"):
         errors.append("view_build has no churn entries")
+    # the re-sharding claim is absolute, not baseline-relative: on the
+    # skewed stream the planner must fire and adaptive routing must beat
+    # static dst-hash outright
+    resh = fresh.get("resharding", {})
+    if resh:
+        if not resh.get("splits"):
+            errors.append("resharding: no splits fired on the skewed stream")
+        speedup = resh.get("adaptive_vs_static_speedup")
+        if speedup is not None and speedup <= 1.0:
+            errors.append(
+                "resharding: adaptive routing does not beat static "
+                f"dst-hash (speedup {speedup:.2f} <= 1.0)")
     shards = fresh.get("sharded_ingest", {}).get("shards", {})
     for ns in SHARD_COUNTS:
         if ns not in shards:

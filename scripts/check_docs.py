@@ -1,0 +1,122 @@
+"""Docs reference checker: every code reference in the docs must resolve.
+
+Scans the inline-code spans (single-backtick; fenced blocks are skipped —
+they hold ASCII diagrams and shell transcripts) of ``docs/ARCHITECTURE.md``
+and ``examples/README.md`` and verifies three kinds of token, word by
+word:
+
+1. **Paths** — tokens matching ``*.py|md|yml|yaml|json|toml`` must exist
+   relative to the repo root, under ``src/repro/`` (so ``graph/sharded.py``
+   resolves), or under ``examples/``.
+2. **Dotted repro symbols** — ``repro.mod[.sub][.Symbol]`` must import,
+   with any trailing attribute resolving via ``getattr``.
+3. **Class attributes** — ``ClassName.attr`` where ``ClassName`` is
+   exported by one of the graph/core/launch modules must have that
+   attribute; an unknown ``ClassName`` is an error (docs should reference
+   checkable names).
+
+Anything else (inline math, shell flags, plain identifiers) is ignored.
+Exit status 1 with a listing if any reference is dangling.
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOCS = ["docs/ARCHITECTURE.md", "examples/README.md"]
+PATH_DIRS = [".", "src/repro", "examples"]
+REGISTRY_MODULES = [
+    "repro.graph.dyngraph", "repro.graph.sharded", "repro.graph.query",
+    "repro.graph.compute", "repro.graph.reference", "repro.graph.partition",
+    "repro.core.snapshotter", "repro.core.replica", "repro.core.versioned",
+    "repro.core.clock", "repro.core.views", "repro.launch.serve_graph",
+]
+
+PATH_RE = re.compile(r"^[\w./-]+\.(py|md|yml|yaml|json|toml)$")
+REPRO_RE = re.compile(r"^repro(\.\w+)+$")
+CLASS_ATTR_RE = re.compile(r"^([A-Z]\w+)\.(\w+)$")
+MODULE_ATTR_RE = re.compile(r"^([a-z_]\w*)\.(\w+)$")
+
+
+def inline_spans(text: str) -> list[str]:
+    """Single-backtick spans outside fenced code blocks."""
+    no_fences = re.sub(r"```.*?```", "", text, flags=re.S)
+    return re.findall(r"`([^`\n]+)`", no_fences)
+
+
+def build_registry() -> tuple[dict, dict]:
+    classes: dict[str, object] = {}
+    modules: dict[str, object] = {}
+    for name in REGISTRY_MODULES:
+        mod = importlib.import_module(name)
+        modules[name.rsplit(".", 1)[-1]] = mod
+        for attr in dir(mod):
+            obj = getattr(mod, attr)
+            if isinstance(obj, type):
+                classes.setdefault(attr, obj)
+    return classes, modules
+
+
+def check_token(token: str, classes: dict, modules: dict) -> str | None:
+    """Return an error string for a dangling reference, None otherwise."""
+    token = token.rstrip(".,;:")
+    if PATH_RE.match(token):
+        if any((ROOT / d / token).exists() for d in PATH_DIRS):
+            return None
+        return f"path not found: {token}"
+    if REPRO_RE.match(token):
+        parts = token.split(".")
+        for cut in range(len(parts), 1, -1):
+            try:
+                obj = importlib.import_module(".".join(parts[:cut]))
+            except ImportError:
+                continue
+            for attr in parts[cut:]:
+                if not hasattr(obj, attr):
+                    return f"symbol not found: {token}"
+                obj = getattr(obj, attr)
+            return None
+        return f"module not importable: {token}"
+    m = CLASS_ATTR_RE.match(token)
+    if m:
+        cls_name, attr = m.groups()
+        cls = classes.get(cls_name)
+        if cls is None:
+            return f"unknown class in reference: {token}"
+        if not hasattr(cls, attr):
+            return f"class attribute not found: {token}"
+        return None
+    m = MODULE_ATTR_RE.match(token)
+    if m and m.group(1) in modules:
+        if not hasattr(modules[m.group(1)], m.group(2)):
+            return f"module attribute not found: {token}"
+    return None
+
+
+def main() -> int:
+    classes, modules = build_registry()
+    errors: list[str] = []
+    for doc in DOCS:
+        path = ROOT / doc
+        if not path.exists():
+            errors.append(f"{doc}: file missing")
+            continue
+        for span in inline_spans(path.read_text()):
+            for word in span.split():
+                err = check_token(word, classes, modules)
+                if err:
+                    errors.append(f"{doc}: {err}")
+    for e in errors:
+        print(f"FAIL: {e}")
+    if not errors:
+        print(f"OK: all code references in {', '.join(DOCS)} resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

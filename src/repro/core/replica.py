@@ -174,6 +174,82 @@ class ReplicaManager:
         }
 
 
+# ------------------------------------------------------- shard-range scheduler
+@dataclasses.dataclass(frozen=True)
+class SplitDecision:
+    """One planner verdict: split ``shard``'s key range.
+
+    ``load`` is the shard's observed load (mutations + weighted query
+    touches, EWMA over recent epochs), ``mean_load`` the fleet mean at
+    decision time; ``reason`` is a human-readable audit line surfaced in
+    re-sharding summaries and server stats.
+    """
+    shard: int
+    load: float
+    mean_load: float
+    reason: str
+
+
+class ShardPlanner:
+    """Access-pattern-driven re-sharding policy — the paper's scheduler rule
+    (:meth:`ReplicaManager.rebalance`) lifted from per-item replicas to
+    whole shard key ranges.
+
+    ``rebalance`` mirrors/migrates single hot *items* from observed access
+    counts; a graph shard is instead a hash *range* of destination keys, so
+    the planner's unit of action is a range split: when one shard's
+    observed load (the same dynamic-equilibrium imbalance term as
+    :meth:`ReplicaManager.cost`) exceeds ``imbalance_threshold`` times the
+    fleet mean, it proposes splitting that shard's range in half
+    (consistent-hash style — only the migrating half moves). The mechanism
+    (plan versioning, epoch-aligned migration) lives in
+    ``repro.graph.sharded``; this class is pure policy and holds no graph
+    state, so it is trivially testable and swappable.
+
+    Guard rails: never propose beyond ``max_shards``; require
+    ``min_epochs`` of observation since the last split (cooldown — stats
+    reset on every split, so ``epochs_observed`` restarts) and ``min_load``
+    total observed load (don't react to noise on an idle store).
+    """
+
+    def __init__(self, *, imbalance_threshold: float = 1.5,
+                 min_load: float = 512.0, min_epochs: int = 2,
+                 max_shards: int = 16):
+        if imbalance_threshold <= 1.0:
+            raise ValueError("imbalance_threshold must exceed 1.0 "
+                             "(1.0 means perfectly balanced)")
+        self.imbalance_threshold = imbalance_threshold
+        self.min_load = min_load
+        self.min_epochs = min_epochs
+        self.max_shards = max_shards
+
+    def propose(self, loads, *, epochs_observed: int) -> Optional[SplitDecision]:
+        """One scheduler round: return the split to perform, or None.
+
+        ``loads`` is the per-shard load vector (any sequence of floats);
+        ``epochs_observed`` is how many sealed epochs the vector spans.
+        Pure function of its inputs — safe to call every epoch.
+        """
+        loads = [float(x) for x in loads]
+        n_shards = len(loads)
+        if n_shards >= self.max_shards:
+            return None
+        if epochs_observed < self.min_epochs:
+            return None
+        total = sum(loads)
+        if total < self.min_load:
+            return None
+        mean = total / n_shards
+        hot = max(range(n_shards), key=lambda i: loads[i])
+        if loads[hot] <= self.imbalance_threshold * mean:
+            return None
+        return SplitDecision(
+            shard=hot, load=loads[hot], mean_load=mean,
+            reason=(f"shard {hot} load {loads[hot]:.0f} > "
+                    f"{self.imbalance_threshold:.2f}x mean {mean:.1f} "
+                    f"over {epochs_observed} epochs"))
+
+
 # ----------------------------------------------------- LM-side sharding policy
 @dataclasses.dataclass
 class TensorAccess:

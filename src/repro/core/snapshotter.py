@@ -14,6 +14,14 @@ Invariants (property-tested):
   * a computation scheduled on snapshot v only launches once global >= v,
   * dispatch never blocks on the *global* frontier (only on the target
     node's local frontier).
+
+This is layer 2 of the pipeline mapped in ``docs/ARCHITECTURE.md``
+(ingest -> seal -> view -> query); ``graph/sharded.py`` stacks the
+sharded graph store on these primitives via the ``on_seal`` hook.
+
+Thread-safety: none of these classes lock internally — the serving layer
+serializes every touch (see ``launch/serve_graph.py``); the benchmark and
+test drivers are single-threaded.
 """
 from __future__ import annotations
 
@@ -57,6 +65,7 @@ class DataNode:
         self.applied_batch_count = 0
 
     def receive(self, mut: Mutation) -> None:
+        """Scalar ingress: queue one mutation for its epoch's seal."""
         self.pending[mut.epoch].append(mut)
 
     def receive_batch(self, epoch: int, keys: np.ndarray,
@@ -76,6 +85,10 @@ class DataNode:
         frontier advanced) if it returns: a failing hook — e.g. a shard
         hitting capacity — leaves the epoch pending and re-sealable instead
         of silently destroying its mutations.
+
+        Raises:
+            ValueError: ``epoch`` is not ``local_frontier + 1`` (local
+                snapshots seal strictly in order).
         """
         if epoch != self.local_frontier + 1:
             raise ValueError(
@@ -116,9 +129,15 @@ class SnapshotCoordinator:
 
     @property
     def global_frontier(self) -> int:
+        """Highest epoch sealed on EVERY node (-1 before the first)."""
         return self._global
 
     def advance(self) -> int:
+        """Recompute the global frontier (min over local frontiers), run
+        any newly-eligible scheduled computations, and notify subscribers
+        if it moved. Returns the (possibly unchanged) frontier. Raises
+        ``AssertionError`` if the frontier would regress — impossible
+        unless a node's local frontier was rolled back externally."""
         new = min(n.local_frontier for n in self.nodes)
         if new < self._global:
             raise AssertionError("global snapshot frontier went backwards")
@@ -147,7 +166,15 @@ class SnapshotCoordinator:
 
 
 class IngestNode:
-    """Dispatches mutations asynchronously (paper's no-wait rule)."""
+    """Dispatches mutations asynchronously (paper's no-wait rule).
+
+    ``route`` maps a routing key to a node index; the sharded store swaps
+    it at a re-sharding cutover (``RoutingPlan.assign`` of the successor
+    plan), which is safe because cutover requires quiescence — nothing
+    in-flight is ever re-routed. Ineligible mutations park in ``blocked``
+    / ``blocked_batches`` until :meth:`retry_blocked` /
+    :meth:`retry_blocked_batches` re-dispatches them.
+    """
 
     def __init__(self, nodes: list[DataNode], route: Callable[[int], int]):
         self.nodes = nodes
@@ -168,11 +195,14 @@ class IngestNode:
         return False
 
     def retry_blocked(self) -> int:
+        """Re-dispatch every parked scalar mutation; returns how many
+        landed (the rest park again)."""
         muts, self.blocked = self.blocked, []
         return sum(self.dispatch(m) for m in muts)
 
     def dispatch_batch(self, keys: np.ndarray, epochs: np.ndarray,
-                       payload=None) -> int:
+                       payload=None, *,
+                       node_ids: np.ndarray | None = None) -> int:
         """Vectorized no-wait dispatch: route a whole mutation array at once.
 
         Applies the same per-mutation rule as :meth:`dispatch` (target
@@ -187,18 +217,33 @@ class IngestNode:
         each (node, epoch) group's payload slice is delivered with its keys
         and surfaced to the node's ``on_seal`` hook at seal time. Grouping
         is stable, so a group's payload rows keep their original order.
+
+        ``node_ids`` overrides ``route`` with an explicit per-mutation
+        target array (same shape as ``keys``). The re-sharding migration
+        uses this: its delete half must land on the *source* shard even
+        though the migrating keys already route to the target under the
+        newly-activated plan. Eligibility, parking, and seal semantics are
+        unchanged — an overridden mutation is still an ordinary payload.
+        Parked slices are re-dispatched through ``route``, so overrides
+        require eligible targets (the migration's quiescence precondition
+        guarantees this).
         """
         keys = np.asarray(keys)
         epochs = np.asarray(epochs)
         if keys.size == 0:
             return 0
-        try:
-            node_ids = np.asarray(self.route(keys))
+        if node_ids is not None:
+            node_ids = np.asarray(node_ids)
             if node_ids.shape != keys.shape:
-                raise TypeError
-        except Exception:  # route not vectorizable — apply elementwise
-            node_ids = np.asarray([self.route(int(k)) for k in keys],
-                                  np.int64)
+                raise ValueError("node_ids must match keys elementwise")
+        else:
+            try:
+                node_ids = np.asarray(self.route(keys))
+                if node_ids.shape != keys.shape:
+                    raise TypeError
+            except Exception:  # route not vectorizable — apply elementwise
+                node_ids = np.asarray([self.route(int(k)) for k in keys],
+                                      np.int64)
         frontiers = np.asarray([n.local_frontier for n in self.nodes])
         ok = frontiers[node_ids] >= epochs - 1
         # steady-state fast path: one epoch, every node caught up — group by
@@ -240,6 +285,8 @@ class IngestNode:
         return n_ok
 
     def retry_blocked_batches(self) -> int:
+        """Re-dispatch every parked batch slice (through ``route``);
+        returns how many mutations landed (the rest park again)."""
         batches, self.blocked_batches = self.blocked_batches, []
         done = 0
         for epoch, keys, payload in batches:

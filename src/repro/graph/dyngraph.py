@@ -168,6 +168,24 @@ def prune_views(views: dict, budget: int) -> int:
     return len(drop)
 
 
+def prune_retired(views: dict, floor: int) -> int:
+    """Drop cached entries with version key < ``floor`` — but only once an
+    entry at or above the floor exists, so the newest pre-floor entry keeps
+    serving (and warm-starting) until the successor it waits on is cached.
+
+    The sharded store uses this after a re-sharding migration: entries
+    below the active routing plan's activation version were built under a
+    retired plan and will never be served again once the first post-cutover
+    snapshot exists. Returns the number dropped.
+    """
+    if floor <= 0 or not any(k >= floor for k in views):
+        return 0
+    drop = [k for k in views if k < floor]
+    for k in drop:
+        del views[k]
+    return len(drop)
+
+
 def build_join_view(version: Version, n: int, keys, src_s, dst_s,
                     in_deg, out_deg) -> JoinView:
     """Assemble a JoinView from canonical (dst, src)-ordered rows + degree
@@ -446,13 +464,19 @@ class DynamicGraph:
             np.add.at(out_deg, asrc, 1)
         return self._make_view(version, keys, src_s, dst_s, in_deg, out_deg)
 
-    def gc_views(self, keep_latest: int = 4) -> int:
+    def gc_views(self, keep_latest: int = 4, *, retire_below: int = 0) -> int:
         """Collect obsolete join views (paper §2.2 obsolete-replica GC).
 
         Retention is churn-adaptive: instead of the newest ``keep_latest``
         views, a version-spaced *ladder* (:func:`ladder_keep`) is kept, so a
         request for any past version finds a delta-patch base within ~2x its
         distance from the frontier under the same budget.
+
+        ``retire_below`` additionally drops every cached view below that
+        packed version once a newer one is cached (:func:`prune_retired`) —
+        the sharded store passes a re-sharding migration's activation
+        version here so a shard involved in a split does not pin pre-split
+        views (built under a retired routing plan) in its ladder.
 
         Also trims the ingestion delta log: records at or below the oldest
         retained view's version can never contribute to a future delta
@@ -463,7 +487,8 @@ class DynamicGraph:
         any later-cached old view is then below the floor and rebuilds
         from scratch, never from missing records).
         """
-        dropped = prune_views(self._views, keep_latest)
+        dropped = prune_retired(self._views, retire_below)
+        dropped += prune_views(self._views, keep_latest)
         if self._views:
             floor = min(self._views)
         elif self.versions:
@@ -476,21 +501,18 @@ class DynamicGraph:
 
 
 # ----------------------------------------------------------- synthetic data
-def synthesize_churn_stream(n_vertices: int, n_epochs: int,
-                            adds_per_epoch: int, *, seed: int = 0,
-                            delete_frac: float = 0.0,
-                            readd_frac: float = 0.0) -> list[MutationBatch]:
-    """Uniform-random mutation batches with controllable churn: each epoch
-    deletes ``delete_frac`` of the live edges and re-adds ``readd_frac`` of
-    the previously deleted ones. Shared by the equivalence tests and the
-    ingestion benchmark so both exercise identical stream semantics."""
-    rng = np.random.default_rng(seed)
+def _churn_batches(rng, n_epochs: int, sample_adds, *, delete_frac: float,
+                   readd_frac: float) -> list[MutationBatch]:
+    """Shared epoch loop for the synthetic stream generators: per-epoch
+    ``(src, dst)`` adds from ``sample_adds(rng)``, live-set bookkeeping,
+    ``delete_frac`` uniform deletes and ``readd_frac`` re-adds of
+    previously deleted edges. One implementation of the delete/re-add
+    bookkeeping keeps the uniform and skewed generators in lockstep."""
     live: list[tuple[int, int]] = []
     dead: list[tuple[int, int]] = []
     batches = []
     for e in range(n_epochs):
-        src = rng.integers(0, n_vertices, adds_per_epoch).astype(np.int32)
-        dst = rng.integers(0, n_vertices, adds_per_epoch).astype(np.int32)
+        src, dst = sample_adds(rng)
         adds_s, adds_d = list(src), list(dst)
         if readd_frac and dead:
             k = int(len(dead) * readd_frac)
@@ -516,6 +538,50 @@ def synthesize_churn_stream(n_vertices: int, n_epochs: int,
             add_dst=np.array(adds_d, np.int32),
             del_src=del_s, del_dst=del_d))
     return batches
+
+
+def synthesize_churn_stream(n_vertices: int, n_epochs: int,
+                            adds_per_epoch: int, *, seed: int = 0,
+                            delete_frac: float = 0.0,
+                            readd_frac: float = 0.0) -> list[MutationBatch]:
+    """Uniform-random mutation batches with controllable churn: each epoch
+    deletes ``delete_frac`` of the live edges and re-adds ``readd_frac`` of
+    the previously deleted ones. Shared by the equivalence tests and the
+    ingestion benchmark so both exercise identical stream semantics."""
+
+    def sample_adds(rng):
+        src = rng.integers(0, n_vertices, adds_per_epoch).astype(np.int32)
+        dst = rng.integers(0, n_vertices, adds_per_epoch).astype(np.int32)
+        return src, dst
+
+    return _churn_batches(np.random.default_rng(seed), n_epochs, sample_adds,
+                          delete_frac=delete_frac, readd_frac=readd_frac)
+
+
+def synthesize_skewed_stream(n_vertices: int, n_epochs: int,
+                             adds_per_epoch: int, *, seed: int = 0,
+                             zipf_a: float = 1.2,
+                             delete_frac: float = 0.0) -> list[MutationBatch]:
+    """Zipf-skewed mutation batches: destination vertices are drawn from a
+    Zipf(``zipf_a``) rank distribution mapped through a random permutation
+    of the vertex ids, so a handful of (randomly placed) vertices receive
+    most of the edges — the hot-shard regime the access-pattern-adaptive
+    re-sharding planner exists for. Sources are uniform. ``delete_frac``
+    deletes that fraction of the live edges each epoch (uniformly, so
+    deletes of hot-destination edges exercise post-migration delete
+    routing). Shared by the ``resharding`` benchmark axis, the demo, and
+    the split-equivalence tests."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_vertices)
+
+    def sample_adds(rng):
+        ranks = rng.zipf(zipf_a, adds_per_epoch)
+        dst = perm[(ranks - 1) % n_vertices].astype(np.int32)
+        src = rng.integers(0, n_vertices, adds_per_epoch).astype(np.int32)
+        return src, dst
+
+    return _churn_batches(rng, n_epochs, sample_adds,
+                          delete_frac=delete_frac, readd_frac=0.0)
 
 
 def synthesize_stream(n_vertices: int, n_epochs: int, adds_per_epoch: int,

@@ -22,7 +22,10 @@ calls as possible —
 
 The engine is deliberately snapshot-agnostic — the serving loop
 (``launch.serve_graph``) picks WHICH snapshot (always
-``ShardedDynamicGraph.latest_sealed()``) and hands the view in.
+``ShardedDynamicGraph.latest_sealed()``) and hands the view in. It is
+layer 4 of the pipeline mapped in ``docs/ARCHITECTURE.md``; the
+:func:`query_touch_vertices` helper is the access-pattern feed for the
+re-sharding planner described there.
 """
 from __future__ import annotations
 
@@ -34,7 +37,7 @@ import numpy as np
 
 from repro.core.versioned import Version
 from repro.graph import compute as gc
-from repro.graph.dyngraph import JoinView, prune_views
+from repro.graph.dyngraph import JoinView, prune_retired, prune_views
 
 
 # ------------------------------------------------------------- query types
@@ -71,10 +74,34 @@ Query = Union[KHop, Reachability, DegreeTopK, PageRankQuery]
 
 @dataclasses.dataclass
 class QueryResult:
+    """One answered query: the query itself, its value, the snapshot
+    ``version`` it was answered at, and the submit-to-answer latency."""
     query: Query
     value: object
     version: Version
     latency_s: float = 0.0
+
+
+def query_touch_vertices(queries: Sequence[Query]) -> np.ndarray:
+    """Vertex ids a query window touches — the access-pattern feed for the
+    re-sharding planner.
+
+    Point-query anchors count (k-hop sources, reachability endpoints);
+    whole-graph queries (degree top-k, PageRank) touch every shard evenly
+    and would only dilute the imbalance signal, so they contribute
+    nothing. The serving layer bins these ids to shards via
+    ``ShardedDynamicGraph.record_query_touches``. Returns an int64 array
+    (possibly empty). Raises nothing: unknown query types are ignored
+    here — ``SnapshotQueryEngine.execute`` is the layer that rejects
+    them."""
+    touched: list[int] = []
+    for q in queries:
+        if isinstance(q, KHop):
+            touched.append(q.source)
+        elif isinstance(q, Reachability):
+            touched.append(q.src)
+            touched.append(q.dst)
+    return np.asarray(touched, np.int64)
 
 
 class SnapshotQueryEngine:
@@ -129,13 +156,23 @@ class SnapshotQueryEngine:
                 self.rank_cold_starts += 1
             return self._rank_cache.setdefault(key, res)
 
-    def gc(self, keep_latest: int = 4) -> int:
+    def gc(self, keep_latest: int = 4, *, retire_below: int = 0) -> int:
         """Ladder-GC the per-version rank cache (same retention policy as
         the join-view caches: a version-spaced ladder, so any past version
         keeps a warm-start base within ~2x its distance from the
-        frontier)."""
+        frontier). Returns the number of entries dropped.
+
+        ``retire_below`` (a packed version; the serving layer passes
+        ``ShardedDynamicGraph.plan_floor()``) additionally drops every
+        entry below it once a newer entry exists: after a re-sharding
+        cutover those ranks are keyed by snapshots of a retired routing
+        plan and will never be served again — but the newest one is
+        retained until the first post-cutover ranks are cached, so the
+        warm-start chain crosses the cutover instead of restarting cold.
+        Thread-safe (holds the cache lock)."""
         with self._rank_lock:
-            return prune_views(self._rank_cache, keep_latest)
+            dropped = prune_retired(self._rank_cache, retire_below)
+            return dropped + prune_views(self._rank_cache, keep_latest)
 
     @property
     def cached_rank_versions(self) -> list[int]:

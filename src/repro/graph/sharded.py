@@ -1,17 +1,22 @@
 """Sharded dynamic-graph store — the paper's distributed data model on top
-of the vectorized single store.
+of the vectorized single store, with access-pattern-adaptive re-sharding.
+
+See ``docs/ARCHITECTURE.md`` for the layer-by-layer map of the
+ingest -> seal -> view -> query pipeline and the re-sharding correctness
+argument; this docstring summarizes the store itself.
 
 The evolving graph is distributed across ``core.snapshotter.DataNode``s,
 one :class:`~repro.graph.dyngraph.DynamicGraph` shard per node, with
-mutations routed by **destination vertex** — the same hash route
-``IngestNode`` uses — so every edge (and every delete of it) lands on
-exactly one shard and shard-local LIFO delete semantics equal the global
-ones. Ingestion goes through ``IngestNode.dispatch_batch`` with the encoded
-mutations riding along as a payload: the paper's no-wait rule applies
-unchanged (a shard whose local frontier lags parks its slice in
-``blocked_batches``; healthy shards keep ingesting), and a shard *applies*
-its slice inside ``DataNode.seal_epoch`` via the ``on_seal`` hook, so the
-local snapshot and the shard store seal atomically.
+mutations routed by **destination vertex** through a versioned
+:class:`RoutingPlan` (plan 0 is the classic ``key % n_shards`` dst-hash).
+Every edge (and every delete of it) lands on exactly one shard, so
+shard-local LIFO delete semantics equal the global ones. Ingestion goes
+through ``IngestNode.dispatch_batch`` with the encoded mutations riding
+along as a payload: the paper's no-wait rule applies unchanged (a shard
+whose local frontier lags parks its slice in ``blocked_batches``; healthy
+shards keep ingesting), and a shard *applies* its slice inside
+``DataNode.seal_epoch`` via the ``on_seal`` hook, so the local snapshot
+and the shard store seal atomically.
 
 Each shard maintains its own delta-patched join view over its slice;
 :meth:`ShardedDynamicGraph.join_view` stitches the per-shard CSRs into a
@@ -22,25 +27,223 @@ the canonical global order exactly). The ``SnapshotCoordinator`` frontier
 gates which epochs are queryable: a snapshot is only addressable once every
 shard has sealed it, which is the paper's global-snapshot rule.
 
+**Dynamic re-sharding** (paper §2.2: the data manager "improves data
+locality thus can adapt to data access patterns of different algorithms"):
+an :class:`AccessStats` ledger tracks per-shard load (mutation routing
+counts plus query touches fed in by the serving layer). When the
+:class:`~repro.core.replica.ShardPlanner` flags a hot shard,
+:meth:`ShardedDynamicGraph.split_shard` activates a successor
+:class:`RoutingPlan` that splits the hot shard's key range in half
+(consistent-hash style: one extra bit of a key hash), creates the new
+shard, and migrates the moving half *as ordinary mutation payloads* — one
+delete per moving live row dispatched to the source shard, one add to the
+target — all stamped with the cutover version ``(activation_epoch, 0)``.
+The migration therefore applies atomically when the activation epoch
+seals, older snapshots keep resolving from the source shard's rows (their
+delete stamps are the cutover version, which older masks exclude), and
+``latest_sealed()`` views remain byte-identical to the single-store oracle
+before, during, and after the cutover. Cutover requires a *quiescent*
+store (frontier == every local frontier == last ingested epoch, nothing
+parked), which the cooperative serving loop guarantees between epochs.
+
 For distributed compute, :meth:`shard_views` exposes the pre-sharded
 per-shard views directly — ``partition.partition_graph_sharded`` consumes
-them without re-bucketing edges.
+them without re-bucketing.
+
+Thread-safety: like ``DynamicGraph``, this class is not internally
+locked; the serving layer (``launch.serve_graph.GraphQueryServer``)
+serializes every mutating touch behind one lock and runs query compute on
+immutable stitched views outside it.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.replica import ShardPlanner
 from repro.core.snapshotter import DataNode, IngestNode, SnapshotCoordinator
 from repro.core.versioned import Version
-from repro.graph.dyngraph import (DEFAULT_CHURN_THRESHOLD, DynamicGraph,
+from repro.graph.dyngraph import (DEFAULT_CHURN_THRESHOLD, MAXV, DynamicGraph,
                                   JoinView, MutationBatch, build_join_view,
-                                  prune_views)
+                                  prune_retired, prune_views)
 
 # payload row kinds, in the order DynamicGraph.apply processes them
 K_VERTEX, K_ADD, K_DEL = 0, 1, 2
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer (vectorized): the refinement hash consulted by
+    :meth:`RoutingPlan.assign` for split bits. Independent of the base
+    ``key % n_base`` residue, so a split halves a shard's keys uniformly
+    regardless of their residue structure."""
+    x = np.asarray(x).astype(np.uint64)
+    x = (x + np.uint64(0x9E3779B97F4A7C15))
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLeaf:
+    """One shard's key range under a :class:`RoutingPlan`.
+
+    A key belongs to this leaf iff ``key % n_base == residue`` and the low
+    ``depth`` bits of ``_mix64(key)`` equal ``path``. Every shard owns
+    exactly one leaf (splits append a new shard for the new half-range),
+    and the leaves tile the key space: each key matches exactly one leaf.
+    """
+    shard: int
+    residue: int
+    depth: int
+    path: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingPlan:
+    """Versioned key->shard assignment with consistent-hash range splits.
+
+    Plan 0 (:meth:`initial`) reproduces the static dst-hash of PR 2
+    exactly: shard ``i`` owns ``key % n_base == i`` at depth 0. Each
+    :meth:`split` derives the successor plan: the hot shard's leaf gains
+    one refinement bit (bit value 0 stays), and a NEW shard (id = previous
+    shard count) takes the bit-1 half — so only the migrating half-range
+    moves and every other shard's assignment is untouched.
+
+    Plans are immutable; ``history`` records every split as
+    ``(hot_shard, new_shard, activation_epoch)`` so :meth:`replay`
+    reproduces any plan deterministically (property-tested in
+    ``tests/test_resharding.py``). ``activation_epoch`` is the first epoch
+    routed by this plan — mutations of earlier epochs were routed (and
+    applied) under the predecessor.
+    """
+    plan_id: int
+    activation_epoch: int
+    n_base: int
+    leaves: tuple[ShardLeaf, ...]
+    history: tuple[tuple[int, int, int], ...] = ()
+
+    @classmethod
+    def initial(cls, n_shards: int) -> "RoutingPlan":
+        """Plan 0: the static ``key % n_shards`` dst-hash route."""
+        return cls(0, 0, n_shards,
+                   tuple(ShardLeaf(i, i, 0, 0) for i in range(n_shards)))
+
+    @classmethod
+    def replay(cls, n_base: int,
+               history: tuple[tuple[int, int, int], ...]) -> "RoutingPlan":
+        """Rebuild the plan a split history produced. Deterministic: the
+        same history always yields the same leaves, hence the same
+        assignment for every key."""
+        plan = cls.initial(n_base)
+        for hot, new, activation in history:
+            plan = plan.split(hot, activation)
+            if plan.leaves[-1].shard != new:
+                raise ValueError(f"history names new shard {new} but replay "
+                                 f"produced {plan.leaves[-1].shard}")
+        return plan
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.leaves)
+
+    def assign(self, keys) -> np.ndarray:
+        """Vectorized key->shard assignment under this plan.
+
+        Accepts a scalar (returns int — the ``IngestNode.dispatch`` scalar
+        path) or an array (returns an int64 array of the same shape).
+        Every key matches exactly one leaf, so the result is total.
+        """
+        arr = np.asarray(keys)
+        scalar = arr.ndim == 0
+        k = np.atleast_1d(arr).astype(np.int64)
+        residue = k % self.n_base
+        h = _mix64(k)
+        out = np.empty(k.shape, np.int64)
+        for leaf in self.leaves:
+            mask = np.uint64((1 << leaf.depth) - 1)
+            mine = (residue == leaf.residue) & ((h & mask)
+                                               == np.uint64(leaf.path))
+            out[mine] = leaf.shard
+        return int(out[0]) if scalar else out
+
+    def split(self, hot_shard: int, activation_epoch: int) -> "RoutingPlan":
+        """Successor plan: halve ``hot_shard``'s range, giving the bit-1
+        half to a new shard (id = current shard count)."""
+        leaf = self.leaves[hot_shard]
+        if leaf.shard != hot_shard:
+            raise AssertionError("leaf/shard correspondence broken")
+        new_shard = len(self.leaves)
+        leaves = list(self.leaves)
+        leaves[hot_shard] = ShardLeaf(hot_shard, leaf.residue,
+                                      leaf.depth + 1, leaf.path)
+        leaves.append(ShardLeaf(new_shard, leaf.residue, leaf.depth + 1,
+                                leaf.path | (1 << leaf.depth)))
+        return RoutingPlan(
+            self.plan_id + 1, activation_epoch, self.n_base, tuple(leaves),
+            self.history + ((hot_shard, new_shard, activation_epoch),))
+
+
+class AccessStats:
+    """Per-shard load ledger: the planner's observation window.
+
+    Two exponentially-decayed counters per shard — ``mutations`` (rows
+    routed there at ingest) and ``queries`` (query touch vertices the
+    serving layer reports via
+    :meth:`ShardedDynamicGraph.record_query_touches`). ``loads()`` is
+    their weighted sum; the decay is applied once per globally-sealed
+    epoch, so the window tracks recent epochs and a formerly-hot shard
+    cools off. ``epochs_observed`` counts sealed epochs since the last
+    :meth:`reset` (splits reset the ledger — fresh plan, fresh window —
+    which doubles as the planner's cooldown clock).
+    """
+
+    def __init__(self, n_shards: int, *, decay: float = 0.5,
+                 query_weight: float = 1.0):
+        if not 0.0 < decay <= 1.0:
+            raise ValueError("decay must be in (0, 1]")
+        self.decay = decay
+        self.query_weight = query_weight
+        self.mutations = np.zeros(n_shards, np.float64)
+        self.queries = np.zeros(n_shards, np.float64)
+        self.epochs_observed = 0
+        self._last_frontier = -1
+
+    def record_mutations(self, counts: np.ndarray) -> None:
+        self.mutations += counts
+
+    def record_queries(self, counts: np.ndarray) -> None:
+        self.queries += counts
+
+    def on_frontier_advance(self, frontier: int) -> None:
+        """Decay tick, one per newly-sealed EPOCH. A straggler catching up
+        can move the global frontier several epochs in one advance (one
+        subscriber notification), so the tick is driven by the frontier
+        value, not the notification count — otherwise multi-epoch
+        advances would under-decay the window and stretch the planner's
+        cooldown."""
+        epochs = frontier - self._last_frontier
+        if epochs <= 0:
+            return
+        self._last_frontier = frontier
+        self.epochs_observed += epochs
+        if self.decay < 1.0:
+            self.mutations *= self.decay ** epochs
+            self.queries *= self.decay ** epochs
+
+    def loads(self) -> np.ndarray:
+        """Per-shard load vector the planner scores."""
+        return self.mutations + self.query_weight * self.queries
+
+    def reset(self, n_shards: int) -> None:
+        """Start a fresh observation window (sized for ``n_shards``).
+        The frontier watermark is global state, not window state, so it
+        survives the reset."""
+        self.mutations = np.zeros(n_shards, np.float64)
+        self.queries = np.zeros(n_shards, np.float64)
+        self.epochs_observed = 0
 
 
 def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
@@ -53,6 +256,10 @@ def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
     ordering (vertices, then edge adds, then deletes) matches the order
     ``DynamicGraph.apply`` processes a batch, so a shard replaying its rows
     in payload order reproduces the single store's semantics.
+
+    Raises ``ValueError`` if ``add_vertices`` and ``vertex_types`` disagree
+    in length (a batch mutated after construction, bypassing
+    ``MutationBatch.__post_init__``).
     """
     v = batch.version.pack()
     # MutationBatch.__post_init__ pads/validates, so the two arrays agree by
@@ -91,7 +298,13 @@ def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
 
 def decode_payloads(payloads: list[np.ndarray]) -> list[MutationBatch]:
     """Reassemble a shard's payload rows (arrival order) into per-version
-    MutationBatches, preserving within-batch mutation order."""
+    MutationBatches, preserving within-batch mutation order.
+
+    Rows of the same packed version — e.g. a re-sharding migration slice
+    and a user batch that share the cutover version — merge into ONE batch
+    in arrival order, which is exactly the single store's apply order for
+    that version.
+    """
     if not payloads:
         return []
     rows = np.concatenate(payloads, axis=0) if len(payloads) > 1 \
@@ -130,10 +343,12 @@ def stitch_join_views(version: Version,
                       views: list[JoinView]) -> JoinView:
     """Merge per-shard canonical CSRs into the global one.
 
-    Every (src, dst) key lives on exactly one shard (dst-hash routing) and
-    each shard's rows are already (dst, src)-sorted, so a stable argsort of
-    the concatenated keys is a duplicate-safe k-way merge: the result is
-    byte-identical to the single store's canonical CSR.
+    Every (src, dst) key lives on exactly one shard (plan-based dst
+    routing — a migration moves a key wholesale, so this holds across
+    splits too) and each shard's rows are already (dst, src)-sorted, so a
+    stable argsort of the concatenated keys is a duplicate-safe k-way
+    merge: the result is byte-identical to the single store's canonical
+    CSR. Raises ``ValueError`` on an empty view list.
     """
     if not views:
         raise ValueError("no shard views to stitch")
@@ -152,45 +367,85 @@ def stitch_join_views(version: Version,
 
 
 class ShardedDynamicGraph:
-    """N DynamicGraph shards behind an IngestNode + SnapshotCoordinator.
+    """N DynamicGraph shards behind an IngestNode + SnapshotCoordinator,
+    re-shardable at runtime from observed access patterns.
 
-    ``e_max`` is the **per-shard** edge capacity. ``route`` maps a routing
-    key (destination vertex / vertex id) to a shard id and must be
-    NumPy-vectorizable for the batched dispatch fast path; the default is
-    the same modular hash the examples use for ``IngestNode``.
+    Args:
+        n_shards: initial shard count (splits may grow it).
+        n_max: global vertex capacity (every shard sees the full id space).
+        e_max: **per-shard** edge capacity.
+        churn_threshold: per-shard delta-view fallback threshold
+            (see ``DynamicGraph``).
+        route: optional custom routing callable ``key -> shard``
+            (NumPy-vectorizable for the batched fast path). Providing one
+            disables plan-based routing — and with it re-sharding
+            (``split_shard``/``maybe_reshard`` raise / no-op).
+        planner: optional :class:`~repro.core.replica.ShardPlanner`
+            consulted by :meth:`maybe_reshard`. Without one, re-sharding
+            only happens via explicit :meth:`split_shard` calls.
+        stats_decay / query_weight: :class:`AccessStats` window shape.
 
     The synchronous driving pattern is one batch per epoch::
 
         sg.ingest(batch)                  # no-wait dispatch to shards
         sg.seal_epoch(batch.version.epoch)  # seal + apply + advance frontier
+        sg.maybe_reshard()                # optional: planner-driven split
 
-    (or ``sg.apply(batch)`` for both at once). Per-shard sealing
+    (or ``sg.apply(batch)`` for ingest + seal at once). Per-shard sealing
     (``seal_shard``) lets a straggler shard lag: its slice stays parked and
     the global frontier — and therefore ``join_view`` — holds back until it
     catches up.
+
+    Not internally locked — see the module docstring for the serving
+    layer's locking discipline.
     """
 
     def __init__(self, n_shards: int, n_max: int, e_max: int, *,
                  churn_threshold: float = DEFAULT_CHURN_THRESHOLD,
-                 route: Optional[Callable] = None):
+                 route: Optional[Callable] = None,
+                 planner: Optional[ShardPlanner] = None,
+                 stats_decay: float = 0.5, query_weight: float = 1.0):
         if n_shards < 1:
             raise ValueError("need at least one shard")
-        self.n_shards = n_shards
         self.n_max = n_max
         self.e_max = e_max
-        self.route = route if route is not None else (lambda k: k % n_shards)
+        self.churn_threshold = churn_threshold
+        if route is not None:
+            if planner is not None:
+                raise ValueError(
+                    "a custom route disables plan-based re-sharding; "
+                    "drop the planner or the route")
+            self.plan: Optional[RoutingPlan] = None
+            self.route = route
+        else:
+            self.plan = RoutingPlan.initial(n_shards)
+            self.route = self.plan.assign
+        self.planner = planner
+        self.access_stats = AccessStats(n_shards, decay=stats_decay,
+                                        query_weight=query_weight)
         self.shards = [DynamicGraph(n_max, e_max, churn_threshold)
                        for _ in range(n_shards)]
         self.nodes = [DataNode(i, on_seal=self._on_seal(i))
                       for i in range(n_shards)]
+        # nodes is a SHARED list: coordinator and ingest node observe
+        # appended shards (splits) without re-wiring
         self.coordinator = SnapshotCoordinator(self.nodes)
         self.ingest_node = IngestNode(self.nodes, route=self.route)
+        self.coordinator.subscribe(self.access_stats.on_frontier_advance)
         self._views: dict[int, JoinView] = {}
         self._last_version = -1
         self._ingested_packed: list[int] = []   # every ingested version, asc
+        # completed split records: {"plan_id", "source", "target",
+        # "activation_epoch", "migrated_edges"} — telemetry + plan-aware GC
+        self.migrations: list[dict] = []
         # per-shard cumulative apply seconds — the benchmark's critical-path
         # model of parallel shard ingestion reads these
         self.shard_apply_seconds = [0.0] * n_shards
+
+    @property
+    def n_shards(self) -> int:
+        """Current shard count (grows by one per split)."""
+        return len(self.shards)
 
     def _on_seal(self, shard_id: int) -> Callable[[int, list], None]:
         def on_seal(epoch: int, payloads: list) -> None:
@@ -221,6 +476,11 @@ class ShardedDynamicGraph:
         ingestion once ANY shard has sealed it — a slice delivered to a
         sealed local snapshot could never be applied, so that is an error
         here rather than silent loss.
+
+        Raises:
+            ValueError: non-increasing version, already-sealed epoch, or a
+                malformed batch (rejected before any version bookkeeping,
+                so the corrected batch can retry at the same version).
         """
         v = batch.version.pack()
         if v <= self._last_version:
@@ -240,6 +500,14 @@ class ShardedDynamicGraph:
         self._ingested_packed.append(v)
         if not keys.size:
             return 0
+        if self.plan is not None:
+            # route once here: the node ids both feed the access ledger and
+            # override dispatch_batch's routing (same plan, same result)
+            node_ids = self.plan.assign(keys)
+            self.access_stats.record_mutations(
+                np.bincount(node_ids, minlength=self.n_shards))
+            return self.ingest_node.dispatch_batch(keys, epochs, payload,
+                                                   node_ids=node_ids)
         return self.ingest_node.dispatch_batch(keys, epochs, payload)
 
     def seal_epoch(self, epoch: int) -> int:
@@ -261,7 +529,7 @@ class ShardedDynamicGraph:
 
     def seal_shard(self, shard_id: int, epoch: int) -> int:
         """Seal one shard through ``epoch`` (straggler-paced sealing) and
-        advance the global frontier."""
+        advance the global frontier. Returns the new global frontier."""
         node = self.nodes[shard_id]
         while node.local_frontier < epoch:
             self.ingest_node.retry_blocked_batches()
@@ -274,6 +542,156 @@ class ShardedDynamicGraph:
         self.ingest(batch)
         self.seal_epoch(batch.version.epoch)
 
+    # -- re-sharding -------------------------------------------------------
+    def record_query_touches(self, vertex_ids) -> None:
+        """Feed query access patterns into the ledger: ``vertex_ids`` are
+        the vertices a query window touched (sources/targets); they are
+        binned to shards under the active plan. No-op under a custom
+        route. Called by the serving layer inside its lock."""
+        if self.plan is None:
+            return
+        ids = np.asarray(vertex_ids, np.int64)
+        if not ids.size:
+            return
+        self.access_stats.record_queries(
+            np.bincount(self.plan.assign(ids), minlength=self.n_shards))
+
+    def is_quiescent(self) -> bool:
+        """True when nothing is in flight: every local frontier equals the
+        global frontier, the last ingested epoch is sealed, and no slice
+        is parked OR pending on any node. This is the re-sharding cutover
+        precondition — it guarantees every mutation of epochs < activation
+        has been applied under the retiring plan, so swapping the route
+        never re-routes an in-flight pre-cutover slice. (The pending-map
+        check matters for back-to-back splits: a prior split's migration
+        slices sit pending until their activation epoch seals, and a
+        second split reading the source shard before then would
+        re-migrate rows the first move already claimed.)"""
+        f = self.coordinator.global_frontier
+        return (not self.ingest_node.blocked
+                and not self.ingest_node.blocked_batches
+                and all(n.local_frontier == f for n in self.nodes)
+                and (self._last_version >> 32) <= f
+                and not any(n.pending or n.pending_batches
+                            or n.pending_payloads for n in self.nodes))
+
+    def split_shard(self, hot_shard: int) -> dict:
+        """Split ``hot_shard``'s key range: activate the successor plan at
+        the next epoch and migrate the moving half-range.
+
+        The migration rides as ordinary mutation payloads: for each live
+        row whose key moves, a delete dispatched to the source shard and an
+        add (in original creation order, preserving LIFO delete semantics)
+        to the new shard, all at version ``(activation_epoch, 0)``. Both
+        slices apply atomically when the activation epoch seals, so no
+        query — always answered at a frontier-sealed snapshot — can
+        observe a half-migrated graph. User batches may share the cutover
+        version; ``decode_payloads`` merges them in arrival order.
+
+        Returns a summary dict (plan id, source/target shards, activation
+        epoch, migrated edge count), also appended to :attr:`migrations`.
+
+        Raises:
+            ValueError: custom-route store (no plan to split).
+            RuntimeError: store not quiescent (see :meth:`is_quiescent`).
+        """
+        if self.plan is None:
+            raise ValueError("re-sharding needs plan-based routing "
+                             "(construct without a custom `route`)")
+        if not self.is_quiescent():
+            raise RuntimeError(
+                "re-sharding requires a quiescent store: seal every "
+                "ingested epoch on every shard first")
+        activation = self.coordinator.global_frontier + 1
+        new_plan = self.plan.split(hot_shard, activation)
+        target = new_plan.n_shards - 1
+        shard = DynamicGraph(self.n_max, self.e_max, self.churn_threshold)
+        node = DataNode(target, on_seal=self._on_seal(target))
+        # the new shard joins AT the cutover boundary: marking every prior
+        # epoch locally sealed is sound because the plan routed it nothing
+        # before activation
+        node.local_frontier = activation - 1
+        self.shards.append(shard)
+        self.nodes.append(node)      # shared list: coordinator+ingest see it
+        self.shard_apply_seconds.append(0.0)
+        migrated = self._dispatch_migration(hot_shard, target, new_plan,
+                                            activation)
+        self.plan = new_plan
+        self.route = new_plan.assign
+        self.ingest_node.route = new_plan.assign
+        self.access_stats.reset(self.n_shards)
+        summary = {"plan_id": new_plan.plan_id, "source": hot_shard,
+                   "target": target, "activation_epoch": activation,
+                   "migrated_edges": migrated}
+        self.migrations.append(summary)
+        return summary
+
+    def _dispatch_migration(self, source: int, target: int,
+                            new_plan: RoutingPlan, epoch: int) -> int:
+        """Dispatch the moving half-range as payload rows at the cutover
+        version. Quiescence makes 'live now' == 'live at the cutover
+        snapshot', and makes both dispatch targets eligible (no parking)."""
+        shard = self.shards[source]
+        e = shard.n_edges
+        live = np.flatnonzero(shard.deleted[:e] == MAXV)
+        if not live.size:
+            return 0
+        route_keys = shard.dst[live].astype(np.int64)
+        rows = live[new_plan.assign(route_keys) != source]
+        n = rows.size
+        if not n:
+            return 0
+        v = Version(epoch, 0).pack()
+        payload = np.empty((2 * n, 4), np.int64)
+        payload[:, 3] = v
+        payload[:n, 0] = K_DEL            # source loses the moving rows...
+        payload[n:, 0] = K_ADD            # ...target gains them, same order
+        payload[:n, 1] = payload[n:, 1] = shard.src[rows]
+        payload[:n, 2] = payload[n:, 2] = shard.dst[rows]
+        keys = np.concatenate([shard.dst[rows], shard.dst[rows]]) \
+            .astype(np.int64)
+        node_ids = np.concatenate([np.full(n, source, np.int64),
+                                   np.full(n, target, np.int64)])
+        sent = self.ingest_node.dispatch_batch(
+            keys, np.full(2 * n, epoch, np.int64), payload,
+            node_ids=node_ids)
+        if sent != 2 * n:                  # pragma: no cover - guarded above
+            raise AssertionError("migration slice parked despite quiescence")
+        return n
+
+    def maybe_reshard(self) -> Optional[dict]:
+        """Planner tick: consult the :class:`ShardPlanner` on the current
+        access ledger and execute the proposed split, if any.
+
+        Safe to call every epoch — returns None (without touching the
+        store) when there is no planner, the store is not quiescent, or
+        the planner declines. On a split, returns the
+        :meth:`split_shard` summary with the planner's ``reason``
+        attached."""
+        if self.planner is None or self.plan is None:
+            return None
+        if not self.is_quiescent():
+            return None
+        decision = self.planner.propose(
+            self.access_stats.loads(),
+            epochs_observed=self.access_stats.epochs_observed)
+        if decision is None:
+            return None
+        summary = self.split_shard(decision.shard)
+        summary["reason"] = decision.reason
+        return summary
+
+    def plan_floor(self) -> int:
+        """Packed version below which cached artifacts (stitched views,
+        per-shard views, PageRank ranks) were built under a retired
+        routing plan: ``(activation_epoch, 0)`` of the active plan, or 0
+        if no split has happened (nothing is retired). The GC ladders use
+        this to drop retired-plan entries outright instead of aging them
+        out."""
+        if self.plan is None or self.plan.plan_id == 0:
+            return 0
+        return Version(self.plan.activation_epoch, 0).pack()
+
     # -- snapshots ---------------------------------------------------------
     def latest_sealed(self) -> Optional[Version]:
         """Newest frontier-sealed snapshot version — the only snapshot an
@@ -281,7 +699,8 @@ class ShardedDynamicGraph:
         epoch). Returns the newest ingested version whose epoch every shard
         has sealed; ``Version(frontier, 0)`` if the sealed epochs carried no
         batches (a sealed empty snapshot is queryable); ``None`` before the
-        first global seal."""
+        first global seal. (A re-sharding migration is not an ingested
+        version: it changes row placement, never snapshot content.)"""
         frontier = self.coordinator.global_frontier
         if frontier < 0:
             return None
@@ -312,14 +731,19 @@ class ShardedDynamicGraph:
     def shard_views(self, version: Version,
                     use_kernel: bool = False) -> list[JoinView]:
         """Per-shard join views for a sealed snapshot — pre-sharded input
-        for ``partition.partition_graph_sharded`` (no re-bucketing)."""
+        for ``partition.partition_graph_sharded`` (no re-bucketing).
+        Raises ``ValueError`` if ``version`` is not globally sealed."""
         self._gate(version)
         return [s.join_view(version, use_kernel=use_kernel)
                 for s in self.shards]
 
     def join_view(self, version: Version,
                   use_kernel: bool = False) -> JoinView:
-        """The stitched global CSR for a sealed snapshot (cached)."""
+        """The stitched global CSR for a sealed snapshot (cached).
+        Byte-identical to the single store's view at the same version —
+        including versions older than a re-sharding cutover, which resolve
+        from the pre-migration rows. Raises ``ValueError`` if ``version``
+        is not globally sealed."""
         key = version.pack()
         if key in self._views:
             return self._views[key]
@@ -330,13 +754,38 @@ class ShardedDynamicGraph:
         return view
 
     def gc_views(self, keep_latest: int = 4) -> int:
-        """Ladder-GC every shard's view cache plus the stitched cache."""
-        dropped = sum(s.gc_views(keep_latest) for s in self.shards)
+        """Ladder-GC every shard's view cache plus the stitched cache,
+        and drop entries keyed by retired routing plans.
+
+        After a split, retired entries are dropped instead of aging
+        through the ladder: the stitched cache drops everything below the
+        active plan's activation (:meth:`plan_floor`), and each shard
+        involved in a migration drops its views from before *its own* most
+        recent migration (those still carry — or are missing — the moved
+        rows; views from between someone else's later split and now are
+        untouched, so an old split never wipes another shard's warm
+        ladder). In both cases entries only drop once a post-cutover
+        entry exists, so the serving snapshot is never evicted from under
+        the server. Returns the number dropped."""
+        dropped = prune_retired(self._views, self.plan_floor())
+        shard_floor: dict[int, int] = {}
+        for m in self.migrations:
+            fl = Version(m["activation_epoch"], 0).pack()
+            for i in (m["source"], m["target"]):
+                shard_floor[i] = max(shard_floor.get(i, 0), fl)
+        dropped += sum(
+            s.gc_views(keep_latest, retire_below=shard_floor.get(i, 0))
+            for i, s in enumerate(self.shards))
         return dropped + prune_views(self._views, keep_latest)
 
     # -- merged vertex/edge state -----------------------------------------
     @property
     def n_edges(self) -> int:
+        """Edge rows appended across all shards — the capacity measure,
+        not the live-edge count. A re-sharding migration re-appends the
+        moving rows on the target shard (and tombstones them on the
+        source), so after a split this exceeds the single store's row
+        count even though every snapshot's live edges are identical."""
         return sum(s.n_edges for s in self.shards)
 
     @property
@@ -351,30 +800,30 @@ class ShardedDynamicGraph:
 
     @property
     def v_type(self) -> np.ndarray:
-        """Global vertex types. Typed adds only ever land on a vertex's home
-        shard (vertex-id routing), so the home shard's type is authoritative
-        — unless another shard auto-created the vertex strictly earlier, in
-        which case the global semantics are an untyped (0) creation."""
+        """Global vertex types, matching the single store's
+        first-creation-wins semantics: the type recorded by whichever
+        shard(s) created the vertex at its earliest creation version.
+
+        At that version at most one shard received the *typed* add (routing
+        sends a vertex id to exactly one shard per plan); any other shard
+        tied at the same version auto-created the vertex untyped (0), so
+        the elementwise max over tied shards recovers the typed value —
+        with no dependence on the CURRENT route, which re-sharding may
+        have changed since the vertex was created."""
         created = self.v_created
-        ids = np.arange(self.n_max, dtype=np.int64)
-        try:
-            home = np.asarray(self.route(ids))
-            if home.shape != ids.shape:
-                raise TypeError
-        except Exception:
-            # route not vectorizable — elementwise, as in dispatch_batch
-            home = np.asarray([self.route(int(k)) for k in ids], np.int64)
         out = np.zeros(self.n_max, np.int32)
-        for i, s in enumerate(self.shards):
-            mine = (home == i) & (s.v_created == created)
-            out[mine] = s.v_type[mine]
+        for s in self.shards:
+            mine = s.v_created == created
+            np.maximum(out, np.where(mine, s.v_type, 0), out=out)
         return out
 
     @property
     def n_vertices(self) -> int:
+        """Vertices created on any shard so far."""
         return int((self.v_created != np.iinfo(np.int64).max).sum())
 
     def num_vertices(self, version: Optional[Version] = None) -> int:
+        """Vertices existing at ``version`` (or now, when None)."""
         if version is None:
             return self.n_vertices
         return int((self.v_created <= version.pack()).sum())
@@ -388,4 +837,5 @@ class ShardedDynamicGraph:
         return sum(s.view_full_builds for s in self.shards)
 
     def shard_edge_counts(self) -> list[int]:
+        """Per-shard live-edge counts (the placement the plan produced)."""
         return [s.n_edges for s in self.shards]

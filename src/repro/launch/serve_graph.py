@@ -14,6 +14,13 @@ warm-started incrementally from the previous epoch's ranks, and both the
 rank cache and the view caches are GC'd with the version-spaced
 ``ladder_keep`` retention so server memory stays bounded under churn.
 
+This is layer 5 (the top) of the pipeline mapped in
+``docs/ARCHITECTURE.md``, and the serving loop is also where dynamic
+re-sharding closes its feedback loop: flushed windows feed query touches
+into the store's access ledger, and :meth:`GraphQueryServer.step` runs
+the planner tick at its entry — the between-epochs quiescent point, so a
+fired split's migration applies inside the incoming batch's seal.
+
 Usage (synthetic ingest-while-query loop, CPU):
     PYTHONPATH=src python -m repro.launch.serve_graph --vertices 2000 \
         --epochs 8 --queries-per-epoch 16
@@ -31,7 +38,8 @@ import numpy as np
 from repro.core.versioned import Version
 from repro.graph.dyngraph import MutationBatch, synthesize_churn_stream
 from repro.graph.query import (DegreeTopK, KHop, PageRankQuery, Query,
-                               QueryResult, Reachability, SnapshotQueryEngine)
+                               QueryResult, Reachability, SnapshotQueryEngine,
+                               query_touch_vertices)
 from repro.graph.sharded import ShardedDynamicGraph
 
 
@@ -45,17 +53,37 @@ class GraphQueryServer:
     after every :meth:`step` (warm-started from the previous epoch,
     outside the server lock so queries are never stalled behind it),
     keeping the warm chain unbroken even when PageRank queries are sparse.
+
+    The server is also the access-pattern feed for dynamic re-sharding
+    (``docs/ARCHITECTURE.md``): every flushed window's touch vertices are
+    binned into the graph's ``AccessStats`` ledger, and — when the graph
+    was constructed with a ``ShardPlanner`` and ``auto_reshard`` is left
+    on — :meth:`step` runs the planner tick at its ENTRY, the
+    between-epochs point where the store is guaranteed quiescent; a fired
+    split's migration then applies inside the incoming batch's seal, so a
+    stream that simply stops never strands a migration. Splits are
+    appended to :attr:`reshard_events` as they fire; after a cutover the
+    GC pass drops cache entries keyed by the retired routing plan
+    (``plan_floor``) instead of aging them through the ladder.
+
+    Thread-safety: one re-entrant lock serializes every touch of mutable
+    graph/engine state (ingest, seal, re-shard, cache GC, stats); query
+    execution runs on immutable stitched views outside the lock, so
+    ingestion never waits on query compute.
     """
 
     def __init__(self, graph: ShardedDynamicGraph, *,
                  view_keep: int = 8, rank_keep: int = 4, gc_every: int = 1,
-                 prewarm_pagerank: bool = False, **pagerank_kw):
+                 prewarm_pagerank: bool = False, auto_reshard: bool = True,
+                 **pagerank_kw):
         self.graph = graph
         self.engine = SnapshotQueryEngine(**pagerank_kw)
         self.view_keep = view_keep
         self.rank_keep = rank_keep
         self.gc_every = max(1, gc_every)
         self.prewarm_pagerank = prewarm_pagerank
+        self.auto_reshard = auto_reshard
+        self.reshard_events: list[dict] = []
         # one lock serializes every touch of the mutable graph state; query
         # execution on an (immutable) stitched view runs outside it
         self._lock = threading.RLock()
@@ -77,7 +105,8 @@ class GraphQueryServer:
             self._seals += 1
             if self._seals % self.gc_every == 0:
                 self.graph.gc_views(self.view_keep)
-                self.engine.gc(self.rank_keep)
+                self.engine.gc(self.rank_keep,
+                               retire_below=self.graph.plan_floor())
 
     def _maybe_prewarm(self) -> None:
         if not self.prewarm_pagerank:
@@ -96,14 +125,28 @@ class GraphQueryServer:
         # ladder always retains the newest entry, so nothing useful drops)
         with self._lock:
             self.graph.gc_views(self.view_keep)
-        self.engine.gc(self.rank_keep)
+            floor = self.graph.plan_floor()
+        self.engine.gc(self.rank_keep, retire_below=floor)
 
     def step(self, batch: MutationBatch) -> None:
         """Ingest one mutation batch and seal its epoch on every shard —
         the cooperative serving loop's ingestion tick. With
         ``prewarm_pagerank`` the epoch's ranks are warmed here, after the
-        seal releases the lock."""
+        seal releases the lock.
+
+        With ``auto_reshard`` (and a planner on the graph) this is also
+        the planner tick. It runs at step ENTRY — between epochs the
+        store is quiescent, the only state a re-sharding cutover may
+        activate from — so a split's migration always applies inside THIS
+        batch's seal (the cutover epoch is the one about to be ingested),
+        and a stream that simply stops can never strand a dispatched
+        migration in a never-sealed epoch. Splits are recorded in
+        :attr:`reshard_events`."""
         with self._lock:
+            if self.auto_reshard:
+                event = self.graph.maybe_reshard()
+                if event is not None:
+                    self.reshard_events.append(event)
             self.graph.ingest(batch)
             self.graph.seal_epoch(batch.version.epoch)
         self._maybe_prewarm()
@@ -159,6 +202,13 @@ class GraphQueryServer:
         except BaseException:
             self._pending = pending + self._pending
             raise
+        # access-pattern feed: bin this window's touch vertices into the
+        # re-sharding planner's ledger (no-op on custom routes) — only
+        # AFTER the window succeeded, so a failing window re-queued above
+        # cannot double-count its touches on every retry
+        with self._lock:
+            self.graph.record_query_touches(
+                query_touch_vertices([q for q, _ in pending]))
         done = time.perf_counter()
         results = [QueryResult(q, val, v, done - t0)
                    for (q, t0), val in zip(pending, values)]
@@ -175,12 +225,21 @@ class GraphQueryServer:
 
     # -- telemetry ---------------------------------------------------------
     def stats(self) -> dict:
+        """Serving snapshot: latency percentiles over the recent window,
+        cache sizes, vectorized-call and PageRank warm-start counters,
+        plus re-sharding state (shard count, active plan id, splits so
+        far). Thread-safe."""
         lat = np.asarray(self.latencies_s)
         with self._lock:
             frontier = self.graph.coordinator.global_frontier
             cached_views = len(self.graph._views)
+            n_shards = self.graph.n_shards
+            plan = self.graph.plan
         return {
             "served": self.served,
+            "n_shards": n_shards,
+            "routing_plan_id": plan.plan_id if plan is not None else None,
+            "reshard_events": list(self.reshard_events),
             "query_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
             "query_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
             "global_frontier": frontier,
