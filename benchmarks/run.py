@@ -318,26 +318,38 @@ def bench_ingest_sharded(quick=False):
     """Sharded graph-store ingestion: N DynamicGraph shards behind
     dst-hash-routed DataNodes (``graph.sharded.ShardedDynamicGraph``).
 
-    Shards of a real deployment ingest concurrently, so throughput is
-    modeled as the critical path: serial routing/dispatch (the single
-    ingest node) + the slowest shard's cumulative apply time, both measured
-    directly. Also measures stitch latency — merging the per-shard CSRs
-    into the global join view — against the single store's full view
-    build. Per-shard mutations/sec and stitch latency land in
+    Parallelism is MEASURED, not modeled: every shard count runs once with
+    the serial apply plane and once with ``parallel_apply=N`` worker
+    threads, and ``parallel_wall_s`` is real wall clock for the identical
+    stream the single store ingests back-to-back in the same repeat
+    (median of paired per-repeat ratios — pairing cancels host-load drift
+    that independent best-of-N timings do not). The stream is sized so
+    per-shard batches are large enough for the vectorized apply plane to
+    spend its time inside GIL-releasing NumPy kernels; thread payoff is
+    therefore core-count-bound, and ``cpu_count`` rides along in the
+    report so the gate (``check_bench.py``) can calibrate. Also measures
+    stitch latency — merging the per-shard CSRs into the global join
+    view — against the single store's full view build. Lands in
     ``BENCH_ingest.json`` under ``sharded_ingest``.
+
+    The 1-shard configuration exercises the single-shard passthrough
+    (no payload encode/route/decode); its wall clock must stay within 5%
+    of the single store (asserted here — the old path ran at 0.87x).
     """
+    import os
     import pathlib
 
     from repro.core.versioned import Version
     from repro.graph.dyngraph import DynamicGraph, synthesize_churn_stream
     from repro.graph.sharded import ShardedDynamicGraph, stitch_join_views
 
-    n = 5_000 if quick else 20_000
-    epochs = 8 if quick else 10
-    adds = 2_500 if quick else 10_000
-    # same generator/churn profile as the single-store ingest axis
+    n = 120_000 if quick else 200_000
+    epochs = 4
+    adds = 150_000 if quick else 250_000
+    # moderate churn at serving-scale batches (the delete-heavy/small-batch
+    # regime is covered by the ingest_graph axis)
     batches = synthesize_churn_stream(n, epochs, adds, seed=0,
-                                      delete_frac=0.5)
+                                      delete_frac=0.2)
     n_muts = sum(b.size for b in batches)
     e_max = sum(len(b.add_src) for b in batches) + 16
     v_last = Version(epochs - 1, 0)
@@ -348,10 +360,20 @@ def bench_ingest_sharded(quick=False):
             g.apply(b)
         return g
 
-    # single-store and sharded runs are measured back-to-back within each
-    # repeat, and the speedup is the median of the per-repeat ratios —
-    # paired ratios cancel host-load drift that independent best-of-N
-    # timings (measured seconds apart) do not
+    # more workers than cores thrashes the GIL instead of overlapping it;
+    # CI's >= 4-CPU runners run the full 4-thread plane
+    workers = max(os.cpu_count() or 1, 1)
+
+    def run_sharded(ns, pa):
+        sg = ShardedDynamicGraph(ns, n, e_max,
+                                 parallel_apply=min(pa, workers))
+        t0 = time.perf_counter()
+        for b in batches:
+            sg.apply(b)
+        wall = time.perf_counter() - t0
+        sg.shutdown()
+        return wall, sg
+
     shard_counts = (1, 2, 4)
     repeats = 5
     singles = []
@@ -363,23 +385,22 @@ def bench_ingest_sharded(quick=False):
         g_single = run_single()
         singles.append(time.perf_counter() - t0)
         for ns in shard_counts:
-            sg = ShardedDynamicGraph(ns, n, e_max)
-            t0 = time.perf_counter()
-            for b in batches:
-                sg.apply(b)
-            wall = time.perf_counter() - t0
+            wall, sg = run_sharded(ns, 0)
+            # parallel_apply <= 1 is the serial plane, so the 1-shard
+            # parallel wall IS the serial wall (no second run needed)
+            pwall = wall if ns == 1 else run_sharded(ns, ns)[0]
             shard_s = sg.shard_apply_seconds
-            route_s = max(wall - sum(shard_s), 0.0)
             reps[ns].append({
                 "wall_s": wall,
-                "route_s": route_s,
+                "route_s": max(wall - sum(shard_s), 0.0),
                 "per_shard_apply_s": shard_s,
-                "modeled_parallel_s": route_s + max(shard_s),
-                "speedup": singles[-1] / (route_s + max(shard_s)),
+                "parallel_wall_s": pwall,
+                "speedup_vs_single": singles[-1] / wall,
+                "parallel_speedup_vs_single": singles[-1] / pwall,
             })
             last_sg[ns] = sg
 
-    t_single = min(singles)
+    t_single = sorted(singles)[len(singles) // 2]
     row("ingest_sharded.single_store", t_single,
         f"muts={n_muts};muts_per_s={n_muts/t_single:.3e}")
     t_single_view, single_view = _time(
@@ -389,12 +410,12 @@ def bench_ingest_sharded(quick=False):
               "single_store_s": t_single,
               "single_store_muts_per_s": n_muts / t_single,
               "single_view_build_s": t_single_view,
+              "cpu_count": os.cpu_count(),
               "shards": {}}
     for ns in shard_counts:
-        by_speedup = sorted(reps[ns], key=lambda r: r["speedup"])
+        by_speedup = sorted(reps[ns],
+                            key=lambda r: r["parallel_speedup_vs_single"])
         rep = by_speedup[len(by_speedup) // 2]      # median-speedup repeat
-        speedup = rep["speedup"]
-        modeled = rep["modeled_parallel_s"]
         shard_s = rep["per_shard_apply_s"]
         # stitch latency with warm shard views (the steady-state query path)
         views = last_sg[ns].shard_views(v_last)
@@ -403,24 +424,37 @@ def bench_ingest_sharded(quick=False):
         assert stitched.m == single_view.m, "sharded/single view diverged"
         per_shard_rate = [
             (n_muts / ns) / s if s > 0 else 0.0 for s in shard_s]
-        row(f"ingest_sharded.shards{ns}", modeled,
-            f"modeled_muts_per_s={n_muts/modeled:.3e};"
+        row(f"ingest_sharded.shards{ns}", rep["parallel_wall_s"],
+            f"parallel_muts_per_s={n_muts/rep['parallel_wall_s']:.3e};"
+            f"serial_wall_ms={rep['wall_s']*1e3:.1f};"
             f"route_ms={rep['route_s']*1e3:.1f};"
-            f"max_shard_ms={max(shard_s)*1e3:.1f};"
-            f"speedup_vs_single=x{speedup:.2f}")
+            f"parallel_speedup_vs_single="
+            f"x{rep['parallel_speedup_vs_single']:.2f}")
         row(f"ingest_sharded.stitch{ns}", t_stitch,
             f"m={stitched.m};vs_full_build=x{t_single_view/t_stitch:.2f}")
         report["shards"][str(ns)] = {
+            # the worker count the parallel run ACTUALLY used (clamped to
+            # the host's cores), not the shard count
+            "parallel_apply": 0 if ns == 1 else min(ns, workers),
             "wall_s": rep["wall_s"],
             "route_s": rep["route_s"],
             "per_shard_apply_s": shard_s,
             "per_shard_muts_per_s": per_shard_rate,
-            "modeled_parallel_s": modeled,
-            "modeled_muts_per_s": n_muts / modeled,
-            "modeled_speedup_vs_single": speedup,
+            "parallel_wall_s": rep["parallel_wall_s"],
+            "parallel_muts_per_s": n_muts / rep["parallel_wall_s"],
+            "speedup_vs_single": rep["speedup_vs_single"],
+            "parallel_speedup_vs_single": rep["parallel_speedup_vs_single"],
             "stitch_s": t_stitch,
             "stitched_m": int(stitched.m),
         }
+
+    # single-shard passthrough: sharded bookkeeping on a path that routes
+    # nowhere must cost <= 5% over the bare store (median-paired ratio)
+    passthrough = sorted(r["speedup_vs_single"] for r in reps[1])[
+        len(reps[1]) // 2]
+    assert passthrough >= 0.95, (
+        f"1-shard sharded ingest at {passthrough:.2f}x of the single store "
+        "(>= 0.95x required — passthrough fast path regressed)")
 
     out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
     _merge_bench_json(out, {"sharded_ingest": report})
@@ -451,9 +485,14 @@ def bench_resharding(quick=False):
     from repro.graph.dyngraph import synthesize_skewed_stream
     from repro.graph.sharded import ShardedDynamicGraph
 
-    n = 8_000 if quick else 20_000
+    # no reduced quick scale for this axis: the claim needs the hot
+    # shard's APPLY to dominate the modeled critical path, and the
+    # vectorized apply plane is ~7x faster than the dict-loop era — the
+    # old 8k-adds quick stream degenerated into a route-bound measurement
+    # where splits cannot win by construction
+    n = 20_000
     epochs = 14
-    adds = 8_000 if quick else 20_000
+    adds = 20_000
     zipf_a = 1.2
     n_shards = 4
     batches = synthesize_skewed_stream(n, epochs, adds, seed=0,

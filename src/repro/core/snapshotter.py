@@ -21,7 +21,12 @@ sharded graph store on these primitives via the ``on_seal`` hook.
 
 Thread-safety: none of these classes lock internally — the serving layer
 serializes every touch (see ``launch/serve_graph.py``); the benchmark and
-test drivers are single-threaded.
+test drivers are single-threaded. The sharded store's parallel apply
+plane (``ShardedDynamicGraph.seal_epoch`` with ``parallel_apply > 1``)
+may run ``DataNode.seal_epoch`` for *different* nodes concurrently: a
+node's pending maps, frontier, and ``on_seal`` state are touched only by
+the one thread sealing that node, while ingest-side state (``IngestNode``
+queues, the coordinator) stays on the calling thread between rounds.
 """
 from __future__ import annotations
 
@@ -71,9 +76,11 @@ class DataNode:
     def receive_batch(self, epoch: int, keys: np.ndarray,
                       payload=None) -> None:
         """Vectorized ingress: a whole key array for one epoch at once.
-        ``payload`` is an optional array-like riding along with the keys
-        (same leading dimension), handed to ``on_seal`` when the epoch
-        seals."""
+        ``payload`` is an optional object riding along with the keys —
+        usually an array-like with the same leading dimension, but opaque
+        to this layer (the sharded store's single-shard passthrough sends
+        whole ``MutationBatch`` objects) — handed to ``on_seal`` when the
+        epoch seals."""
         self.pending_batches[epoch].append(np.asarray(keys))
         if payload is not None:
             self.pending_payloads[epoch].append(payload)
@@ -246,20 +253,23 @@ class IngestNode:
                                       np.int64)
         frontiers = np.asarray([n.local_frontier for n in self.nodes])
         ok = frontiers[node_ids] >= epochs - 1
-        # steady-state fast path: one epoch, every node caught up — group by
-        # node with a single stable sort, no eligibility partition
+        # steady-state fast path: one epoch, every node caught up — group
+        # by node with a single stable sort, then reorder keys/payload
+        # ONCE and hand each node a contiguous (zero-copy) slice instead
+        # of a fancy-indexed gather per group
         if ok.all() and (epochs == epochs[0]).all():
             epoch = int(epochs[0])
             order = np.argsort(node_ids, kind="stable")
             sorted_nodes = node_ids[order]
+            keys_s = keys[order]
+            payload_s = payload[order] if payload is not None else None
             starts = np.flatnonzero(
                 np.r_[True, sorted_nodes[1:] != sorted_nodes[:-1]])
             bounds = np.r_[starts, len(order)]
             for a, b in zip(bounds[:-1], bounds[1:]):
-                rows = order[a:b]
                 self.nodes[int(sorted_nodes[a])].receive_batch(
-                    epoch, keys[rows],
-                    payload[rows] if payload is not None else None)
+                    epoch, keys_s[a:b],
+                    payload_s[a:b] if payload_s is not None else None)
             self.dispatched += len(keys)
             return len(keys)
         for eligible, sink in ((ok, True), (~ok, False)):

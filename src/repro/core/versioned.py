@@ -39,14 +39,60 @@ class Version:
 
 ZERO = Version(0, 0)
 
-# Data-plane (JAX) packing: int32-safe (x64 is disabled in JAX by default).
-# Host-side control plane uses the full 64-bit pack().
+# Data-plane packing: int32-safe (x64 is disabled in JAX by default).
+# Host-side control plane uses the full 64-bit pack(); the graph store keeps
+# its created/deleted/v_created stamp arrays in THIS packing natively so the
+# kernel path never re-packs on the host. int32 max is reserved as the
+# 'never' sentinel, so the largest valid stamp is int32 max - 1.
 PACK_BITS = 20
+EPOCH_LIMIT = 1 << (31 - PACK_BITS)      # epochs representable in int32
+NUMBER_LIMIT = 1 << PACK_BITS            # version numbers per epoch
+PACK32_NEVER = np.iinfo(np.int32).max    # 'never created/deleted' sentinel
 
 
 def pack32(v: Version) -> int:
-    assert v.epoch < (1 << (31 - PACK_BITS)) and v.number < (1 << PACK_BITS), v
+    assert v.epoch < EPOCH_LIMIT and v.number < NUMBER_LIMIT, v
     return (v.epoch << PACK_BITS) | v.number
+
+
+def pack32_checked(v: Version) -> int:
+    """int32 data-plane packing of a *stamp* about to be stored.
+
+    Raises ``ValueError`` (not an assert — overflow would silently corrupt
+    every later snapshot mask) when the version exceeds the packing, or
+    collides with the reserved ``PACK32_NEVER`` sentinel. The graph store
+    calls this once per ``apply`` — the single overflow check of the
+    int32-native stamp plane.
+    """
+    packed = (v.epoch << PACK_BITS) | v.number
+    if (v.epoch >= EPOCH_LIMIT or v.number >= NUMBER_LIMIT
+            or packed >= PACK32_NEVER):
+        raise ValueError(
+            "version stamp exceeds int32 data-plane packing "
+            f"(epoch < {EPOCH_LIMIT}, number < {NUMBER_LIMIT}, "
+            f"int32 max reserved): {v}")
+    return packed
+
+
+def unpack32(packed: int) -> Version:
+    """Inverse of :func:`pack32` (valid for checked stamps, which never
+    collide with the sentinel)."""
+    return Version(packed >> PACK_BITS, packed & (NUMBER_LIMIT - 1))
+
+
+def pack32_clamped(v: Version) -> int:
+    """int32 packing of a *query* version, clamped into the packable range.
+
+    Stored stamps are range-checked at apply time, but a query may name any
+    version (e.g. a far-future snapshot). Clamping each field to its limit
+    preserves the ordering against every valid stamp: an in-range epoch
+    with an overflowing number clamps to that epoch's last slot (sees all
+    of the epoch, none of the next); an overflowing epoch clamps to the
+    largest valid stamp (sees everything, never the sentinel).
+    """
+    packed = (min(v.epoch, EPOCH_LIMIT - 1) << PACK_BITS) \
+        | min(v.number, NUMBER_LIMIT - 1)
+    return min(packed, PACK32_NEVER - 1)
 
 
 class VersionedStore:

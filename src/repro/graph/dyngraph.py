@@ -11,10 +11,22 @@ Ingestion (``apply``) is fully vectorized and indexed:
 
 * vertex adds, edge-row appends, and endpoint auto-creation are batched
   NumPy ops — O(batch) with no per-element Python work on arrays;
-* edge deletes resolve through a ``(src, dst) -> latest live row`` hash
-  index backed by a per-row ``prev-live`` chain (a LIFO stack per key), so
-  a delete is O(1) amortized instead of the seed's O(E) scan per edge —
-  O(batch) per mutation batch overall.
+* edge deletes resolve through a ``(src, dst) -> latest live row``
+  :class:`LiveEdgeIndex` — a NumPy open-addressing hash table (int64 key
+  slots, int32 row slots, linear probing, batched probe rounds) backed by
+  a per-row ``prev-live`` chain (a LIFO stack per key). Both the insert
+  and the pop side are whole-batch array ops with **no per-row Python
+  loop**, so a threaded caller (the sharded store's parallel apply plane)
+  spends the batch inside NumPy kernels that release the GIL instead of
+  serialising on a Python dict.
+
+Version stamps (``created`` / ``deleted`` / ``v_created``) are stored
+natively in the int32 data-plane packing (``versioned.PACK_BITS``; int32
+max is the 'never' sentinel), checked once for overflow at ``apply`` time
+(``pack32_checked``). The 64-bit ``Version.pack()`` survives only at the
+API boundary (view-cache keys, the batch log, sharded payload rows), so
+``snapshot_mask(use_kernel=True)`` hands the stamp arrays straight to the
+Pallas kernel — no 64→32-bit host conversion on the hot path.
 
 The per-snapshot CSR ("join view", §2.3.3.2) is built once per queried
 version and cached — it is what makes the join-group-by operator a segment
@@ -44,35 +56,198 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.versioned import PACK_BITS, Version
+from repro.core.versioned import (PACK32_NEVER, Version, pack32_checked,
+                                  pack32_clamped)
 
-MAXV = np.iinfo(np.int64).max
+# 'never created / never deleted' stamp sentinel. Stamps are int32
+# data-plane packed natively (versioned.PACK_BITS); int32 max is reserved.
+MAXV = PACK32_NEVER
 
 # Delta-patching a cached view wins while the delta is small relative to the
 # live edge count; past this fraction a full mask-and-sort rebuild is cheaper.
 DEFAULT_CHURN_THRESHOLD = 0.25
 
-_I32MAX = np.iinfo(np.int32).max
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer (vectorized). Shared by :class:`LiveEdgeIndex`
+    (slot hashing) and the sharded store's ``RoutingPlan`` (split-bit
+    refinement hash): one well-mixed integer hash, two consumers."""
+    x = np.asarray(x)
+    # int64 input (the common case: edge keys, routing keys) reinterprets
+    # bit-for-bit instead of paying a widening copy
+    x = x.view(np.uint64) if x.dtype == np.int64 else x.astype(np.uint64)
+    x = (x + np.uint64(0x9E3779B97F4A7C15))
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
 
 
-def _pack64_to32(packed: np.ndarray) -> np.ndarray:
-    """Re-pack 64-bit (epoch<<32|number) version stamps into the int32
-    data-plane packing (versioned.PACK_BITS). MAXV (the 'never' sentinel)
-    maps to int32 max."""
-    epoch = packed >> 32
-    number = packed & 0xFFFFFFFF
-    real = packed != MAXV
-    out = (epoch << PACK_BITS) | number
-    # overflow would silently corrupt the int32 stamps and diverge the
-    # kernel mask from the host mask; int32 max itself is reserved as the
-    # 'never' sentinel
-    if np.any(real & ((epoch >= 1 << (31 - PACK_BITS))
-                      | (number >= 1 << PACK_BITS)
-                      | (out >= _I32MAX))):
-        raise ValueError("version stamp exceeds int32 data-plane packing "
-                         f"(epoch < 2^{31 - PACK_BITS}, "
-                         f"number < 2^{PACK_BITS}, int32 max reserved)")
-    return np.where(real, out, _I32MAX).astype(np.int32)
+class LiveEdgeIndex:
+    """Vectorized ``(src, dst) key -> newest live row`` map.
+
+    Open-addressing hash table over parallel NumPy arrays — int64 key
+    slots (-1 = empty), int32 row slots (-1 = key present but no live row)
+    — with linear probing. Lookups and insert-or-update both run in
+    *batched probe rounds*: every still-unresolved key advances one slot
+    per round, so the Python-level cost is O(max probe length) loop
+    iterations of whole-array work, not O(batch) per-row dict operations.
+    Within an insert round, several distinct keys may claim the same empty
+    slot; a scatter race arbitrates (duplicate-index scatter keeps the
+    last write — whichever key remains in the slot won) and the losers
+    keep probing past the now-occupied slot, which is ordinary
+    linear-probing semantics.
+
+    Emptied keys (every duplicate popped) keep their slot with row -1
+    rather than tombstoning — lookups return -1 either way — and are
+    dropped wholesale on the next growth rehash, which bounds table
+    occupancy by the live key count, not the all-time key count.
+    """
+
+    EMPTY = -1
+
+    def __init__(self, capacity: int = 1024):
+        cap = 1 << max(3, int(capacity - 1).bit_length())
+        self._keys = np.full(cap, self.EMPTY, np.int64)
+        self._rows = np.full(cap, -1, np.int32)
+        self._used = 0          # occupied slots, live or emptied
+
+    @property
+    def capacity(self) -> int:
+        return len(self._keys)
+
+    def _first_slots(self, keys: np.ndarray) -> np.ndarray:
+        return (splitmix64(keys)
+                & np.uint64(len(self._keys) - 1)).astype(np.int64)
+
+    def slots_of(self, keys: np.ndarray) -> np.ndarray:
+        """Table slot per key (-1 when absent), batched — one probe pass.
+
+        The delete path uses this to read AND later write the same keys'
+        rows (:meth:`rows_at` / :meth:`set_rows`) with a single probing
+        pass instead of a lookup pass plus a store pass. Returned slots
+        are invalidated by any subsequent insert (growth rehash).
+        """
+        keys = np.asarray(keys, np.int64)
+        out = np.full(len(keys), -1, np.int64)
+        if not len(keys) or not self._used:
+            return out
+        mask = len(self._keys) - 1
+        slot = self._first_slots(keys)
+        pending = np.arange(len(keys))
+        while pending.size:
+            s = slot[pending]
+            tk = self._keys[s]
+            hit = tk == keys[pending]
+            out[pending[hit]] = s[hit]
+            pending = pending[~(hit | (tk == self.EMPTY))]
+            slot[pending] = (slot[pending] + 1) & mask
+        return out
+
+    def rows_at(self, slots: np.ndarray) -> np.ndarray:
+        """Rows stored at ``slots_of`` results (-1 rides through for
+        absent keys)."""
+        out = np.full(len(slots), -1, np.int64)
+        found = slots >= 0
+        out[found] = self._rows[slots[found]]
+        return out
+
+    def set_rows(self, slots: np.ndarray, rows: np.ndarray) -> None:
+        """Overwrite the rows at valid (>= 0) slots in place (-1 row =
+        mark emptied). No probing, no inserts — slot-stable."""
+        self._rows[slots] = rows
+
+    def lookup(self, keys: np.ndarray) -> np.ndarray:
+        """Newest live row per key (-1 when absent or emptied), batched."""
+        return self.rows_at(self.slots_of(keys))
+
+    def push(self, keys: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        """Insert-or-update UNIQUE ``key -> row`` and return each key's
+        *previous* row (-1 when absent or emptied) — a fused
+        lookup + store in one probe pass. The add path chains the batch's
+        oldest duplicate to the returned previous top while the newest
+        duplicate becomes the stored row."""
+        keys = np.asarray(keys, np.int64)
+        old = np.full(len(keys), -1, np.int64)
+        if not len(keys):
+            return old
+        self._maybe_grow(len(keys))
+        rows32 = np.asarray(rows, np.int32)
+        mask = len(self._keys) - 1
+        slot = self._first_slots(keys)
+        pending = np.arange(len(keys))
+        while pending.size:
+            s = slot[pending]
+            tk = self._keys[s]
+            hit = tk == keys[pending]
+            if hit.any():
+                hs, hp = s[hit], pending[hit]
+                old[hp] = self._rows[hs]
+                self._rows[hs] = rows32[hp]
+            resolved = hit
+            empty = tk == self.EMPTY
+            if empty.any():
+                pos = np.flatnonzero(empty)
+                se, cand = s[pos], pending[pos]
+                self._keys[se] = keys[cand]          # scatter race: the key
+                won = self._keys[se] == keys[cand]   # left standing won
+                if won.any():
+                    self._rows[se[won]] = rows32[cand[won]]
+                    self._used += int(won.sum())
+                    resolved = resolved.copy()
+                    resolved[pos[won]] = True
+            pending = pending[~resolved]
+            slot[pending] = (slot[pending] + 1) & mask
+        return old
+
+    def store(self, keys: np.ndarray, rows: np.ndarray) -> None:
+        """Insert-or-update ``key -> row`` for UNIQUE keys, batched.
+
+        ``row`` -1 marks an existing key's stack as emptied (the pop side
+        never needs to insert: it only updates keys it just looked up).
+        """
+        keys = np.asarray(keys, np.int64)
+        if not len(keys):
+            return
+        self._maybe_grow(len(keys))
+        rows32 = np.asarray(rows, np.int32)
+        mask = len(self._keys) - 1
+        slot = self._first_slots(keys)
+        pending = np.arange(len(keys))
+        while pending.size:
+            s = slot[pending]
+            tk = self._keys[s]
+            hit = tk == keys[pending]
+            self._rows[s[hit]] = rows32[pending[hit]]
+            resolved = hit
+            empty = tk == self.EMPTY
+            if empty.any():
+                pos = np.flatnonzero(empty)
+                se, cand = s[pos], pending[pos]
+                self._keys[se] = keys[cand]          # scatter race: the key
+                won = self._keys[se] == keys[cand]   # left standing won
+                if won.any():
+                    self._rows[se[won]] = rows32[cand[won]]
+                    self._used += int(won.sum())
+                    resolved = resolved.copy()
+                    resolved[pos[won]] = True
+            pending = pending[~resolved]
+            slot[pending] = (slot[pending] + 1) & mask
+
+    def _maybe_grow(self, incoming: int) -> None:
+        # keep load factor <= 2/3 so probe chains stay short
+        if (self._used + incoming) * 3 <= len(self._keys) * 2:
+            return
+        live = self._rows != -1            # emptied keys are dropped here
+        lk, lr = self._keys[live], self._rows[live]
+        need = len(lk) + incoming
+        cap = len(self._keys)
+        while cap * 2 < need * 3:
+            cap <<= 1
+        self._keys = np.full(cap, self.EMPTY, np.int64)
+        self._rows = np.full(cap, -1, np.int32)
+        self._used = 0
+        if len(lk):
+            self.store(lk, lr)
 
 
 @dataclasses.dataclass
@@ -253,18 +428,21 @@ class DynamicGraph:
         self.churn_threshold = churn_threshold
         self.src = np.zeros(e_max, np.int32)
         self.dst = np.zeros(e_max, np.int32)
-        self.created = np.full(e_max, MAXV, np.int64)
-        self.deleted = np.full(e_max, MAXV, np.int64)
+        # version stamps live in the int32 data-plane packing natively
+        # (MAXV = int32 max = 'never'); overflow is checked once per apply
+        self.created = np.full(e_max, MAXV, np.int32)
+        self.deleted = np.full(e_max, MAXV, np.int32)
         self.n_edges = 0
-        self.v_created = np.full(n_max, MAXV, np.int64)
+        self.v_created = np.full(n_max, MAXV, np.int32)
         self.v_type = np.zeros(n_max, np.int32)
         self.n_vertices = 0
         self.versions: list[Version] = []
         self._views: dict[int, JoinView] = {}
         # (src, dst) -> latest live row; _prev_live chains to the previous
         # live row with the same key (LIFO, matching "delete the newest
-        # live duplicate" semantics).
-        self._live_index: dict[int, int] = {}
+        # live duplicate" semantics). Pre-sized for e_max distinct keys at
+        # <= 2/3 load so the steady-state stream never pays a rehash.
+        self._index = LiveEdgeIndex(capacity=(e_max * 3 + 1) // 2)
         self._prev_live = np.full(e_max, -1, np.int64)
         self._batch_log: list[_BatchDelta] = []
         # records with version <= _log_floor have been trimmed (gc_views);
@@ -279,6 +457,9 @@ class DynamicGraph:
         v = batch.version.pack()
         if self.versions and v <= self.versions[-1].pack():
             raise ValueError("mutation batches must have increasing versions")
+        # the single overflow check of the int32-native stamp plane; raises
+        # (like the capacity check below) before any state mutates
+        v32 = pack32_checked(batch.version)
         if self.n_edges + len(batch.add_src) > self.e_max:
             # checked before any state mutates so a failed apply is a no-op
             raise MemoryError("edge capacity exceeded")
@@ -292,7 +473,7 @@ class DynamicGraph:
             vids, first = np.unique(batch.add_vertices, return_index=True)
             new = self.v_created[vids] == MAXV
             vids, first = vids[new], first[new]
-            self.v_created[vids] = v
+            self.v_created[vids] = v32
             self.v_type[vids] = batch.vertex_types[first]
             self.n_vertices += len(vids)
         # edge adds: append rows
@@ -302,42 +483,78 @@ class DynamicGraph:
             sl = slice(self.n_edges, self.n_edges + k)
             self.src[sl] = batch.add_src
             self.dst[sl] = batch.add_dst
-            self.created[sl] = v
+            self.created[sl] = v32
             self.deleted[sl] = MAXV
-            # auto-create endpoint vertices (untyped)
-            ends = np.unique(np.concatenate([batch.add_src, batch.add_dst]))
-            new = ends[self.v_created[ends] == MAXV]
-            self.v_created[new] = v
-            self.n_vertices += len(new)
-            # push each new row onto its key's live stack
-            index = self._live_index
-            prev = self._prev_live
-            for row, key in enumerate(
-                    _edge_keys(batch.add_src, batch.add_dst).tolist(),
-                    row_start):
-                old = index.get(key, -1)
-                prev[row] = old
-                index[key] = row
+            # auto-create endpoint vertices (untyped). Large batches use a
+            # boolean scatter over the vertex table (O(n_max), but plain
+            # ufunc/scatter passes); small batches on a large store keep
+            # the O(k log k) unique+gather so a serving-tail delta never
+            # pays a full vertex-table scan
+            if 4 * k >= self.n_max:
+                touched = np.zeros(self.n_max, bool)
+                touched[batch.add_src] = True
+                touched[batch.add_dst] = True
+                touched &= self.v_created == MAXV
+                self.v_created[touched] = v32
+                self.n_vertices += int(np.count_nonzero(touched))
+            else:
+                ends = np.unique(np.concatenate([batch.add_src,
+                                                 batch.add_dst]))
+                new = ends[self.v_created[ends] == MAXV]
+                self.v_created[new] = v32
+                self.n_vertices += len(new)
+            # push the new rows onto their keys' live stacks, whole-batch:
+            # a stable key sort groups duplicates in arrival order, so each
+            # duplicate chains to its predecessor in the run; one fused
+            # probe pass (push) then swaps each key's previous top out —
+            # run heads chain to it — and its run tail (newest dup) in
+            rows = np.arange(row_start, row_start + k, dtype=np.int64)
+            keys = _edge_keys(batch.add_src, batch.add_dst)
+            order = np.argsort(keys, kind="stable")
+            sk, sr = keys[order], rows[order]
+            head = np.r_[True, sk[1:] != sk[:-1]]
+            dup = np.flatnonzero(~head)
+            self._prev_live[sr[dup]] = sr[dup - 1]
+            tail = np.r_[head[1:], True]
+            self._prev_live[sr[head]] = self._index.push(sk[head], sr[tail])
             self.n_edges += k
-        # edge deletes: pop the newest live row matching (src, dst)
-        del_rows: list[int] = []
+        # edge deletes: pop the newest live row matching (src, dst) —
+        # batched. Duplicated delete keys pop successive stack entries:
+        # round t tombstones the t-th duplicate of every key that still
+        # has a live row, walking the prev-live chains one hop per round
+        # (rounds = max per-key duplication, typically 1).
+        del_rows = np.zeros(0, np.int64)
         if len(batch.del_src):
-            index = self._live_index
-            prev = self._prev_live
-            deleted = self.deleted
-            for key in _edge_keys(batch.del_src, batch.del_dst).tolist():
-                row = index.get(key, -1)
-                if row < 0:
-                    continue            # no live row — ignore (seed semantics)
-                deleted[row] = v
-                del_rows.append(row)
-                p = prev[row]
-                if p >= 0:
-                    index[key] = p
-                else:
-                    del index[key]
+            dkeys = _edge_keys(batch.del_src, batch.del_dst)
+            order = np.argsort(dkeys, kind="stable")
+            sk = dkeys[order]
+            head = np.flatnonzero(np.r_[True, sk[1:] != sk[:-1]])
+            uk = sk[head]
+            counts = np.diff(np.r_[head, len(sk)])
+            # one probe pass resolves each key's slot; the new tops are
+            # written straight back to those slots (no inserts happen in
+            # between, so the slots stay valid)
+            slots = self._index.slots_of(uk)
+            top = self._index.rows_at(slots)
+            popped = top >= 0          # keys with no live row: ignore (seed)
+            cur = top
+            parts = []
+            t = 0
+            while True:
+                act = (cur >= 0) & (counts > t)
+                if not act.any():
+                    break
+                rows_t = cur[act]
+                self.deleted[rows_t] = v32
+                parts.append(rows_t)
+                cur[act] = self._prev_live[rows_t]
+                t += 1
+            if parts:
+                del_rows = np.concatenate(parts)
+            if popped.any():
+                self._index.set_rows(slots[popped], cur[popped])
         self._batch_log.append(_BatchDelta(
-            v, row_start, self.n_edges, np.asarray(del_rows, np.int64)))
+            v, row_start, self.n_edges, del_rows))
         self.versions.append(batch.version)
 
     # -- snapshots -----------------------------------------------------------
@@ -347,22 +564,22 @@ class DynamicGraph:
 
         ``use_kernel`` routes the resolve through the Pallas
         ``snapshot_resolve`` kernel (liveness as a 2-slot multi-version
-        resolve); the NumPy path is the portable host fallback.
+        resolve); the NumPy path is the portable host fallback. Stamps are
+        int32 data-plane packed natively, so the kernel consumes the
+        stored arrays directly — no 64→32-bit host conversion here.
         """
-        v = version.pack()
+        v32 = pack32_clamped(version)
         e = self.n_edges
         if use_kernel:
             from repro.kernels import ops
-            mask = ops.liveness_mask(_pack64_to32(self.created[:e]),
-                                     _pack64_to32(self.deleted[:e]),
-                                     int(_pack64_to32(np.asarray([v]))[0]))
+            mask = ops.liveness_mask(self.created[:e], self.deleted[:e], v32)
             return np.asarray(mask)
-        return (self.created[:e] <= v) & (v < self.deleted[:e])
+        return (self.created[:e] <= v32) & (v32 < self.deleted[:e])
 
     def num_vertices(self, version: Optional[Version] = None) -> int:
         if version is None:
             return self.n_vertices
-        return int((self.v_created <= version.pack()).sum())
+        return int((self.v_created <= pack32_clamped(version)).sum())
 
     def join_view(self, version: Version,
                   use_kernel: bool = False) -> JoinView:
@@ -426,9 +643,12 @@ class DynamicGraph:
                 else np.zeros(0, np.int64))
         # rows added in the delta count only if still live at `key`; rows
         # deleted in the delta count only if present in the base (a row both
-        # added and deleted inside the delta cancels out of both sets)
-        adds = adds[self.deleted[adds] > key]
-        dels = dels[self.created[dels] <= base_key]
+        # added and deleted inside the delta cancels out of both sets).
+        # Stamp arrays are int32-packed, so the 64-bit log/cache keys are
+        # re-expressed in stamp packing for the comparisons.
+        adds = adds[self.deleted[adds] > pack32_clamped(version)]
+        dels = dels[self.created[dels]
+                    <= pack32_clamped(Version.unpack(base_key))]
         churn = len(adds) + len(dels)
         if churn > self.churn_threshold * max(base.m, 1):
             return None
@@ -486,6 +706,16 @@ class DynamicGraph:
         at all, everything up to the newest applied version is trimmed —
         any later-cached old view is then below the floor and rebuilds
         from scratch, never from missing records).
+
+        The log floor additionally tracks ``retire_below`` *whether or not*
+        :func:`prune_retired` fired: records strictly below the retired
+        floor only patch retired-plan targets, and keeping them pinned the
+        log to the oldest retired view whenever no post-cutover view was
+        cached yet (e.g. a serving path that stalls right after a
+        re-sharding split) — the one place view pruning and ``_log_floor``
+        bookkeeping could disagree. Still-cached retired views remain
+        addressable; they just full-rebuild instead of serving as delta
+        bases.
         """
         dropped = prune_retired(self._views, retire_below)
         dropped += prune_views(self._views, keep_latest)
@@ -494,7 +724,10 @@ class DynamicGraph:
         elif self.versions:
             floor = self.versions[-1].pack()
         else:
-            return 0
+            floor = self._log_floor
+        # retire_below drops entries < floor, the log trim drops records
+        # <= floor: records AT the retired floor (the cutover batch) stay
+        floor = max(floor, retire_below - 1)
         self._batch_log = [r for r in self._batch_log if r.version > floor]
         self._log_floor = max(self._log_floor, floor)
         return dropped

@@ -14,30 +14,36 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.versioned import Version
+from repro.core.versioned import (Version, pack32_checked, pack32_clamped)
 from repro.graph.dyngraph import MAXV, MutationBatch
 
 
 class LoopDynamicGraph:
-    """Seed-semantics store: per-element loops, O(E) delete scans."""
+    """Seed-semantics store: per-element loops, O(E) delete scans.
+
+    Stamps use the same int32 data-plane packing as the vectorized store
+    (``MAXV`` = int32 max = 'never'), so equivalence tests can compare the
+    stamp/vertex tables of the two stores byte-for-byte.
+    """
 
     def __init__(self, n_max: int, e_max: int):
         self.n_max = n_max
         self.e_max = e_max
         self.src = np.zeros(e_max, np.int32)
         self.dst = np.zeros(e_max, np.int32)
-        self.created = np.full(e_max, MAXV, np.int64)
-        self.deleted = np.full(e_max, MAXV, np.int64)
+        self.created = np.full(e_max, MAXV, np.int32)
+        self.deleted = np.full(e_max, MAXV, np.int32)
         self.n_edges = 0
-        self.v_created = np.full(n_max, MAXV, np.int64)
+        self.v_created = np.full(n_max, MAXV, np.int32)
         self.v_type = np.zeros(n_max, np.int32)
         self.n_vertices = 0
         self.versions: list[Version] = []
 
     def apply(self, batch: MutationBatch) -> None:
-        v = batch.version.pack()
-        if self.versions and v <= self.versions[-1].pack():
+        if self.versions \
+                and batch.version.pack() <= self.versions[-1].pack():
             raise ValueError("mutation batches must have increasing versions")
+        v = pack32_checked(batch.version)
         for vid, vt in zip(batch.add_vertices, batch.vertex_types):
             if self.v_created[vid] == MAXV:
                 self.v_created[vid] = v
@@ -66,7 +72,7 @@ class LoopDynamicGraph:
         self.versions.append(batch.version)
 
     def snapshot_mask(self, version: Version) -> np.ndarray:
-        v = version.pack()
+        v = pack32_clamped(version)
         e = self.n_edges
         return (self.created[:e] <= v) & (v < self.deleted[:e])
 

@@ -53,7 +53,12 @@ them without re-bucketing.
 Thread-safety: like ``DynamicGraph``, this class is not internally
 locked; the serving layer (``launch.serve_graph.GraphQueryServer``)
 serializes every mutating touch behind one lock and runs query compute on
-immutable stitched views outside it.
+immutable stitched views outside it. ``parallel_apply`` adds an *internal*
+apply plane below that discipline: ``seal_epoch`` fans the per-shard seals
+out onto a persistent thread pool (shard state is disjoint, the store's
+vectorized apply path releases the GIL inside its NumPy kernels) and
+joins them before returning, so callers observe the same serial
+semantics — one thread in, one thread out.
 """
 from __future__ import annotations
 
@@ -65,25 +70,20 @@ import numpy as np
 
 from repro.core.replica import ShardPlanner
 from repro.core.snapshotter import DataNode, IngestNode, SnapshotCoordinator
-from repro.core.versioned import Version
+from repro.core.versioned import (Version, pack32_checked, pack32_clamped,
+                                  unpack32)
 from repro.graph.dyngraph import (DEFAULT_CHURN_THRESHOLD, MAXV, DynamicGraph,
                                   JoinView, MutationBatch, build_join_view,
-                                  prune_retired, prune_views)
+                                  prune_retired, prune_views, splitmix64)
 
 # payload row kinds, in the order DynamicGraph.apply processes them
 K_VERTEX, K_ADD, K_DEL = 0, 1, 2
 
-
-def _mix64(x: np.ndarray) -> np.ndarray:
-    """SplitMix64 finalizer (vectorized): the refinement hash consulted by
-    :meth:`RoutingPlan.assign` for split bits. Independent of the base
-    ``key % n_base`` residue, so a split halves a shard's keys uniformly
-    regardless of their residue structure."""
-    x = np.asarray(x).astype(np.uint64)
-    x = (x + np.uint64(0x9E3779B97F4A7C15))
-    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-    return x ^ (x >> np.uint64(31))
+# the refinement hash consulted by RoutingPlan.assign for split bits:
+# independent of the base ``key % n_base`` residue, so a split halves a
+# shard's keys uniformly regardless of their residue structure (same
+# SplitMix64 finalizer the live-edge index hashes slots with)
+_mix64 = splitmix64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,24 +149,43 @@ class RoutingPlan:
     def n_shards(self) -> int:
         return len(self.leaves)
 
+    def _table(self) -> tuple[np.ndarray, int]:
+        """Dense ``(residue, low-D refinement bits) -> shard`` lookup,
+        built once per (immutable) plan and cached on the instance. D is
+        the deepest leaf's depth; a leaf at depth d owns every table entry
+        whose low d bits match its path, so the leaves tile each residue's
+        2^D entries exactly."""
+        cached = getattr(self, "_tbl", None)
+        if cached is None:
+            depth = max(leaf.depth for leaf in self.leaves)
+            table = np.full((self.n_base, 1 << depth), -1, np.int64)
+            for leaf in self.leaves:
+                table[leaf.residue, leaf.path::1 << leaf.depth] = leaf.shard
+            assert (table >= 0).all(), "leaves do not tile the key space"
+            # flattened for the 1-D gather in assign: row-major means the
+            # flat index is (residue << depth) | refinement_bits
+            cached = (table.ravel(), depth)
+            object.__setattr__(self, "_tbl", cached)   # frozen dataclass
+        return cached
+
     def assign(self, keys) -> np.ndarray:
         """Vectorized key->shard assignment under this plan.
 
         Accepts a scalar (returns int — the ``IngestNode.dispatch`` scalar
         path) or an array (returns an int64 array of the same shape).
-        Every key matches exactly one leaf, so the result is total.
-        """
+        Every key matches exactly one leaf, so the result is total. One
+        gather through the cached leaf table instead of a per-leaf mask
+        pass — on an unsplit plan this is a single ``%`` ufunc."""
         arr = np.asarray(keys)
         scalar = arr.ndim == 0
         k = np.atleast_1d(arr).astype(np.int64)
-        residue = k % self.n_base
-        h = _mix64(k)
-        out = np.empty(k.shape, np.int64)
-        for leaf in self.leaves:
-            mask = np.uint64((1 << leaf.depth) - 1)
-            mine = (residue == leaf.residue) & ((h & mask)
-                                               == np.uint64(leaf.path))
-            out[mine] = leaf.shard
+        table, depth = self._table()
+        if depth == 0:
+            out = k % self.n_base
+        else:
+            h = _mix64(k) & np.uint64((1 << depth) - 1)
+            out = table[((k % self.n_base) << depth)
+                        | h.view(np.int64)]
         return int(out[0]) if scalar else out
 
     def split(self, hot_shard: int, activation_epoch: int) -> "RoutingPlan":
@@ -252,16 +271,20 @@ def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
     ``IngestNode.dispatch_batch``.
 
     keys are the routing keys (dst for edges, the vertex id for vertex
-    adds); payload rows are ``(kind, a, b, packed_version)`` int64 — kind
-    ordering (vertices, then edge adds, then deletes) matches the order
-    ``DynamicGraph.apply`` processes a batch, so a shard replaying its rows
-    in payload order reproduces the single store's semantics.
+    adds); payload rows are ``(kind, a, b, packed32_version)`` int32 —
+    kind ordering (vertices, then edge adds, then deletes) matches the
+    order ``DynamicGraph.apply`` processes a batch, so a shard replaying
+    its rows in payload order reproduces the single store's semantics.
+    The version column uses the same order-preserving int32 data-plane
+    packing as the stamp arrays (checked here, ahead of any ingest
+    bookkeeping), which halves the payload bytes moved per row through
+    dispatch grouping and decode.
 
     Raises ``ValueError`` if ``add_vertices`` and ``vertex_types`` disagree
     in length (a batch mutated after construction, bypassing
     ``MutationBatch.__post_init__``).
     """
-    v = batch.version.pack()
+    v = pack32_checked(batch.version)
     # MutationBatch.__post_init__ pads/validates, so the two arrays agree by
     # construction; a hand-built batch that bypassed it fails loudly here
     # instead of silently dropping vertex adds on the sharded path only
@@ -275,8 +298,8 @@ def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
     total = n_typed + n_add + n_del
     if not total:
         z = np.zeros(0, np.int64)
-        return z, z, np.zeros((0, 4), np.int64)
-    payload = np.empty((total, 4), np.int64)
+        return z, z, np.zeros((0, 4), np.int32)
+    payload = np.empty((total, 4), np.int32)
     payload[:, 3] = v
     payload[:n_typed, 0] = K_VERTEX
     payload[:n_typed, 1] = batch.add_vertices
@@ -329,14 +352,79 @@ def decode_payloads(payloads: list[np.ndarray]) -> list[MutationBatch]:
         add = kind == K_ADD
         dele = kind == K_DEL
         out.append(MutationBatch(
-            Version.unpack(int(v)),
-            add_src=a[add].astype(np.int32),
-            add_dst=b[add].astype(np.int32),
-            del_src=a[dele].astype(np.int32),
-            del_dst=b[dele].astype(np.int32),
-            add_vertices=a[vert].astype(np.int32),
-            vertex_types=b[vert].astype(np.int32)))
+            unpack32(int(v)),
+            add_src=a[add].astype(np.int32, copy=False),
+            add_dst=b[add].astype(np.int32, copy=False),
+            del_src=a[dele].astype(np.int32, copy=False),
+            del_dst=b[dele].astype(np.int32, copy=False),
+            add_vertices=a[vert].astype(np.int32, copy=False),
+            vertex_types=b[vert].astype(np.int32, copy=False)))
     return out
+
+
+def _merge_same_version(batches: list[MutationBatch]) -> list[MutationBatch]:
+    """Fold adjacent same-version batches (version-sorted input) into one
+    by field concatenation — the in-arrival-order row merge
+    ``decode_payloads`` performs for encoded rows, lifted to whole
+    batches. ``DynamicGraph.apply`` rejects repeated versions, so rows of
+    one version MUST reach it as one batch."""
+    out: list[MutationBatch] = []
+    for b in batches:
+        if out and out[-1].version == b.version:
+            a = out[-1]
+            out[-1] = MutationBatch(
+                a.version,
+                add_src=np.concatenate([a.add_src, b.add_src]),
+                add_dst=np.concatenate([a.add_dst, b.add_dst]),
+                del_src=np.concatenate([a.del_src, b.del_src]),
+                del_dst=np.concatenate([a.del_dst, b.del_dst]),
+                add_vertices=np.concatenate([a.add_vertices,
+                                             b.add_vertices]),
+                vertex_types=np.concatenate([a.vertex_types,
+                                             b.vertex_types]))
+        else:
+            out.append(b)
+    return out
+
+
+class _ShardSlice:
+    """Deferred per-shard slice of one ingested MutationBatch.
+
+    The steady-state ingest fast path routes ONCE (``node_ids`` over the
+    concatenated routing keys), groups with one stable GIL-releasing
+    argsort, and hands every shard one of these — its ascending original
+    row positions across the batch's three sections (typed vertex adds,
+    edge adds, edge deletes) — instead of encoding payload rows and
+    gathering a slice per shard on the ingest thread. :meth:`materialize`
+    — called inside the shard's seal, i.e. on the parallel apply plane —
+    splits the positions at the section boundaries (O(log) searchsorted;
+    a stable sort keeps them ascending, so the slice order matches the
+    encoded path's row order exactly) and builds the shard-local
+    ``MutationBatch`` with O(own rows) gathers: no payload encode, no
+    decode, and no O(whole batch) work per shard.
+    """
+
+    __slots__ = ("batch", "rows", "n_typed", "n_add")
+
+    def __init__(self, batch: MutationBatch, rows: np.ndarray,
+                 n_typed: int, n_add: int):
+        self.batch = batch
+        self.rows = rows
+        self.n_typed = n_typed
+        self.n_add = n_add
+
+    def materialize(self) -> MutationBatch:
+        b, rows = self.batch, self.rows
+        nv, na = self.n_typed, self.n_add
+        i1, i2 = np.searchsorted(rows, (nv, nv + na))
+        mv = rows[:i1]
+        ma = rows[i1:i2] - nv
+        md = rows[i2:] - (nv + na)
+        return MutationBatch(b.version,
+                             add_src=b.add_src[ma], add_dst=b.add_dst[ma],
+                             del_src=b.del_src[md], del_dst=b.del_dst[md],
+                             add_vertices=b.add_vertices[mv],
+                             vertex_types=b.vertex_types[mv])
 
 
 def stitch_join_views(version: Version,
@@ -384,6 +472,16 @@ class ShardedDynamicGraph:
             consulted by :meth:`maybe_reshard`. Without one, re-sharding
             only happens via explicit :meth:`split_shard` calls.
         stats_decay / query_weight: :class:`AccessStats` window shape.
+        parallel_apply: size of the persistent thread pool
+            :meth:`seal_epoch` dispatches per-shard seals (and therefore
+            per-shard ``DynamicGraph.apply`` work) onto. ``0``/``1`` (the
+            default) keeps the serial apply plane. Shards share no mutable
+            state — each seal touches only its own node, shard store and
+            ``shard_apply_seconds`` slot — and the store's batched NumPy
+            apply path releases the GIL inside its array kernels, so
+            N-shard epochs genuinely overlap. See :meth:`seal_epoch` for
+            the failure semantics; call :meth:`shutdown` to reap the pool
+            eagerly (it is otherwise reaped with the store).
 
     The synchronous driving pattern is one batch per epoch::
 
@@ -404,12 +502,15 @@ class ShardedDynamicGraph:
                  churn_threshold: float = DEFAULT_CHURN_THRESHOLD,
                  route: Optional[Callable] = None,
                  planner: Optional[ShardPlanner] = None,
-                 stats_decay: float = 0.5, query_weight: float = 1.0):
+                 stats_decay: float = 0.5, query_weight: float = 1.0,
+                 parallel_apply: int = 0):
         if n_shards < 1:
             raise ValueError("need at least one shard")
         self.n_max = n_max
         self.e_max = e_max
         self.churn_threshold = churn_threshold
+        self.parallel_apply = int(parallel_apply)
+        self._pool = None
         if route is not None:
             if planner is not None:
                 raise ValueError(
@@ -451,7 +552,32 @@ class ShardedDynamicGraph:
         def on_seal(epoch: int, payloads: list) -> None:
             t0 = time.perf_counter()
             shard = self.shards[shard_id]
-            batches = decode_payloads(payloads)
+            # payloads arrive in three shapes: whole MutationBatches (the
+            # single-shard passthrough), deferred _ShardSlices (the
+            # steady-state fast path — materialized HERE, on the parallel
+            # apply plane), and encoded row arrays (the straggler/parked
+            # and migration paths). Kinds can share an epoch (a slice
+            # parked before the shard caught up) but never a version, so
+            # merging on the packed version restores apply order.
+            direct = []
+            arrays = []
+            for p in payloads:
+                if isinstance(p, _ShardSlice):
+                    direct.append(p.materialize())
+                elif isinstance(p, MutationBatch):
+                    direct.append(p)
+                else:
+                    arrays.append(p)
+            batches = decode_payloads(arrays)
+            if direct:
+                # encoded rows always precede a same-version direct batch
+                # in arrival order (the only same-version pairing is a
+                # re-sharding migration slice + the user batch at the
+                # cutover version, and the migration dispatches first), so
+                # a stable sort + adjacent merge reproduces the encoded
+                # path's row order exactly
+                batches = _merge_same_version(
+                    sorted(batches + direct, key=lambda b: b.version.pack()))
             # pre-check capacity across the WHOLE epoch so a failed seal is
             # a no-op (DynamicGraph.apply is atomic per batch; this makes
             # the seal atomic per epoch) — the epoch stays pending and can
@@ -491,6 +617,78 @@ class ShardedDynamicGraph:
                 f"epoch {batch.version.epoch} is already sealed on some "
                 f"shard (max local frontier {sealed}); ingest batches "
                 "before sealing their epoch")
+        if (self.plan is not None and self.n_shards == 1
+                and self.nodes[0].local_frontier >= batch.version.epoch - 1):
+            # single-shard passthrough: the plan routes every key to shard
+            # 0, so the batch rides to the node AS ITSELF — no payload
+            # encode, no routing pass, no decode at seal (the batch is
+            # applied as handed in; treat it as immutable once ingested).
+            # An ineligible node (straggler restart) falls through to the
+            # encoded path, whose parked slices know how to re-dispatch.
+            if len(batch.vertex_types) != len(batch.add_vertices):
+                # same malformed-batch guard encode_mutations applies,
+                # still ahead of any version bookkeeping
+                raise ValueError(
+                    f"add_vertices ({len(batch.add_vertices)}) and "
+                    f"vertex_types ({len(batch.vertex_types)}) disagree "
+                    "in length")
+            # overflow must raise BEFORE version bookkeeping (like the
+            # other two paths) or the epoch wedges pending forever
+            pack32_checked(batch.version)
+            self._last_version = v
+            self._ingested_packed.append(v)
+            n = batch.size
+            if not n:
+                return 0
+            self.access_stats.record_mutations(np.asarray([n], np.float64))
+            self.nodes[0].receive_batch(
+                batch.version.epoch, np.broadcast_to(np.int64(0), (n,)),
+                payload=batch)
+            self.ingest_node.dispatched += n
+            return n
+        epoch = batch.version.epoch
+        if (self.plan is not None
+                and all(n.local_frontier >= epoch - 1 for n in self.nodes)):
+            # steady-state fast path (every shard eligible — the no-wait
+            # rule can't park anything): one vectorized routing pass over
+            # the concatenated keys, then each shard receives a deferred
+            # _ShardSlice; the per-shard row gathers happen inside the
+            # shards' seals, i.e. on the parallel apply plane, leaving the
+            # ingest thread with O(batch) hashing + bincount only.
+            # pack32_checked mirrors the encoded path's overflow check
+            # (encode first: raise before any version bookkeeping).
+            if len(batch.vertex_types) != len(batch.add_vertices):
+                raise ValueError(
+                    f"add_vertices ({len(batch.add_vertices)}) and "
+                    f"vertex_types ({len(batch.vertex_types)}) disagree "
+                    "in length")
+            pack32_checked(batch.version)
+            self._last_version = v
+            self._ingested_packed.append(v)
+            total = batch.size
+            if not total:
+                return 0
+            n_typed, n_add = len(batch.add_vertices), len(batch.add_src)
+            keys = np.concatenate([
+                batch.add_vertices, batch.add_dst, batch.del_dst]) \
+                .astype(np.int64, copy=False)
+            node_ids = self.plan.assign(keys)
+            self.access_stats.record_mutations(
+                np.bincount(node_ids, minlength=self.n_shards))
+            # one stable grouping sort (GIL-releasing); each shard gets its
+            # ascending row positions, gathered at ITS seal — O(own rows)
+            # per shard, O(batch log batch) here
+            order = np.argsort(node_ids, kind="stable")
+            sorted_nodes = node_ids[order]
+            starts = np.flatnonzero(
+                np.r_[True, sorted_nodes[1:] != sorted_nodes[:-1]])
+            bounds = np.r_[starts, len(order)]
+            for a, b in zip(bounds[:-1], bounds[1:]):
+                self.nodes[int(sorted_nodes[a])].receive_batch(
+                    epoch, np.broadcast_to(np.int64(0), (b - a,)),
+                    payload=_ShardSlice(batch, order[a:b], n_typed, n_add))
+            self.ingest_node.dispatched += total
+            return total
         # encode first: if it raises (malformed batch), no version
         # bookkeeping has happened and the same version can be retried —
         # otherwise latest_sealed() could later name a version whose
@@ -510,6 +708,21 @@ class ShardedDynamicGraph:
                                                    node_ids=node_ids)
         return self.ingest_node.dispatch_batch(keys, epochs, payload)
 
+    def _executor(self):
+        if self._pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.parallel_apply,
+                thread_name_prefix="shard-apply")
+        return self._pool
+
+    def shutdown(self) -> None:
+        """Reap the parallel-apply thread pool (idempotent; the store
+        stays usable — the pool is re-created on the next parallel seal)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
     def seal_epoch(self, epoch: int) -> int:
         """Seal ``epoch`` on every shard (applying parked + pending slices)
         and advance the global frontier. Returns the new global frontier.
@@ -518,11 +731,32 @@ class ShardedDynamicGraph:
         between rounds: a slice parked because its shard lagged several
         epochs becomes dispatchable the moment the previous epoch seals,
         and must land before its own epoch seals.
+
+        With ``parallel_apply > 1``, each round's per-shard seals — and
+        therefore the shards' ``DynamicGraph.apply`` work — run
+        concurrently on the persistent thread pool. Shard state is
+        disjoint per thread (one node + one store + one telemetry slot
+        each); the serial seams (blocked-batch retry between rounds,
+        coordinator advance at the end) stay on the calling thread. Every
+        shard of a round is awaited even when one fails, then the
+        lowest-shard exception is re-raised: exactly like the serial
+        plane, a failing shard's epoch stays pending and re-sealable (I6)
+        while the global frontier — never advanced here on failure —
+        keeps the epoch invisible to queries, so the epoch aborts
+        atomically from the store's point of view.
         """
         while any(n.local_frontier < epoch for n in self.nodes):
             self.ingest_node.retry_blocked_batches()
-            for node in self.nodes:
-                if node.local_frontier < epoch:
+            lagging = [n for n in self.nodes if n.local_frontier < epoch]
+            if self.parallel_apply > 1 and len(lagging) > 1:
+                futures = [self._executor().submit(
+                    n.seal_epoch, n.local_frontier + 1) for n in lagging]
+                errors = [f.exception() for f in futures]   # barrier
+                for err in errors:
+                    if err is not None:
+                        raise err
+            else:
+                for node in lagging:
                     node.seal_epoch(node.local_frontier + 1)
         self.ingest_node.retry_blocked_batches()
         return self.coordinator.advance()
@@ -641,8 +875,8 @@ class ShardedDynamicGraph:
         n = rows.size
         if not n:
             return 0
-        v = Version(epoch, 0).pack()
-        payload = np.empty((2 * n, 4), np.int64)
+        v = pack32_checked(Version(epoch, 0))
+        payload = np.empty((2 * n, 4), np.int32)
         payload[:, 3] = v
         payload[:n, 0] = K_DEL            # source loses the moving rows...
         payload[n:, 0] = K_ADD            # ...target gains them, same order
@@ -820,13 +1054,13 @@ class ShardedDynamicGraph:
     @property
     def n_vertices(self) -> int:
         """Vertices created on any shard so far."""
-        return int((self.v_created != np.iinfo(np.int64).max).sum())
+        return int((self.v_created != MAXV).sum())
 
     def num_vertices(self, version: Optional[Version] = None) -> int:
         """Vertices existing at ``version`` (or now, when None)."""
         if version is None:
             return self.n_vertices
-        return int((self.v_created <= version.pack()).sum())
+        return int((self.v_created <= pack32_clamped(version)).sum())
 
     @property
     def view_delta_patches(self) -> int:

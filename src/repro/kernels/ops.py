@@ -30,6 +30,9 @@ def snapshot_resolve(versions, values, query_version, **kw):
 
 
 def liveness_mask(created, deleted, query_version, **kw):
+    """Snapshot-mask hot path: expects the int32 data-plane stamp packing
+    the graph store uses natively (sentinel = int32 max), so the stored
+    ``created``/``deleted`` arrays feed the kernel without conversion."""
     kw.setdefault("interpret", _interpret())
     return _sr.liveness_mask(created, deleted, query_version, **kw)
 

@@ -86,7 +86,10 @@ def liveness_mask(created, deleted, query_version, *,
     graph store routes here on TPU.
 
     created/deleted: (N,) int32 data-plane-packed version stamps (ascending
-    per row: deleted is MAX-padded until tombstoned). Returns (N,) bool.
+    per row: deleted is MAX-padded until tombstoned). The dynamic graph
+    store keeps its stamp arrays in this packing natively, so they arrive
+    here as-is — no 64→32-bit host repack on the query path. Returns
+    (N,) bool.
     """
     versions = jnp.stack([jnp.asarray(created, jnp.int32),
                           jnp.asarray(deleted, jnp.int32)], axis=1)

@@ -12,7 +12,7 @@ import pytest
 
 from repro.core.versioned import Version
 from repro.graph import compute as gc
-from repro.graph.dyngraph import (DynamicGraph, MutationBatch,
+from repro.graph.dyngraph import (MAXV, DynamicGraph, MutationBatch,
                                   synthesize_churn_stream, synthesize_stream)
 from repro.graph.reference import LoopDynamicGraph
 
@@ -188,6 +188,47 @@ def test_gc_views_trims_log_even_without_dropping_views():
     _assert_views_equal(g2, ref, Version(19, 0))
 
 
+def test_gc_retired_floor_trims_batch_log_without_successor_view():
+    """Regression: the log floor must track ``retire_below`` even when
+    ``prune_retired`` cannot fire yet (no post-cutover view cached) —
+    previously the still-cached retired views pinned the batch log via
+    ``min(views)``, so a serving path that stalls right after a
+    re-sharding split kept the log growing with the stream. Retired views
+    stay addressable (they just rebuild instead of delta-patching), and
+    patching resumes above the floor."""
+    batches = synthesize_churn_stream(32, 8, 30, seed=21, delete_frac=0.2)
+    g = DynamicGraph(32, 4096, churn_threshold=10.0)
+    ref = LoopDynamicGraph(32, 4096)
+    for b in batches:
+        g.apply(b)
+        ref.apply(b)
+        g.join_view(b.version)
+    floor = Version(8, 0).pack()            # cutover at epoch 8, unsealed
+    assert len(g._batch_log) == 8
+    dropped = g.gc_views(keep_latest=8, retire_below=floor)
+    assert dropped == 0                     # no successor view: none drop
+    assert len(g._views) == 8               # retired views keep serving...
+    assert len(g._batch_log) == 0           # ...but the log is not pinned
+    assert g._log_floor >= floor - 1
+    # every epoch stays addressable and byte-identical (full rebuilds —
+    # the retired views are no longer usable as delta bases)
+    for e in range(8):
+        _assert_views_equal(g, ref, Version(e, 0))
+    # post-cutover stream: patching resumes above the floor
+    for e in (8, 9):
+        b = MutationBatch(Version(e, 0),
+                          add_src=np.array([e % 5], np.int32),
+                          add_dst=np.array([(e + 1) % 7], np.int32))
+        g.apply(b)
+        ref.apply(b)
+        g.join_view(b.version)
+    before = g.view_delta_patches
+    g.gc_views(keep_latest=8, retire_below=floor)   # successor exists now
+    assert all(k >= floor for k in g._views)
+    _assert_views_equal(g, ref, Version(9, 0))
+    assert g.view_delta_patches >= before
+
+
 def test_apply_evicts_stale_future_views():
     """Regression: a view cached for a not-yet-applied version must be
     evicted when a batch at or before that version lands."""
@@ -241,7 +282,7 @@ def test_apply_is_atomic_on_capacity_overflow():
                               add_vertices=np.array([7], np.int32),
                               vertex_types=np.array([1], np.int32)))
     assert g.n_vertices == 2 and g.n_edges == 1
-    assert g.v_created[7] == np.iinfo(np.int64).max
+    assert g.v_created[7] == MAXV
     assert Version(5, 0).pack() in g._views     # eviction didn't run
     assert len(g.versions) == 1
 
@@ -254,8 +295,7 @@ def test_synthesize_stream_emits_typed_vertices():
     assert any(len(b.vertex_types) and b.vertex_types.max() > 0
                for b in batches)
     # the store recorded the per-epoch types
-    assert set(np.unique(g.v_type[g.v_created < np.iinfo(np.int64).max])) \
-        >= {0, 1, 2}
+    assert set(np.unique(g.v_type[g.v_created < MAXV])) >= {0, 1, 2}
     # vertex counts per snapshot are monotone in version
     counts = [g.num_vertices(Version(e, 0)) for e in range(6)]
     assert counts == sorted(counts)

@@ -1,0 +1,180 @@
+"""Vectorized live-edge index tests.
+
+``LiveEdgeIndex`` (the NumPy open-addressing hash table behind
+``DynamicGraph.apply``'s delete resolution) against a plain-dict oracle:
+batched push/pop semantics, LIFO order under duplicate (src, dst) rows,
+hash-collision stress with a deliberately tiny table (forcing long probe
+chains and growth rehashes), and add→delete→re-add interleavings through
+the full store against the loop reference.
+"""
+import numpy as np
+import pytest
+
+from repro.core.versioned import Version
+from repro.graph.dyngraph import (MAXV, DynamicGraph, LiveEdgeIndex,
+                                  MutationBatch, synthesize_churn_stream)
+from repro.graph.reference import LoopDynamicGraph
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def test_push_returns_previous_row_and_lookup_agrees():
+    idx = LiveEdgeIndex(capacity=8)
+    keys = np.array([10, 20, 30], np.int64)
+    old = idx.push(keys, np.array([0, 1, 2]))
+    assert old.tolist() == [-1, -1, -1]
+    # update in place: previous rows come back, newest rows stored
+    old = idx.push(keys, np.array([5, 6, 7]))
+    assert old.tolist() == [0, 1, 2]
+    assert idx.lookup(keys).tolist() == [5, 6, 7]
+    assert idx.lookup(np.array([99], np.int64)).tolist() == [-1]
+
+
+def test_store_row_minus_one_marks_emptied():
+    idx = LiveEdgeIndex(capacity=8)
+    idx.store(np.array([7], np.int64), np.array([3]))
+    assert idx.lookup(np.array([7], np.int64)).tolist() == [3]
+    slots = idx.slots_of(np.array([7], np.int64))
+    idx.set_rows(slots, np.array([-1]))
+    assert idx.lookup(np.array([7], np.int64)).tolist() == [-1]
+    # pushing the key again revives it and reports 'absent'
+    assert idx.push(np.array([7], np.int64),
+                    np.array([9])).tolist() == [-1]
+    assert idx.lookup(np.array([7], np.int64)).tolist() == [9]
+
+
+def test_collision_stress_tiny_table_growth_and_probing():
+    """Hundreds of keys through a 16-slot table: every insert round hits
+    probe conflicts and the table must grow several times, dropping
+    emptied keys on each rehash, with dict-identical results."""
+    rng = np.random.default_rng(0)
+    idx = LiveEdgeIndex(capacity=16)
+    oracle: dict[int, int] = {}
+    all_keys = rng.choice(10_000, size=400, replace=False).astype(np.int64)
+    for step in range(20):
+        ins = rng.choice(all_keys, size=40, replace=False)
+        rows = rng.integers(0, 1 << 20, size=40)
+        got_old = idx.push(ins, rows)
+        for k, r, o in zip(ins.tolist(), rows.tolist(), got_old.tolist()):
+            assert oracle.get(k, -1) == o
+            oracle[k] = int(r)
+        # empty a random live subset through the slot API
+        live = np.array([k for k, r in oracle.items() if r >= 0], np.int64)
+        if live.size:
+            kill = rng.choice(live, size=min(10, live.size), replace=False)
+            slots = idx.slots_of(kill)
+            assert (slots >= 0).all()
+            idx.set_rows(slots, np.full(len(kill), -1))
+            for k in kill.tolist():
+                oracle[k] = -1
+        probe = rng.choice(all_keys, size=100, replace=False)
+        expect = [oracle.get(k, -1) for k in probe.tolist()]
+        assert idx.lookup(probe).tolist() == expect
+    assert idx.capacity > 16                      # growth actually happened
+
+
+def test_rehash_drops_emptied_keys():
+    idx = LiveEdgeIndex(capacity=16)
+    keys = np.arange(8, dtype=np.int64)
+    idx.push(keys, np.arange(8))
+    idx.set_rows(idx.slots_of(keys), np.full(8, -1))   # all emptied
+    used_before = idx._used
+    # force a growth: occupancy must reset to the live key count (0) + new
+    idx.push(np.arange(100, 140, dtype=np.int64), np.arange(40))
+    assert idx._used <= 40 < used_before + 40
+    assert idx.lookup(keys).tolist() == [-1] * 8
+
+
+def test_duplicate_adds_chain_lifo_within_and_across_batches():
+    """3 duplicate rows in one batch + 1 in the next: deletes must pop
+    rows newest-first (row ids descending), matching the oracle."""
+    g = DynamicGraph(4, 64)
+    g.apply(MutationBatch(Version(0, 0),
+                          add_src=np.array([1, 1, 1], np.int32),
+                          add_dst=np.array([2, 2, 2], np.int32)))
+    g.apply(MutationBatch(Version(1, 0),
+                          add_src=np.array([1], np.int32),
+                          add_dst=np.array([2], np.int32)))
+    # pop order: row 3 (newest), then 2, then 1, then 0
+    for e, expect_row in zip(range(2, 6), (3, 2, 1, 0)):
+        g.apply(MutationBatch(Version(e, 0),
+                              del_src=np.array([1], np.int32),
+                              del_dst=np.array([2], np.int32)))
+        assert g.deleted[expect_row] != MAXV, f"row {expect_row} not popped"
+        assert (g.deleted[:expect_row] == MAXV).all()
+
+
+def test_batch_with_more_deletes_than_live_duplicates():
+    """Duplicate delete keys beyond the live stack depth are ignored (seed
+    semantics), including when interleaved with other keys."""
+    g = DynamicGraph(8, 64)
+    ref = LoopDynamicGraph(8, 64)
+    b0 = MutationBatch(Version(0, 0),
+                       add_src=np.array([1, 1, 3], np.int32),
+                       add_dst=np.array([2, 2, 4], np.int32))
+    b1 = MutationBatch(Version(1, 0),
+                       del_src=np.array([1, 3, 1, 1, 5], np.int32),
+                       del_dst=np.array([2, 4, 2, 2, 6], np.int32))
+    for b in (b0, b1):
+        g.apply(b)
+        ref.apply(b)
+    np.testing.assert_array_equal(g.snapshot_mask(Version(1, 0)),
+                                  ref.snapshot_mask(Version(1, 0)))
+    assert g.join_view(Version(1, 0)).m == 0
+
+
+@pytest.mark.parametrize("seed", [3, 5])
+def test_add_delete_readd_interleavings_match_oracle(seed):
+    """Dup-heavy randomized interleavings (tiny vertex space, heavy churn)
+    through a deliberately tiny index so probing and growth are exercised
+    mid-stream."""
+    n = 8                                   # tiny space -> many duplicates
+    batches = synthesize_churn_stream(n, 10, 25, seed=seed,
+                                      delete_frac=0.5, readd_frac=0.5)
+    g = DynamicGraph(n, 4096)
+    g._index = LiveEdgeIndex(capacity=8)    # stress probing + rehashing
+    ref = LoopDynamicGraph(n, 4096)
+    for b in batches:
+        g.apply(b)
+        ref.apply(b)
+        np.testing.assert_array_equal(g.snapshot_mask(b.version),
+                                      ref.snapshot_mask(b.version))
+    np.testing.assert_array_equal(g.created[:g.n_edges],
+                                  ref.created[:ref.n_edges])
+    np.testing.assert_array_equal(g.deleted[:g.n_edges],
+                                  ref.deleted[:ref.n_edges])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.booleans(),
+                              st.integers(0, 5), st.integers(0, 5)),
+                    min_size=1, max_size=60),
+           st.integers(0, 3))
+    def test_property_store_matches_oracle(ops, group):
+        """Random add/delete streams over a 6x6 key space (maximum
+        duplication) applied in groups-of-N batches: masks byte-identical
+        to the loop oracle at every version."""
+        per_batch = group + 1
+        g = DynamicGraph(6, 4096)
+        g._index = LiveEdgeIndex(capacity=8)
+        ref = LoopDynamicGraph(6, 4096)
+        for e in range(0, len(ops), per_batch):
+            chunk = ops[e:e + per_batch]
+            adds = [(s, d) for is_add, s, d in chunk if is_add]
+            dels = [(s, d) for is_add, s, d in chunk if not is_add]
+            b = MutationBatch(
+                Version(e, 0),
+                add_src=np.array([a[0] for a in adds], np.int32),
+                add_dst=np.array([a[1] for a in adds], np.int32),
+                del_src=np.array([d[0] for d in dels], np.int32),
+                del_dst=np.array([d[1] for d in dels], np.int32))
+            g.apply(b)
+            ref.apply(b)
+            np.testing.assert_array_equal(g.snapshot_mask(b.version),
+                                          ref.snapshot_mask(b.version))

@@ -65,20 +65,14 @@ def _oracle_view(ref: LoopDynamicGraph, version: Version):
 
 
 # ------------------------------------------------- split/oracle equivalence
-@pytest.mark.parametrize("n_shards", [2, 4])
-@pytest.mark.parametrize("delete_frac,readd_frac", [
-    (0.0, 0.0),     # add-heavy
-    (0.35, 0.4),    # churny: deletes + re-adds cross the migrated range
-])
-def test_midstream_split_matches_oracle(n_shards, delete_frac, readd_frac):
-    """Byte-identical stitched CSRs at EVERY version across two mid-stream
-    splits — including pre-cutover snapshots re-queried afterwards, whose
-    rows must keep resolving from the migration-tombstoned source rows."""
+def _run_midstream_split(n_shards, delete_frac, readd_frac,
+                         parallel_apply=0):
     n, epochs, adds = 48, 8, 60
     batches = synthesize_churn_stream(n, epochs, adds, seed=17,
                                       delete_frac=delete_frac,
                                       readd_frac=readd_frac)
-    sg = ShardedDynamicGraph(n_shards, n, 8192)
+    sg = ShardedDynamicGraph(n_shards, n, 8192,
+                             parallel_apply=parallel_apply)
     ref = LoopDynamicGraph(n, 8192)
     for e, b in enumerate(batches):
         sg.apply(b)
@@ -93,6 +87,29 @@ def test_midstream_split_matches_oracle(n_shards, delete_frac, readd_frac):
         _assert_stitched_equal(sg, ref, Version(e, 0))
     np.testing.assert_array_equal(sg.v_created, ref.v_created)
     np.testing.assert_array_equal(sg.v_type, ref.v_type)
+    sg.shutdown()
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("delete_frac,readd_frac", [
+    (0.0, 0.0),     # add-heavy
+    (0.35, 0.4),    # churny: deletes + re-adds cross the migrated range
+])
+def test_midstream_split_matches_oracle(n_shards, delete_frac, readd_frac):
+    """Byte-identical stitched CSRs at EVERY version across two mid-stream
+    splits — including pre-cutover snapshots re-queried afterwards, whose
+    rows must keep resolving from the migration-tombstoned source rows."""
+    _run_midstream_split(n_shards, delete_frac, readd_frac)
+
+
+@pytest.mark.threaded
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_midstream_split_matches_oracle_parallel(n_shards):
+    """The re-sharding cutover with the parallel apply plane enabled: the
+    migration slices and the cutover-version user batch apply inside
+    concurrently-running shard seals and every snapshot must still stitch
+    byte-identically (the acceptance bar for threaded equivalence)."""
+    _run_midstream_split(n_shards, 0.35, 0.4, parallel_apply=n_shards)
 
 
 @pytest.mark.parametrize("n_shards", [2, 4])
@@ -285,6 +302,40 @@ def test_split_drops_retired_plan_cache_entries():
         _assert_stitched_equal(sg, ref, Version(e, 0))
     # the rank warm-start chain crossed the cutover (no cold restart)
     assert engine.rank_cold_starts == 1
+
+
+def test_gc_after_split_unpins_shard_batch_logs():
+    """Regression: re-sharding GC must bound the involved shards' batch
+    logs at the retired floor even while no post-cutover view is cached
+    yet (a stalled serving path) — previously the retired views pinned
+    each shard's log via its min cached view, so the log grew with the
+    stream. Views stay byte-identical throughout."""
+    batches = synthesize_skewed_stream(40, 6, 60, seed=9, delete_frac=0.2)
+    sg = ShardedDynamicGraph(2, 40, 8192)
+    ref = LoopDynamicGraph(40, 8192)
+    for b in batches[:4]:
+        sg.apply(b)
+        ref.apply(b)
+        sg.shard_views(b.version)          # per-shard ladders + logs
+    summary = sg.split_shard(int(np.argmax(sg.shard_edge_counts())))
+    sg.apply(batches[4])                   # seals the cutover epoch
+    ref.apply(batches[4])
+    floor = sg.plan_floor()
+    # no post-cutover views cached yet: retired views keep serving, but
+    # the involved shards' logs must still drop below the retired floor
+    sg.gc_views(keep_latest=8)
+    for i in (summary["source"], summary["target"]):
+        shard = sg.shards[i]
+        assert all(r.version >= floor for r in shard._batch_log), \
+            f"shard {i} log pinned below the retired floor"
+        assert shard._log_floor >= floor - 1
+    # the uninvolved shard's ladder/log keep their pre-split reach
+    other = next(i for i in range(2) if i != summary["source"])
+    assert any(k < floor for k in sg.shards[other]._views)
+    sg.apply(batches[5])
+    ref.apply(batches[5])
+    for e in range(6):
+        _assert_stitched_equal(sg, ref, Version(e, 0))
 
 
 def test_gc_floor_is_per_shard_not_global():

@@ -31,18 +31,13 @@ def _assert_stitched_equal(sg: ShardedDynamicGraph, ref: LoopDynamicGraph,
     np.testing.assert_array_equal(view.np_in_deg, in_deg)
 
 
-@pytest.mark.parametrize("n_shards", [1, 2, 4])
-@pytest.mark.parametrize("delete_frac,readd_frac", [
-    (0.0, 0.0),     # add-heavy
-    (0.4, 0.0),     # delete-heavy
-    (0.3, 0.5),     # re-add-after-delete
-])
-def test_sharded_matches_loop_reference(n_shards, delete_frac, readd_frac):
+def _run_equivalence(n_shards, delete_frac, readd_frac, parallel_apply=0):
     n, epochs, adds = 40, 6, 50
     batches = synthesize_churn_stream(n, epochs, adds, seed=11,
                                       delete_frac=delete_frac,
                                       readd_frac=readd_frac)
-    sg = ShardedDynamicGraph(n_shards, n, 4096)
+    sg = ShardedDynamicGraph(n_shards, n, 4096,
+                             parallel_apply=parallel_apply)
     ref = LoopDynamicGraph(n, 4096)
     for b in batches:
         sg.apply(b)
@@ -52,6 +47,56 @@ def test_sharded_matches_loop_reference(n_shards, delete_frac, readd_frac):
     np.testing.assert_array_equal(sg.v_created, ref.v_created)
     assert sg.n_vertices == ref.n_vertices
     assert sg.n_edges == ref.n_edges
+    sg.shutdown()
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("delete_frac,readd_frac", [
+    (0.0, 0.0),     # add-heavy
+    (0.4, 0.0),     # delete-heavy
+    (0.3, 0.5),     # re-add-after-delete
+])
+def test_sharded_matches_loop_reference(n_shards, delete_frac, readd_frac):
+    _run_equivalence(n_shards, delete_frac, readd_frac)
+
+
+@pytest.mark.threaded
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("delete_frac,readd_frac", [
+    (0.0, 0.0),
+    (0.4, 0.0),
+    (0.3, 0.5),
+])
+def test_sharded_matches_loop_reference_parallel(n_shards, delete_frac,
+                                                 readd_frac):
+    """The same equivalence suite with per-shard applies running on the
+    parallel apply plane (thread pool): stitched views, vertex tables and
+    row counts must stay byte-identical — shard state is disjoint per
+    worker, so any divergence here means the threading model leaked."""
+    _run_equivalence(n_shards, delete_frac, readd_frac,
+                     parallel_apply=n_shards)
+
+
+@pytest.mark.threaded
+def test_parallel_seal_capacity_error_leaves_epoch_pending():
+    """A shard hitting capacity on the parallel plane must fail the seal
+    exactly like the serial plane: error propagated to the caller, the
+    failing shard's epoch pending and re-sealable, the frontier held."""
+    sg = ShardedDynamicGraph(2, 8, 2, parallel_apply=2)
+    sg.apply(MutationBatch(Version(0, 0),
+                           add_src=np.array([0, 0], np.int32),
+                           add_dst=np.array([1, 3], np.int32)))
+    with pytest.raises(MemoryError):
+        sg.apply(MutationBatch(Version(1, 0),
+                               add_src=np.array([0, 0], np.int32),
+                               add_dst=np.array([5, 7], np.int32)))
+    assert sg.shards[1].n_edges == 2          # overflow applied nothing
+    assert sg.nodes[1].local_frontier == 0    # seal did not commit
+    assert 1 in sg.nodes[1].pending_payloads  # mutations retained
+    assert sg.coordinator.global_frontier == 0
+    with pytest.raises(MemoryError):
+        sg.seal_epoch(1)                      # re-seal reproduces the error
+    sg.shutdown()
 
 
 def test_sharded_typed_vertices_match_reference():
@@ -293,6 +338,24 @@ def test_padded_vertex_types_sharded_matches_reference():
     np.testing.assert_array_equal(sg.v_created, ref.v_created)
     np.testing.assert_array_equal(sg.v_type, ref.v_type)
     assert sg.v_type[:4].tolist() == [2, 1, 0, 0]
+
+
+def test_passthrough_overflow_rejected_before_bookkeeping():
+    """Regression: the single-shard passthrough must apply the stamp
+    overflow check BEFORE version bookkeeping, like the other ingest
+    paths — otherwise the bad version is recorded, the seal wedges on
+    pack32 overflow, and no corrected batch can ever retry."""
+    sg = ShardedDynamicGraph(1, 8, 64)
+    with pytest.raises(ValueError, match="int32 data-plane packing"):
+        sg.ingest(MutationBatch(Version(1 << 12, 0),
+                                add_src=np.array([0], np.int32),
+                                add_dst=np.array([1], np.int32)))
+    assert sg._ingested_packed == []          # nothing recorded
+    sg.ingest(MutationBatch(Version(0, 0),
+                            add_src=np.array([0], np.int32),
+                            add_dst=np.array([1], np.int32)))
+    sg.seal_epoch(0)
+    assert sg.latest_sealed() == Version(0, 0)
 
 
 def test_decode_payloads_interleaved_replay_is_order_robust():
