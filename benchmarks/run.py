@@ -523,7 +523,7 @@ def bench_resharding(quick=False):
                 events.append(ev)
             cur = list(sg.shard_apply_seconds)
             prev += [0.0] * (len(cur) - len(prev))
-            deltas = [c - p for c, p in zip(cur, prev)]
+            deltas = [c - p for c, p in zip(cur, prev, strict=True)]
             prev = cur
             # modeled parallel critical path for this epoch: serial
             # routing/dispatch + the slowest shard's apply

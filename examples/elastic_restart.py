@@ -33,8 +33,10 @@ def main():
         new_mesh = jax.make_mesh((1, 1), ("data", "model"))
         state2 = elastic_restart(cfg, mgr, state, new_mesh)
         assert 0 < int(state2["step"]) <= 25
+        mesh_shape = dict(
+            zip(new_mesh.axis_names, new_mesh.devices.shape, strict=True))
         print(f"  restored at step {int(state2['step'])}, resharded to "
-              f"mesh {dict(zip(new_mesh.axis_names, new_mesh.devices.shape))}")
+              f"mesh {mesh_shape}")
 
         print("phase 3: resume training on the new mesh")
         step_fn = jax.jit(make_train_step(cfg))

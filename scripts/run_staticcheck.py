@@ -1,0 +1,73 @@
+"""reprolint CLI: run the invariant checkers over the tree.
+
+    PYTHONPATH=src python scripts/run_staticcheck.py            # report
+    PYTHONPATH=src python scripts/run_staticcheck.py --gate     # CI gate
+    PYTHONPATH=src python scripts/run_staticcheck.py --json
+    PYTHONPATH=src python scripts/run_staticcheck.py src/repro/graph
+
+Default targets are ``src/repro``, ``scripts``, ``benchmarks`` and
+``examples``; ``tests/`` is skipped (test bodies poke internals on
+purpose) and the known-violation fixture corpus is never gated. The
+committed baseline (``scripts/staticcheck_baseline.json``) maps
+``"RULE:path"`` to an allowed finding count; ``--gate`` exits non-zero
+only for findings beyond it — a clean tree keeps the baseline empty.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import staticcheck  # noqa: E402
+
+DEFAULT_TARGETS = ["src/repro", "scripts", "benchmarks", "examples"]
+EXCLUDE_PARTS = ("tests", "staticcheck_fixtures", "__pycache__")
+BASELINE = ROOT / "scripts" / "staticcheck_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories (default: the repo tree)")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 on findings beyond the baseline")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--baseline", type=pathlib.Path, default=BASELINE,
+                    help=f"baseline file (default {BASELINE})")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, summary in sorted(staticcheck.RULES.items()):
+            print(f"{rule}  {summary}")
+        return 0
+
+    targets = [pathlib.Path(p) for p in args.paths] if args.paths else \
+        [ROOT / t for t in DEFAULT_TARGETS if (ROOT / t).exists()]
+    findings = staticcheck.check_paths(targets, ROOT,
+                                       exclude_parts=EXCLUDE_PARTS)
+    baseline = staticcheck.load_baseline(args.baseline)
+    new, _used = staticcheck.gate(findings, baseline)
+
+    if args.as_json:
+        print(staticcheck.to_json(new if args.gate else findings))
+    else:
+        shown = new if args.gate else findings
+        for f in shown:
+            print(f.format())
+        absorbed = len(findings) - len(new)
+        tail = f" ({absorbed} baselined)" if absorbed else ""
+        print(f"reprolint: {len(shown)} finding(s) "
+              f"across {len(staticcheck.RULES)} rules{tail}")
+    if args.gate and new:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

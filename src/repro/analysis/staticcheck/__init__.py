@@ -1,0 +1,20 @@
+"""reprolint: invariant-aware static analysis for this repo.
+
+Importing this package registers all four checker families (lock
+discipline RL0xx, jit trace-stability TS0xx, int32 stamp hygiene SH0xx,
+seal-plane disjointness SP0xx) with the core registry; ``RULES`` and
+``check_source``/``check_paths`` are then ready to use. The CLI lives in
+``scripts/run_staticcheck.py``.
+"""
+from repro.analysis.staticcheck import (lockcheck, sealcheck,  # noqa: F401
+                                        stampcheck, tracecheck)
+from repro.analysis.staticcheck.core import (CHECKERS, RULES, Finding,
+                                             check_file, check_paths,
+                                             check_source, gate,
+                                             load_baseline, to_json)
+
+__all__ = [
+    "CHECKERS", "RULES", "Finding", "check_file", "check_paths",
+    "check_source", "gate", "load_baseline", "to_json",
+    "lockcheck", "tracecheck", "stampcheck", "sealcheck",
+]

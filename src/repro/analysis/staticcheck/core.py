@@ -1,0 +1,208 @@
+"""reprolint core: rule registry, suppressions, baselines, gating.
+
+The checker families (``lockcheck``, ``tracecheck``, ``stampcheck``,
+``sealcheck``) register *rules* (an id like ``RL001`` plus a one-line
+summary) and *checkers* (callables that take a parsed module and yield
+:class:`Finding`s). This module owns everything family-agnostic:
+
+* the registries and the ``register_rule`` / ``register_checker`` hooks,
+* per-line suppressions — ``# reprolint: disable=RL001`` (or
+  ``disable=all``) on the flagged line silences it, and
+  ``# reprolint: disable-file=RL001`` anywhere silences the whole file,
+* path scoping — each checker declares the directory names it applies to
+  (the lock checker runs everywhere; trace-stability only makes sense
+  where jitted code lives). Files under a ``staticcheck_fixtures``
+  directory bypass scoping so the fixture corpus exercises every rule,
+* output (human one-line-per-finding, ``--json``) and the committed
+  baseline: a ``{"RULE:path": count}`` map of deliberately-kept findings;
+  :func:`gate` fails only on findings *beyond* the baseline allowance.
+
+Checkers are pure AST analyses — nothing is imported or executed, so the
+suite runs on any tree (including the known-violation fixtures) without
+needing its dependencies.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Callable, Iterable, Optional
+
+# rule id -> one-line summary (what the rule enforces)
+RULES: dict[str, str] = {}
+# checker callables, each with a `.scope` attribute (dir-name frozenset or
+# None for everywhere) attached by register_checker
+CHECKERS: list[Callable] = []
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Za-z0-9_,\s]+)")
+_SUPPRESS_FILE_RE = re.compile(
+    r"#\s*reprolint:\s*disable-file=([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a source location."""
+    path: str            # repo-relative, '/'-separated
+    line: int            # 1-indexed
+    col: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a checker gets about one file."""
+    path: pathlib.Path
+    rel: str
+    source: str
+    tree: ast.Module
+
+    def finding(self, node: ast.AST, rule: str, message: str) -> Finding:
+        return Finding(self.rel, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), rule, message)
+
+
+def register_rule(rule_id: str, summary: str) -> str:
+    if rule_id in RULES:
+        raise ValueError(f"rule {rule_id} registered twice")
+    RULES[rule_id] = summary
+    return rule_id
+
+
+def register_checker(scope: Optional[Iterable[str]] = None):
+    """Decorator: register ``fn(ctx) -> Iterable[Finding]``. ``scope`` is
+    the set of path segments (directory names) the checker applies to;
+    None applies everywhere."""
+    def deco(fn):
+        fn.scope = frozenset(scope) if scope is not None else None
+        CHECKERS.append(fn)
+        return fn
+    return deco
+
+
+def checker_applies(checker: Callable, rel: str) -> bool:
+    parts = rel.replace("\\", "/").split("/")
+    if "staticcheck_fixtures" in parts:
+        return True          # the fixture corpus exercises every rule
+    return checker.scope is None or bool(checker.scope.intersection(parts))
+
+
+# ----------------------------------------------------------- suppressions
+def _suppressed_rules(line: str) -> Optional[set[str]]:
+    m = _SUPPRESS_RE.search(line)
+    if not m:
+        return None
+    return {r.strip() for r in m.group(1).split(",") if r.strip()}
+
+
+def file_suppressions(source: str) -> tuple[dict[int, set[str]], set[str]]:
+    """(per-line rule sets by 1-indexed line, whole-file rule set)."""
+    per_line: dict[int, set[str]] = {}
+    whole: set[str] = set()
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_FILE_RE.search(line)
+        if m:
+            whole |= {r.strip() for r in m.group(1).split(",") if r.strip()}
+            continue
+        rules = _suppressed_rules(line)
+        if rules:
+            per_line[i] = rules
+    return per_line, whole
+
+
+def apply_suppressions(findings: Iterable[Finding],
+                       source: str) -> list[Finding]:
+    per_line, whole = file_suppressions(source)
+    out = []
+    for f in findings:
+        if f.rule in whole or "all" in whole:
+            continue
+        rules = per_line.get(f.line, ())
+        if f.rule in rules or "all" in rules:
+            continue
+        out.append(f)
+    return out
+
+
+# ------------------------------------------------------------- file runner
+def check_source(source: str, rel: str,
+                 path: Optional[pathlib.Path] = None) -> list[Finding]:
+    """Run every in-scope checker over one source blob."""
+    tree = ast.parse(source, filename=rel)
+    ctx = FileContext(path or pathlib.Path(rel), rel, source, tree)
+    findings: list[Finding] = []
+    for checker in CHECKERS:
+        if checker_applies(checker, rel):
+            findings.extend(checker(ctx))
+    return sorted(set(apply_suppressions(findings, source)))
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path) -> list[Finding]:
+    rel = path.resolve().relative_to(root.resolve()).as_posix()
+    return check_source(path.read_text(), rel, path)
+
+
+def iter_python_files(paths: Iterable[pathlib.Path],
+                      exclude_parts: Iterable[str] = ()) -> list[pathlib.Path]:
+    exclude = set(exclude_parts)
+    out: list[pathlib.Path] = []
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+            continue
+        for f in sorted(p.rglob("*.py")):
+            if not exclude.intersection(f.parts):
+                out.append(f)
+    return out
+
+
+def check_paths(paths: Iterable[pathlib.Path], root: pathlib.Path,
+                exclude_parts: Iterable[str] = ()) -> list[Finding]:
+    findings: list[Finding] = []
+    for f in iter_python_files(paths, exclude_parts):
+        findings.extend(check_file(f, root))
+    return sorted(findings)
+
+
+# ---------------------------------------------------------------- baseline
+def baseline_key(f: Finding) -> str:
+    return f"{f.rule}:{f.path}"
+
+
+def load_baseline(path: pathlib.Path) -> dict[str, int]:
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    return {str(k): int(v) for k, v in data.get("findings", {}).items()}
+
+
+def gate(findings: list[Finding],
+         baseline: dict[str, int]) -> tuple[list[Finding], dict[str, int]]:
+    """Split findings into (new beyond baseline, per-key counts used).
+
+    A baseline entry ``"RL001:src/x.py": 2`` allows two RL001 findings in
+    that file; the third (and any finding with no entry) is *new*. Which
+    findings inside an allowed group are 'the' baselined ones is
+    irrelevant to gating, so the first N by location are absorbed.
+    """
+    used: dict[str, int] = {}
+    new: list[Finding] = []
+    for f in findings:
+        key = baseline_key(f)
+        if used.get(key, 0) < baseline.get(key, 0):
+            used[key] = used.get(key, 0) + 1
+        else:
+            new.append(f)
+    return new, used
+
+
+def to_json(findings: list[Finding]) -> str:
+    return json.dumps(
+        {"findings": [dataclasses.asdict(f) for f in findings],
+         "count": len(findings)}, indent=2)

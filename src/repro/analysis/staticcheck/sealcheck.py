@@ -1,0 +1,167 @@
+"""SP0xx — seal-plane disjointness (I6 mechanized).
+
+With ``parallel_apply > 1``, per-shard seal closures run concurrently on
+a thread pool with NO lock: correctness rests entirely on the
+architecture's disjointness argument — a plane closure may touch only
+state owned by *its* shard (``shards[shard_id]`` / ``nodes[shard_id]`` /
+``shard_apply_seconds[shard_id]``), while the serial seams (coordinator,
+ingest node, routing plan, access ledger, migration records, view cache)
+belong to the calling thread between rounds. This checker makes that
+argument mechanical:
+
+* SP001: inside a seal-plane closure — a ``def``/``lambda`` nested in a
+  function that takes a shard id (``shard_id`` / ``shard`` / ``sid``
+  parameter) — flag any write to a plain ``self`` attribute, any
+  subscript write not indexed by the shard id (or into a non-shard-owned
+  attribute), any structural mutator (``append``/``update``/...) on a
+  shard-owned container (growing ``shards`` is a cutover, never a plane
+  action), and any method call through a serial-seam attribute.
+* SP002: a closure handed directly to ``executor.submit(...)`` that
+  writes ``self`` state — the pool must receive shard-owned bound
+  methods (``n.seal_epoch``), not ad-hoc closures with coordinator
+  access.
+
+Reads are not flagged: the plane legitimately reads shared config, and
+read races are the coordinator's contract (frontier visibility), not
+this rule's.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.staticcheck.core import (FileContext, Finding,
+                                             register_checker, register_rule)
+
+SP001 = register_rule(
+    "SP001", "seal-plane closure mutates state not owned by its shard")
+SP002 = register_rule(
+    "SP002", "closure submitted to the apply pool writes shared state")
+
+SCOPE = ("graph", "core", "launch")
+
+SHARD_ID_PARAMS = frozenset({"shard_id", "shard", "sid"})
+# containers indexed by shard id; the plane owns exactly its slot
+SHARD_OWNED = frozenset({"shards", "nodes", "shard_apply_seconds"})
+# coordinator-plane state: serial seams between seal rounds
+SERIAL_SEAM = frozenset({"coordinator", "ingest_node", "plan", "route",
+                         "access_stats", "migrations", "_views", "planner"})
+MUTATORS = frozenset({"append", "extend", "insert", "pop", "popitem",
+                      "remove", "clear", "update", "add", "discard",
+                      "setdefault", "sort"})
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _plane_violations(ctx: FileContext, body: list[ast.stmt],
+                      id_names: frozenset[str], rule: str,
+                      where: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for tgt in targets:
+                attr = _self_attr(tgt)
+                if attr is not None:
+                    findings.append(ctx.finding(
+                        tgt, rule,
+                        f"{where} rebinds 'self.{attr}' — coordinator "
+                        "state is off-limits on the apply plane (I6)"))
+                    continue
+                if isinstance(tgt, ast.Subscript):
+                    attr = _self_attr(tgt.value)
+                    if attr is None:
+                        continue
+                    if attr not in SHARD_OWNED:
+                        findings.append(ctx.finding(
+                            tgt, rule,
+                            f"{where} writes 'self.{attr}[...]' which is "
+                            "not shard-owned state (I6)"))
+                    elif not (id_names & _names_in(tgt.slice)):
+                        findings.append(ctx.finding(
+                            tgt, rule,
+                            f"{where} writes 'self.{attr}[...]' at an "
+                            "index that is not the shard id — slots "
+                            "other than the closure's own are another "
+                            "thread's (I6)"))
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            if not isinstance(fn, ast.Attribute):
+                continue
+            attr = _self_attr(fn.value)
+            if attr is None:
+                continue
+            if attr in SERIAL_SEAM:
+                findings.append(ctx.finding(
+                    node, rule,
+                    f"{where} calls 'self.{attr}.{fn.attr}()' — serial-"
+                    "seam state belongs to the calling thread (I6)"))
+            elif fn.attr in MUTATORS:
+                findings.append(ctx.finding(
+                    node, rule,
+                    f"{where} structurally mutates 'self.{attr}' "
+                    f"(.{fn.attr}) — container shape changes are "
+                    "cutovers, never plane actions (I6)"))
+    return findings
+
+
+@register_checker(scope=SCOPE)
+def check_seal_plane(ctx: FileContext):
+    findings: list[Finding] = []
+    for fn in [n for n in ast.walk(ctx.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        id_names = frozenset(
+            p for p in (a.arg for a in fn.args.posonlyargs + fn.args.args)
+            if p in SHARD_ID_PARAMS)
+        if id_names:
+            # nested defs/lambdas in a shard-id factory are plane closures
+            for st in fn.body:
+                for sub in ast.walk(st):
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        findings.extend(_plane_violations(
+                            ctx, sub.body, id_names, SP001,
+                            f"seal closure '{sub.name}'"))
+                    elif isinstance(sub, ast.Lambda):
+                        findings.extend(_plane_violations(
+                            ctx, [ast.Expr(value=sub.body)], id_names,
+                            SP001, "seal lambda"))
+        # SP002: closures handed straight to executor.submit(...)
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "submit" and node.args):
+                continue
+            task = node.args[0]
+            if isinstance(task, ast.Lambda):
+                # no shard-id binding is knowable for an ad-hoc lambda, so
+                # every self write (even into shard-owned slots) flags
+                findings.extend(_plane_violations(
+                    ctx, [ast.Expr(value=task.body)], frozenset(),
+                    SP002, "submitted lambda"))
+            elif isinstance(task, ast.Name):
+                target = _local_def(fn, task.id)
+                if target is not None:
+                    findings.extend(_plane_violations(
+                        ctx, target.body, frozenset(), SP002,
+                        f"submitted closure '{target.name}'"))
+    return findings
+
+
+def _local_def(fn: ast.AST, name: str) -> Optional[ast.FunctionDef]:
+    for sub in ast.walk(fn):
+        if isinstance(sub, (ast.FunctionDef,
+                            ast.AsyncFunctionDef)) and sub.name == name:
+            return sub
+    return None

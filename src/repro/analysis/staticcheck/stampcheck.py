@@ -1,0 +1,161 @@
+"""SH0xx — int32 stamp hygiene.
+
+The data plane stores versions as int32 ``PACK_BITS`` stamps
+(``epoch << 20 | number``; ``core/versioned.py``), while the API plane
+uses 64-bit ``Version.pack()`` keys (``epoch << 32 | number``). Mixing
+the two is silent corruption: a 64-bit pack compared against an int32
+stamp column is just *wrong* (different bit layout), and an int64 array
+reaching a Pallas kernel breaks the kernels' int32 contract. The rules:
+
+* SH001: a 64-bit packed version (a ``.pack()`` result, a local tainted
+  by one, or an int literal >= 2**31) compared against or stored into a
+  stamp column (``created`` / ``deleted`` / ``v_created``). The only
+  sanctioned bridges are ``pack32_checked`` (stores — raises on
+  overflow) and ``pack32_clamped`` (queries — order-preserving clamp).
+* SH002: an int64 dtype escape into the stamp plane — ``astype``/
+  ``np.int64`` applied to a stamp column, an int64-cast value stored
+  into one, or an int64-cast argument handed to the stamp-consuming
+  kernels (``liveness_mask`` / ``snapshot_resolve``).
+* SH003: a raw ``>> 32`` unpack outside ``core/versioned.py`` — version
+  bit layout is that module's private business; everyone else goes
+  through ``Version.unpack`` / ``unpack32``. (Left shifts are not
+  flagged: ``dst << 32 | src`` edge keys and node/epoch grouping keys
+  are legitimate and structurally distinct.)
+
+Taint is one level deep and intra-function: ``v = version.pack()``
+marks ``v``; flow through containers or across calls is not chased —
+the repo convention keeps pack/compare adjacent, and fixtures pin the
+shapes that matter.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.staticcheck.core import (FileContext, Finding,
+                                             register_checker, register_rule)
+
+SH001 = register_rule(
+    "SH001", "64-bit packed version meets an int32 stamp column")
+SH002 = register_rule(
+    "SH002", "int64 dtype escape into the stamp plane")
+SH003 = register_rule(
+    "SH003", "raw '>> 32' version unpack outside core/versioned.py")
+
+SCOPE = ("graph", "core", "kernels", "launch")
+
+STAMP_ATTRS = frozenset({"created", "deleted", "v_created"})
+STAMP_KERNELS = frozenset({"liveness_mask", "snapshot_resolve"})
+_INT64_NAMES = frozenset({"int64"})
+_BIG = 1 << 31
+
+
+def _is_stamp(node: ast.AST) -> bool:
+    """``x.created`` or ``x.created[...]`` for any base ``x``."""
+    if isinstance(node, ast.Subscript):
+        return _is_stamp(node.value)
+    return isinstance(node, ast.Attribute) and node.attr in STAMP_ATTRS
+
+
+def _mentions_int64(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _INT64_NAMES:
+            return True
+        if isinstance(sub, ast.Name) and sub.id in _INT64_NAMES:
+            return True
+    return False
+
+
+def _is_pack64(node: ast.AST, tainted: set[str]) -> bool:
+    """A value that is (or came from) a 64-bit version pack."""
+    if isinstance(node, ast.Call):
+        fn = node.func
+        return isinstance(fn, ast.Attribute) and fn.attr == "pack"
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, int) and node.value >= _BIG
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.LShift):
+        return (isinstance(node.right, ast.Constant)
+                and isinstance(node.right.value, int)
+                and node.right.value >= 31)
+    return False
+
+
+def _pack64_taint(fn: ast.FunctionDef) -> set[str]:
+    tainted: set[str] = set()
+    for st in ast.walk(fn):
+        if isinstance(st, ast.Assign) and _is_pack64(st.value, tainted):
+            for tgt in st.targets:
+                if isinstance(tgt, ast.Name):
+                    tainted.add(tgt.id)
+    return tainted
+
+
+@register_checker(scope=SCOPE)
+def check_stamp_hygiene(ctx: FileContext):
+    if ctx.rel.endswith("core/versioned.py"):
+        return []    # the bit layout's owner module
+    findings: list[Finding] = []
+
+    # SH003 is position-independent: any raw >>32 in the file
+    for node in ast.walk(ctx.tree):
+        if (isinstance(node, ast.BinOp) and isinstance(node.op, ast.RShift)
+                and isinstance(node.right, ast.Constant)
+                and node.right.value == 32):
+            findings.append(ctx.finding(
+                node, SH003,
+                "raw '>> 32' unpack — use Version.unpack()/unpack32 "
+                "(bit layout belongs to core/versioned.py)"))
+
+    funcs = [n for n in ast.walk(ctx.tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in funcs:
+        tainted = _pack64_taint(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Compare):
+                sides = [node.left, *node.comparators]
+                if (any(_is_stamp(s) for s in sides)
+                        and any(_is_pack64(s, tainted) for s in sides)):
+                    findings.append(ctx.finding(
+                        node, SH001,
+                        "64-bit packed version compared against an int32 "
+                        "stamp column — use pack32_clamped()"))
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    if not _is_stamp(tgt):
+                        continue
+                    if _is_pack64(node.value, tainted):
+                        findings.append(ctx.finding(
+                            node, SH001,
+                            "64-bit packed version stored into an int32 "
+                            "stamp column — use pack32_checked()"))
+                    elif _mentions_int64(node.value):
+                        findings.append(ctx.finding(
+                            node, SH002,
+                            "int64 value stored into an int32 stamp "
+                            "column"))
+            elif isinstance(node, ast.Call):
+                fname = ""
+                if isinstance(node.func, ast.Name):
+                    fname = node.func.id
+                elif isinstance(node.func, ast.Attribute):
+                    fname = node.func.attr
+                if fname == "astype" and isinstance(node.func, ast.Attribute):
+                    if (_is_stamp(node.func.value)
+                            and any(_mentions_int64(a) for a in node.args)):
+                        findings.append(ctx.finding(
+                            node, SH002,
+                            "stamp column cast to int64 — stamps are "
+                            "int32 by contract"))
+                elif fname in STAMP_KERNELS:
+                    for a in node.args:
+                        if (_mentions_int64(a)
+                                or _is_pack64(a, tainted)):
+                            findings.append(ctx.finding(
+                                a, SH002,
+                                f"int64/64-bit-packed argument to "
+                                f"'{fname}' — the kernel's stamp "
+                                "contract is int32"))
+    return findings

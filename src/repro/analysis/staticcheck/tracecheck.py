@@ -1,0 +1,358 @@
+"""TS0xx — jit trace stability.
+
+Every ``jax.jit``-decorated function in ``graph/``, ``kernels/``,
+``launch/`` is analyzed with a simple forward taint pass: parameters not
+named in ``static_argnames`` (or positioned in ``static_argnums``) are
+*traced*; taint propagates through arithmetic, calls, subscripts and
+assignments, and is *broken* by the things that are static at trace time
+— ``.shape`` / ``.ndim`` / ``.dtype`` / ``.size`` access, ``len()``, and
+``is None`` comparisons. On that lattice:
+
+* TS001: Python ``if`` / ``while`` / ``assert`` / conditional expression
+  on a traced value — a concretization error at trace time, or worse, a
+  silent per-value retrace.
+* TS002: ``int()`` / ``float()`` / ``bool()`` / ``.item()`` /
+  ``.tolist()`` / ``np.asarray`` on a traced value (``jnp.asarray`` is
+  fine — it stays in the traced world).
+* TS003: Python ``for`` over a traced value (unrolls or fails; loop
+  bounds must come from shapes or statics).
+* TS004: a padding-width assignment (``width`` / ``*_width``) whose
+  right-hand side is not provably pow2-shaped — no ``pad_pow2`` /
+  ``next_pow2`` call, power-of-two literal, or shift. PR 3's padding
+  discipline keeps trace-cache keys pow2-quantized; an ad-hoc width
+  reintroduces per-size retraces. Checked in every function, jitted or
+  not, since widths are usually computed in the un-jitted wrapper.
+
+Nested ``def``s inside a jitted function (``fori_loop`` bodies,
+``while_loop`` conds) are analyzed too, their parameters traced — those
+are exactly the loop carries.
+
+The pass is sequential and intra-function: both branches of an ``if``
+are walked in order with accumulated taint (union, no joins), and
+comprehensions are treated as opaque/untainted. That imprecision is
+deliberate — the rule set targets the handful of shapes that actually
+break tracing, with suppressions for anything exotic.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.staticcheck.core import (FileContext, Finding,
+                                             register_checker, register_rule)
+
+TS001 = register_rule(
+    "TS001", "Python control flow on a traced value inside jit")
+TS002 = register_rule(
+    "TS002", "concretization of a traced value inside jit")
+TS003 = register_rule(
+    "TS003", "Python iteration over a traced value inside jit")
+TS004 = register_rule(
+    "TS004", "padding width not provably pow2 (trace-key discipline)")
+
+SCOPE = ("graph", "kernels", "launch")
+
+# attribute reads that yield static (trace-time) values
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size"})
+_CONCRETIZERS = frozenset({"int", "float", "bool", "complex"})
+_CONCRETIZE_METHODS = frozenset({"item", "tolist"})
+_NUMPY_NAMES = frozenset({"np", "numpy"})
+_POW2_FNS = frozenset({"pad_pow2", "next_pow2"})
+
+
+# -------------------------------------------------- jit decorator parsing
+def _dotted(node: ast.AST) -> str:
+    """'jax.jit' for Attribute chains, 'jit' for Names, '' otherwise."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    return _dotted(node) in {"jit", "jax.jit"}
+
+
+def _static_names(fn: ast.FunctionDef) -> Optional[frozenset[str]]:
+    """Static parameter names when ``fn`` is jit-decorated, else None."""
+    a = fn.args
+    positional = [arg.arg for arg in a.posonlyargs + a.args]
+    for deco in fn.decorator_list:
+        if _is_jit_ref(deco):
+            return frozenset()
+        if not isinstance(deco, ast.Call):
+            continue
+        # @jax.jit(...) or @functools.partial(jax.jit, ...)
+        is_jit_call = _is_jit_ref(deco.func)
+        is_partial = (_dotted(deco.func) in {"partial", "functools.partial"}
+                      and deco.args and _is_jit_ref(deco.args[0]))
+        if not (is_jit_call or is_partial):
+            continue
+        static: set[str] = set()
+        for kw in deco.keywords:
+            if kw.arg == "static_argnames":
+                v = kw.value
+                elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+                static |= {e.value for e in elts
+                           if isinstance(e, ast.Constant)
+                           and isinstance(e.value, str)}
+            elif kw.arg == "static_argnums":
+                v = kw.value
+                elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+                for e in elts:
+                    if (isinstance(e, ast.Constant)
+                            and isinstance(e.value, int)
+                            and e.value < len(positional)):
+                        static.add(positional[e.value])
+        return frozenset(static)
+    return None
+
+
+def _param_names(fn) -> list[str]:
+    a = fn.args
+    names = [arg.arg for arg in a.posonlyargs + a.args + a.kwonlyargs]
+    return [n for n in names if n not in ("self", "cls")]
+
+
+# ------------------------------------------------------------ taint engine
+class _TaintScan:
+    def __init__(self, ctx: FileContext, findings: list[Finding]):
+        self.ctx = ctx
+        self.findings = findings
+
+    # -- expression taint ---------------------------------------------------
+    def tainted(self, node: ast.AST, t: set[str]) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in t
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.tainted(node.value, t)
+        if isinstance(node, ast.Subscript):
+            return self.tainted(node.value, t) or self.tainted(node.slice, t)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id == "len":
+                return False
+            if isinstance(fn, ast.Name) and fn.id in _CONCRETIZERS:
+                return False     # concrete result; the call site is TS002
+            if (isinstance(fn, ast.Attribute)
+                    and fn.attr in _CONCRETIZE_METHODS):
+                return False
+            parts = ([self.tainted(a, t) for a in node.args]
+                     + [self.tainted(kw.value, t) for kw in node.keywords])
+            if isinstance(fn, ast.Attribute):
+                parts.append(self.tainted(fn.value, t))
+            return any(parts)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return (self.tainted(node.left, t)
+                    or any(self.tainted(c, t) for c in node.comparators))
+        if isinstance(node, ast.BoolOp):
+            return any(self.tainted(v, t) for v in node.values)
+        if isinstance(node, ast.BinOp):
+            return self.tainted(node.left, t) or self.tainted(node.right, t)
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted(node.operand, t)
+        if isinstance(node, ast.IfExp):
+            return (self.tainted(node.body, t)
+                    or self.tainted(node.orelse, t))
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.tainted(e, t) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.tainted(node.value, t)
+        if isinstance(node, ast.Slice):
+            return any(self.tainted(s, t)
+                       for s in (node.lower, node.upper, node.step) if s)
+        if isinstance(node, ast.NamedExpr):
+            return self.tainted(node.value, t)
+        return False   # constants, comprehensions (opaque), f-strings, ...
+
+    # -- violations inside one expression ----------------------------------
+    def scan_expr(self, node: ast.AST, t: set[str]) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.Lambda, ast.FunctionDef,
+                                ast.AsyncFunctionDef)):
+                continue   # handled as nested scopes by scan_stmts
+            if isinstance(sub, ast.IfExp) and self.tainted(sub.test, t):
+                self.findings.append(self.ctx.finding(
+                    sub, TS001, "conditional expression on a traced value"))
+            if not isinstance(sub, ast.Call):
+                continue
+            fn = sub.func
+            if (isinstance(fn, ast.Name) and fn.id in _CONCRETIZERS
+                    and any(self.tainted(a, t) for a in sub.args)):
+                self.findings.append(self.ctx.finding(
+                    sub, TS002,
+                    f"'{fn.id}()' concretizes a traced value"))
+            elif (isinstance(fn, ast.Attribute)
+                  and fn.attr in _CONCRETIZE_METHODS
+                  and self.tainted(fn.value, t)):
+                self.findings.append(self.ctx.finding(
+                    sub, TS002,
+                    f"'.{fn.attr}()' concretizes a traced value"))
+            elif (isinstance(fn, ast.Attribute)
+                  and isinstance(fn.value, ast.Name)
+                  and fn.value.id in _NUMPY_NAMES
+                  and fn.attr in {"asarray", "array"}
+                  and any(self.tainted(a, t) for a in sub.args)):
+                self.findings.append(self.ctx.finding(
+                    sub, TS002,
+                    f"'np.{fn.attr}' pulls a traced value to host "
+                    "(use jnp)"))
+
+    # -- statement walk -----------------------------------------------------
+    def assign_names(self, target: ast.AST, is_tainted: bool,
+                     t: set[str]) -> None:
+        if isinstance(target, ast.Name):
+            (t.add if is_tainted else t.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self.assign_names(e, is_tainted, t)
+        elif isinstance(target, ast.Starred):
+            self.assign_names(target.value, is_tainted, t)
+        # subscript/attribute targets: no name taint to update
+
+    def scan_stmts(self, stmts, t: set[str]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # fori_loop/while_loop bodies: params are traced carries
+                inner = set(t) | set(_param_names(st))
+                self.scan_stmts(st.body, inner)
+                continue
+            if isinstance(st, ast.Assign):
+                self.scan_expr(st.value, t)
+                self._scan_lambdas(st.value, t)
+                is_t = self.tainted(st.value, t)
+                if (len(st.targets) == 1
+                        and isinstance(st.targets[0], (ast.Tuple, ast.List))
+                        and isinstance(st.value, (ast.Tuple, ast.List))
+                        and len(st.targets[0].elts) == len(st.value.elts)):
+                    for tgt, val in zip(st.targets[0].elts, st.value.elts, strict=True):
+                        self.assign_names(tgt, self.tainted(val, t), t)
+                else:
+                    for tgt in st.targets:
+                        self.assign_names(tgt, is_t, t)
+            elif isinstance(st, ast.AugAssign):
+                self.scan_expr(st.value, t)
+                if isinstance(st.target, ast.Name):
+                    is_t = (st.target.id in t
+                            or self.tainted(st.value, t))
+                    self.assign_names(st.target, is_t, t)
+            elif isinstance(st, ast.AnnAssign):
+                if st.value is not None:
+                    self.scan_expr(st.value, t)
+                    self.assign_names(st.target,
+                                      self.tainted(st.value, t), t)
+            elif isinstance(st, ast.If):
+                self.scan_expr(st.test, t)
+                if self.tainted(st.test, t):
+                    self.findings.append(self.ctx.finding(
+                        st, TS001, "Python 'if' on a traced value"))
+                self.scan_stmts(st.body, t)
+                self.scan_stmts(st.orelse, t)
+            elif isinstance(st, ast.While):
+                self.scan_expr(st.test, t)
+                if self.tainted(st.test, t):
+                    self.findings.append(self.ctx.finding(
+                        st, TS001, "Python 'while' on a traced value"))
+                self.scan_stmts(st.body, t)
+                self.scan_stmts(st.orelse, t)
+            elif isinstance(st, ast.Assert):
+                self.scan_expr(st.test, t)
+                if self.tainted(st.test, t):
+                    self.findings.append(self.ctx.finding(
+                        st, TS001, "assert on a traced value"))
+            elif isinstance(st, ast.For):
+                self.scan_expr(st.iter, t)
+                if self.tainted(st.iter, t):
+                    self.findings.append(self.ctx.finding(
+                        st, TS003, "Python 'for' over a traced value"))
+                    self.assign_names(st.target, True, t)
+                else:
+                    self.assign_names(st.target, False, t)
+                self.scan_stmts(st.body, t)
+                self.scan_stmts(st.orelse, t)
+            elif isinstance(st, (ast.With, ast.AsyncWith)):
+                for item in st.items:
+                    self.scan_expr(item.context_expr, t)
+                self.scan_stmts(st.body, t)
+            elif isinstance(st, ast.Try):
+                self.scan_stmts(st.body, t)
+                for h in st.handlers:
+                    self.scan_stmts(h.body, t)
+                self.scan_stmts(st.orelse, t)
+                self.scan_stmts(st.finalbody, t)
+            elif isinstance(st, (ast.Return, ast.Expr)):
+                if st.value is not None:
+                    self.scan_expr(st.value, t)
+                    self._scan_lambdas(st.value, t)
+            # other statements (pass, import, raise, ...) carry no taint
+
+    def _scan_lambdas(self, expr: ast.AST, t: set[str]) -> None:
+        """Lambdas in jitted code (BlockSpec index maps) get their params
+        traced; their bodies are expression-only."""
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Lambda):
+                inner = set(t) | set(_param_names(sub))
+                self.scan_expr(sub.body, inner)
+
+
+@register_checker(scope=SCOPE)
+def check_trace_stability(ctx: FileContext):
+    findings: list[Finding] = []
+    scan = _TaintScan(ctx, findings)
+    for fn in [n for n in ast.walk(ctx.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        static = _static_names(fn)
+        if static is None:
+            continue
+        traced = {p for p in _param_names(fn) if p not in static}
+        scan.scan_stmts(fn.body, traced)
+    return findings
+
+
+@register_checker(scope=SCOPE)
+def check_pad_widths(ctx: FileContext):
+    """TS004 — runs on every function: widths are computed in wrappers."""
+    findings: list[Finding] = []
+    for st in [n for n in ast.walk(ctx.tree) if isinstance(n, ast.Assign)]:
+        for tgt in st.targets:
+            if not (isinstance(tgt, ast.Name)
+                    and (tgt.id == "width" or tgt.id.endswith("_width"))):
+                continue
+            if _pow2_ok(st.value):
+                continue
+            findings.append(ctx.finding(
+                st, TS004,
+                f"'{tgt.id}' is not provably pow2 — route through "
+                "pad_pow2() so trace-cache keys stay quantized"))
+    return findings
+
+
+def _pow2_ok(expr: ast.AST) -> bool:
+    """Structurally pow2-shaped: a pad_pow2/next_pow2 call, a pow2 int
+    literal, a left shift, a bare alias (no new decision), or min/max /
+    conditional over such expressions."""
+    if isinstance(expr, (ast.Name, ast.Attribute)):
+        return True    # alias of something already decided upstream
+    if isinstance(expr, ast.Constant):
+        return (isinstance(expr.value, int) and expr.value > 0
+                and expr.value & (expr.value - 1) == 0)
+    if isinstance(expr, ast.BinOp):
+        return isinstance(expr.op, ast.LShift)
+    if isinstance(expr, ast.Call):
+        fn = expr.func
+        name = fn.attr if isinstance(fn, ast.Attribute) \
+            else (fn.id if isinstance(fn, ast.Name) else "")
+        if name in _POW2_FNS:
+            return True
+        if name in {"min", "max"}:
+            return all(_pow2_ok(a) for a in expr.args)
+        return False
+    if isinstance(expr, ast.IfExp):
+        return _pow2_ok(expr.body) and _pow2_ok(expr.orelse)
+    return False

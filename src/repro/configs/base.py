@@ -221,22 +221,22 @@ def _load_all() -> None:
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
     """A tiny same-family config for CPU smoke tests."""
     pat = cfg.pattern
-    base = dict(
-        num_layers=max(2, len(pat)),
-        d_model=64,
-        n_heads=max(2, min(4, cfg.n_heads)),
-        n_kv_heads=max(1, min(2, cfg.n_kv_heads)),
-        head_dim=16,
-        d_ff=128 if cfg.d_ff else 0,
-        vocab_size=256,
-        n_experts=min(4, cfg.n_experts) if cfg.n_experts else 0,
-        d_ff_expert=64 if cfg.d_ff_expert else 0,
-        lru_width=64 if cfg.lru_width else 0,
-        local_window=8,
-        swa_window=8,
-        kv_chunk=16,
-        loss_chunk=64,
-        name=cfg.name + "-smoke",
-    )
+    base = {
+        "num_layers": max(2, len(pat)),
+        "d_model": 64,
+        "n_heads": max(2, min(4, cfg.n_heads)),
+        "n_kv_heads": max(1, min(2, cfg.n_kv_heads)),
+        "head_dim": 16,
+        "d_ff": 128 if cfg.d_ff else 0,
+        "vocab_size": 256,
+        "n_experts": min(4, cfg.n_experts) if cfg.n_experts else 0,
+        "d_ff_expert": 64 if cfg.d_ff_expert else 0,
+        "lru_width": 64 if cfg.lru_width else 0,
+        "local_window": 8,
+        "swa_window": 8,
+        "kv_chunk": 16,
+        "loss_chunk": 64,
+        "name": cfg.name + "-smoke",
+    }
     base.update(overrides)
     return dataclasses.replace(cfg, **base)

@@ -64,7 +64,8 @@ class ReplicaManager:
 
     # -- placement ----------------------------------------------------------
     def add_item(self, item, owner: Optional[int] = None,
-                 version: Version = Version(0, 0), value: Any = None):
+                 version: Optional[Version] = None, value: Any = None):
+        version = Version(0, 0) if version is None else version
         owner = hash(item) % self.n_nodes if owner is None else owner
         self.meta[item] = ReplicaMeta(owner=owner, last_write=version)
         self.store.put(item, version, value)

@@ -266,7 +266,7 @@ class IngestNode:
             starts = np.flatnonzero(
                 np.r_[True, sorted_nodes[1:] != sorted_nodes[:-1]])
             bounds = np.r_[starts, len(order)]
-            for a, b in zip(bounds[:-1], bounds[1:]):
+            for a, b in zip(bounds[:-1], bounds[1:], strict=True):
                 self.nodes[int(sorted_nodes[a])].receive_batch(
                     epoch, keys_s[a:b],
                     payload_s[a:b] if payload_s is not None else None)
@@ -280,7 +280,7 @@ class IngestNode:
             group = node_ids[order].astype(np.int64) << 32 | epochs[order]
             starts = np.flatnonzero(np.r_[True, group[1:] != group[:-1]])
             bounds = np.r_[starts, len(order)]
-            for a, b in zip(bounds[:-1], bounds[1:]):
+            for a, b in zip(bounds[:-1], bounds[1:], strict=True):
                 rows = order[a:b]
                 epoch = int(epochs[rows[0]])
                 rows_payload = payload[rows] if payload is not None else None

@@ -165,8 +165,7 @@ def resolve_versions(item_versions, query_version):
     item_versions = jnp.asarray(item_versions)
     q = jnp.asarray(query_version, item_versions.dtype)
     # searchsorted per row: count of versions <= q, minus one
-    idx = jnp.sum(item_versions <= q, axis=-1) - 1
-    return idx
+    return jnp.sum(item_versions <= q, axis=-1) - 1
 
 
 class VersionedArray:

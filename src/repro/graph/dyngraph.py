@@ -764,7 +764,7 @@ def _churn_batches(rng, n_epochs: int, sample_adds, *, delete_frac: float,
             del_d = np.array([x[1] for x in dels], np.int32)
         else:
             del_s = del_d = np.zeros(0, np.int32)
-        live.extend(zip(adds_s, adds_d))
+        live.extend(zip(adds_s, adds_d, strict=True))
         batches.append(MutationBatch(
             Version(e, 0),
             add_src=np.array(adds_s, np.int32),
@@ -850,7 +850,7 @@ def synthesize_stream(n_vertices: int, n_epochs: int, adds_per_epoch: int,
             del_dst = np.array([d[1] for d in dels], np.int32)
         else:
             del_src = del_dst = np.zeros(0, np.int32)
-        live.extend(zip(srcs.tolist(), dsts.tolist()))
+        live.extend(zip(srcs.tolist(), dsts.tolist(), strict=True))
         # vertex type evolution: later epochs introduce new types; this
         # epoch's newly grown vertices carry the epoch's type (Fig 1)
         vtype = np.minimum(epoch * n_types // max(n_epochs, 1), n_types - 1)

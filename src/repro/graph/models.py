@@ -93,7 +93,7 @@ class PregelPartition(Vertex):
             return ()
         # emit out-edge messages from changed vertices only
         buckets: dict[int, dict] = defaultdict(dict)
-        for s, d in zip(self.out_src, self.out_dst):
+        for s, d in zip(self.out_src, self.out_dst, strict=True):
             li = s - self.lo
             if not changedtous[li]:
                 continue

@@ -119,7 +119,8 @@ class SnapshotQueryEngine:
         # prewarms/GCs the rank cache — this lock is the cache's own, so
         # cache integrity never depends on the server's coarser lock
         self._rank_lock = threading.Lock()
-        # telemetry the serving benchmark and tests read
+        # telemetry the serving benchmark and tests read — guarded by
+        # _rank_lock too: concurrent flushers race on these counters
         self.vectorized_calls = {"k_hop": 0, "reachability": 0,
                                  "degree_topk": 0, "pagerank": 0}
         self.rank_cache_hits = 0
@@ -208,7 +209,8 @@ class SnapshotQueryEngine:
         for k, idxs in khops.items():
             sources = np.asarray([queries[i].source for i in idxs], np.int32)
             reach = np.asarray(gc.batched_k_hop(view, sources, k))
-            self.vectorized_calls["k_hop"] += 1
+            with self._rank_lock:
+                self.vectorized_calls["k_hop"] += 1
             for row, i in enumerate(idxs):
                 values[i] = reach[row]
 
@@ -217,13 +219,15 @@ class SnapshotQueryEngine:
             dsts = np.asarray([queries[i].dst for i in idxs], np.int32)
             got = np.asarray(gc.batched_reachability(view, srcs, dsts,
                                                      max_hops))
-            self.vectorized_calls["reachability"] += 1
+            with self._rank_lock:
+                self.vectorized_calls["reachability"] += 1
             for row, i in enumerate(idxs):
                 values[i] = bool(got[row])
 
         for (k, direction), idxs in topks.items():
             ids, degs = gc.degree_topk(view, k, direction=direction)
-            self.vectorized_calls["degree_topk"] += 1
+            with self._rank_lock:
+                self.vectorized_calls["degree_topk"] += 1
             pair = (np.asarray(ids), np.asarray(degs))
             for i in idxs:
                 values[i] = pair

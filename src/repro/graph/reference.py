@@ -44,7 +44,7 @@ class LoopDynamicGraph:
                 and batch.version.pack() <= self.versions[-1].pack():
             raise ValueError("mutation batches must have increasing versions")
         v = pack32_checked(batch.version)
-        for vid, vt in zip(batch.add_vertices, batch.vertex_types):
+        for vid, vt in zip(batch.add_vertices, batch.vertex_types, strict=True):
             if self.v_created[vid] == MAXV:
                 self.v_created[vid] = v
                 self.v_type[vid] = vt
@@ -63,7 +63,7 @@ class LoopDynamicGraph:
                     self.v_created[vid] = v
                     self.n_vertices += 1
             self.n_edges += k
-        for s, d in zip(batch.del_src, batch.del_dst):
+        for s, d in zip(batch.del_src, batch.del_dst, strict=True):
             live = np.flatnonzero(
                 (self.src[:self.n_edges] == s) & (self.dst[:self.n_edges] == d)
                 & (self.deleted[:self.n_edges] == MAXV))
@@ -85,7 +85,7 @@ class LoopDynamicGraph:
         n = self.n_max
         buckets: list[list[int]] = [[] for _ in range(n)]
         out_deg = np.zeros(n, np.int64)
-        for s, d in zip(src.tolist(), dst.tolist()):
+        for s, d in zip(src.tolist(), dst.tolist(), strict=True):
             buckets[d].append(s)
             out_deg[s] += 1
         offsets = np.zeros(n + 1, np.int64)

@@ -683,7 +683,7 @@ class ShardedDynamicGraph:
             starts = np.flatnonzero(
                 np.r_[True, sorted_nodes[1:] != sorted_nodes[:-1]])
             bounds = np.r_[starts, len(order)]
-            for a, b in zip(bounds[:-1], bounds[1:]):
+            for a, b in zip(bounds[:-1], bounds[1:], strict=True):
                 self.nodes[int(sorted_nodes[a])].receive_batch(
                     epoch, np.broadcast_to(np.int64(0), (b - a,)),
                     payload=_ShardSlice(batch, order[a:b], n_typed, n_add))
@@ -805,7 +805,7 @@ class ShardedDynamicGraph:
         return (not self.ingest_node.blocked
                 and not self.ingest_node.blocked_batches
                 and all(n.local_frontier == f for n in self.nodes)
-                and (self._last_version >> 32) <= f
+                and Version.unpack(self._last_version).epoch <= f
                 and not any(n.pending or n.pending_batches
                             or n.pending_payloads for n in self.nodes))
 
@@ -940,7 +940,7 @@ class ShardedDynamicGraph:
             return None
         log = self._ingested_packed
         for i in range(len(log) - 1, -1, -1):
-            if (log[i] >> 32) <= frontier:
+            if Version.unpack(log[i]).epoch <= frontier:
                 # the frontier is monotone, so entries older than this hit
                 # can never be the answer again — trim them so the log is
                 # bounded by the unsealed backlog, not the stream length

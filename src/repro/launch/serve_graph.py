@@ -177,19 +177,23 @@ class GraphQueryServer:
 
     def submit(self, query: Query) -> None:
         """Enqueue a query into the current window (answered at the next
-        :meth:`flush`, all same-kind queries in one vectorized call)."""
-        self._pending.append((query, time.perf_counter()))
+        :meth:`flush`, all same-kind queries in one vectorized call).
+        Thread-safe: submitters may race each other and the flusher."""
+        with self._lock:
+            self._pending.append((query, time.perf_counter()))
 
     def flush(self) -> list[QueryResult]:
         """Answer every pending query against the newest frontier-sealed
         snapshot. Raises if nothing is globally sealed yet."""
-        pending, self._pending = self._pending, []
-        if not pending:
-            return []
         with self._lock:
+            pending, self._pending = self._pending, []
+            if not pending:
+                return []
             v = self.graph.latest_sealed()
             if v is None:
-                self._pending = pending
+                # re-queue AHEAD of anything submitted since the swap so
+                # window order is preserved (nothing was answered yet)
+                self._pending = pending + self._pending
                 raise RuntimeError(
                     "no globally sealed snapshot yet — seal an epoch on "
                     "every shard before querying")
@@ -200,20 +204,21 @@ class GraphQueryServer:
         try:
             values = self.engine.execute(view, [q for q, _ in pending])
         except BaseException:
-            self._pending = pending + self._pending
+            with self._lock:
+                self._pending = pending + self._pending
             raise
-        # access-pattern feed: bin this window's touch vertices into the
-        # re-sharding planner's ledger (no-op on custom routes) — only
-        # AFTER the window succeeded, so a failing window re-queued above
-        # cannot double-count its touches on every retry
-        with self._lock:
-            self.graph.record_query_touches(
-                query_touch_vertices([q for q, _ in pending]))
         done = time.perf_counter()
         results = [QueryResult(q, val, v, done - t0)
-                   for (q, t0), val in zip(pending, values)]
-        self.latencies_s.extend(r.latency_s for r in results)
-        self.served += len(results)
+                   for (q, t0), val in zip(pending, values, strict=True)]
+        with self._lock:
+            # access-pattern feed: bin this window's touch vertices into
+            # the re-sharding planner's ledger (no-op on custom routes) —
+            # only AFTER the window succeeded, so a failing window
+            # re-queued above cannot double-count touches on every retry
+            self.graph.record_query_touches(
+                query_touch_vertices([q for q, _ in pending]))
+            self.latencies_s.extend(r.latency_s for r in results)
+            self.served += len(results)
         return results
 
     def query(self, q: Query) -> QueryResult:
@@ -229,17 +234,19 @@ class GraphQueryServer:
         cache sizes, vectorized-call and PageRank warm-start counters,
         plus re-sharding state (shard count, active plan id, splits so
         far). Thread-safe."""
-        lat = np.asarray(self.latencies_s)
         with self._lock:
+            lat = np.asarray(self.latencies_s)
+            served = self.served
+            reshard_events = list(self.reshard_events)
             frontier = self.graph.coordinator.global_frontier
             cached_views = len(self.graph._views)
             n_shards = self.graph.n_shards
             plan = self.graph.plan
         return {
-            "served": self.served,
+            "served": served,
             "n_shards": n_shards,
             "routing_plan_id": plan.plan_id if plan is not None else None,
-            "reshard_events": list(self.reshard_events),
+            "reshard_events": reshard_events,
             "query_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
             "query_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
             "global_frontier": frontier,

@@ -32,7 +32,7 @@ class ShardingRules:
     def __init__(self, mesh, mapping):
         self.mesh = mesh
         self.mapping = dict(mapping)
-        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
 
     def spec(self, logical_axes, dims=None) -> P:
         """Resolve logical axes to a PartitionSpec, dropping non-divisible

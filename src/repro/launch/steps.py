@@ -35,7 +35,8 @@ def loss_fn(params, cfg: ModelConfig, batch):
     return loss + AUX_LOSS_WEIGHT * aux, {"ce": loss, "aux": aux}
 
 
-def make_train_step(cfg: ModelConfig, oc: OptConfig = OptConfig()):
+def make_train_step(cfg: ModelConfig, oc: OptConfig | None = None):
+    oc = OptConfig() if oc is None else oc
     mb = max(cfg.microbatches, 1)
 
     def grads_of(params, batch):

@@ -38,7 +38,7 @@ def compress_grads(grads, err_state):
     flat, treedef = jax.tree.flatten(grads)
     errs = jax.tree.leaves(err_state)
     outs, new_errs = [], []
-    for g, e in zip(flat, errs):
+    for g, e in zip(flat, errs, strict=True):
         q, scale, resid = quantize(g, e)
         outs.append(dequantize(q, scale).astype(g.dtype))
         new_errs.append(resid)

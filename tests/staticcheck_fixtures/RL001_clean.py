@@ -1,0 +1,23 @@
+"""RL001 clean twin: every guarded access holds the inferred lock."""
+import threading
+
+
+class WindowQueue:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.pending = []
+        self.count = 0
+
+    def add(self, item):
+        with self._lock:
+            self.pending.append(item)
+            self.count += 1
+
+    def drain(self):
+        with self._lock:
+            items, self.pending = self.pending, []
+        return items
+
+    def size(self):
+        with self._lock:
+            return self.count

@@ -1,0 +1,26 @@
+"""RL001 fixture: guarded attribute accessed without its lock.
+
+The class is NOT in the lockcheck registry — the guarded-by relation is
+inferred: ``pending`` and ``count`` are written under ``with self._lock``
+in ``add``, so every other access must hold the lock too.
+"""
+import threading
+
+
+class WindowQueue:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.pending = []
+        self.count = 0
+
+    def add(self, item):
+        with self._lock:
+            self.pending.append(item)
+            self.count += 1
+
+    def drain(self):
+        items, self.pending = self.pending, []   # RL001: unguarded swap
+        return items
+
+    def size(self):
+        return self.count                        # RL001: unguarded read

@@ -1,0 +1,22 @@
+"""RL002 clean twin: one global acquisition order."""
+import threading
+
+
+class TwoLocks:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._rank_lock = threading.Lock()
+        self.a = 0
+        self.b = 0
+
+    def forward(self):
+        with self._lock:
+            self.a += 1
+            with self._rank_lock:
+                self.b += 1
+
+    def also_forward(self):
+        with self._lock:
+            with self._rank_lock:
+                self.a += 1
+                self.b += 1

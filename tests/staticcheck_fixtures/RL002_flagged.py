@@ -1,0 +1,22 @@
+"""RL002 fixture: the two locks are acquired in both nesting orders."""
+import threading
+
+
+class TwoLocks:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._rank_lock = threading.Lock()
+        self.a = 0
+        self.b = 0
+
+    def forward(self):
+        with self._lock:
+            self.a += 1
+            with self._rank_lock:        # RL002: _rank_lock inside _lock...
+                self.b += 1
+
+    def backward(self):
+        with self._rank_lock:
+            self.b += 1
+            with self._lock:             # RL002: ...and _lock inside _rank_lock
+                self.a += 1

@@ -1,0 +1,20 @@
+"""RL003 clean twin: block first, lock only for the state touch."""
+import threading
+import time
+
+
+class Applier:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.done = 0
+
+    def seal(self, futures):
+        for f in futures:
+            f.result()                   # barrier outside the lock
+        with self._lock:
+            self.done += 1
+
+    def throttle(self):
+        time.sleep(0.1)
+        with self._lock:
+            self.done += 1

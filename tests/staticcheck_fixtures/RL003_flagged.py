@@ -1,0 +1,20 @@
+"""RL003 fixture: blocking calls made while holding a lock."""
+import threading
+import time
+
+
+class Applier:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.done = 0
+
+    def seal(self, futures):
+        with self._lock:
+            for f in futures:
+                f.result()               # RL003: barrier under lock
+            self.done += 1
+
+    def throttle(self):
+        with self._lock:
+            time.sleep(0.1)              # RL003: sleep under lock
+            self.done += 1

@@ -1,0 +1,25 @@
+"""SH001 clean twin: stamps cross the 64/32 boundary only through the
+sanctioned bridges (pack32_checked for stores, pack32_clamped for
+queries, the int32 MAXV sentinel for never-deleted)."""
+import numpy as np
+
+from repro.core.versioned import pack32_checked, pack32_clamped
+
+MAXV = np.iinfo(np.int32).max
+
+
+class Store:
+    def __init__(self, e_max):
+        self.created = np.zeros(e_max, np.int32)
+        self.deleted = np.zeros(e_max, np.int32)
+        self.n_edges = 0
+
+    def live_mask(self, version):
+        q = pack32_clamped(version)
+        return self.created[: self.n_edges] <= q
+
+    def mark(self, rows, version):
+        self.deleted[rows] = pack32_checked(version)
+
+    def revive(self, rows):
+        self.deleted[rows] = MAXV

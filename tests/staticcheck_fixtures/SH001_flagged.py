@@ -1,0 +1,19 @@
+"""SH001 fixture: 64-bit packed versions meeting int32 stamp columns."""
+import numpy as np
+
+
+class Store:
+    def __init__(self, e_max):
+        self.created = np.zeros(e_max, np.int32)
+        self.deleted = np.zeros(e_max, np.int32)
+        self.n_edges = 0
+
+    def live_mask(self, version):
+        v = version.pack()                       # 64-bit API key
+        return self.created[: self.n_edges] <= v     # SH001: 64-bit compare
+
+    def mark(self, rows, version):
+        self.deleted[rows] = version.pack()          # SH001: 64-bit store
+
+    def mark_sentinel(self, rows):
+        self.deleted[rows] = 1 << 62                 # SH001: huge literal

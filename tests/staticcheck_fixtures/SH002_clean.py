@@ -1,0 +1,18 @@
+"""SH002 clean twin: stamps stay int32 end to end."""
+import numpy as np
+
+
+def liveness_mask(created, deleted, q):
+    return (created <= q) & (q < deleted)
+
+
+class Store:
+    def __init__(self, e_max):
+        self.created = np.zeros(e_max, np.int32)
+        self.deleted = np.zeros(e_max, np.int32)
+
+    def poison(self, rows):
+        self.deleted[rows] = np.int32(7)
+
+    def query(self, q):
+        return liveness_mask(self.created, self.deleted, np.int32(q))

@@ -1,0 +1,22 @@
+"""SH002 fixture: int64 dtype escapes into the stamp plane."""
+import numpy as np
+
+
+def liveness_mask(created, deleted, q):
+    return (created <= q) & (q < deleted)
+
+
+class Store:
+    def __init__(self, e_max):
+        self.created = np.zeros(e_max, np.int32)
+        self.deleted = np.zeros(e_max, np.int32)
+
+    def widen(self):
+        return self.created.astype(np.int64)     # SH002: stamp cast to int64
+
+    def poison(self, rows):
+        self.deleted[rows] = np.int64(7)         # SH002: int64 store
+
+    def query(self, q):
+        return liveness_mask(self.created.astype(np.int64),   # SH002: kernel
+                             self.deleted, q)                 # arg escape

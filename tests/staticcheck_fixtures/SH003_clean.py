@@ -1,0 +1,18 @@
+"""SH003 clean twin: bit layout stays behind Version.unpack; left-shift
+key packing (edge keys, grouping keys) is legitimate and untouched."""
+import numpy as np
+
+from repro.core.versioned import Version
+
+
+def epoch_of(packed: int) -> int:
+    return Version.unpack(packed).epoch
+
+
+def is_sealed(log, frontier):
+    return [Version.unpack(v).epoch <= frontier for v in log]
+
+
+def edge_keys(src, dst):
+    # '<< 32' packing is fine — the rule only owns the unpack direction
+    return (dst.astype(np.int64) << 32) | src.astype(np.int64)

@@ -1,0 +1,9 @@
+"""SH003 fixture: raw '>> 32' version unpack outside core/versioned.py."""
+
+
+def epoch_of(packed: int) -> int:
+    return packed >> 32                      # SH003: raw unpack
+
+
+def is_sealed(log, frontier):
+    return [(v >> 32) <= frontier for v in log]   # SH003: raw unpack

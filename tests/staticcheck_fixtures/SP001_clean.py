@@ -1,0 +1,18 @@
+"""SP001 clean twin: the closure touches only its shard's slots."""
+import time
+
+
+class Sharded:
+    def __init__(self, n_shards):
+        self.shards = [object() for _ in range(n_shards)]
+        self.shard_apply_seconds = [0.0] * n_shards
+
+    def _on_seal(self, shard_id):
+        def on_seal(epoch, payloads):
+            t0 = time.perf_counter()
+            shard = self.shards[shard_id]            # read: fine
+            for p in payloads:
+                shard.apply(p)                       # shard-local mutation
+            self.shard_apply_seconds[shard_id] += (  # own slot: fine
+                time.perf_counter() - t0)
+        return on_seal

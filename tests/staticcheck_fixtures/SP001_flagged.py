@@ -1,0 +1,19 @@
+"""SP001 fixture: seal-plane closures mutating non-shard-owned state."""
+import time
+
+
+class Sharded:
+    def __init__(self, n_shards):
+        self.shards = [object() for _ in range(n_shards)]
+        self.shard_apply_seconds = [0.0] * n_shards
+        self.migrations = []
+        self.frontier = -1
+
+    def _on_seal(self, shard_id):
+        def on_seal(epoch, payloads):
+            t0 = time.perf_counter()
+            self.migrations.append(epoch)            # SP001: serial seam
+            self.frontier = epoch                    # SP001: rebinds self attr
+            self.shard_apply_seconds[0] += (         # SP001: not shard_id slot
+                time.perf_counter() - t0)
+        return on_seal

@@ -1,0 +1,18 @@
+"""SP002 clean twin: the pool receives shard-owned bound methods; the
+serial seams run on the calling thread after the barrier."""
+
+
+class Plane:
+    def __init__(self):
+        self.results = []
+        self.frontier = -1
+
+    def seal_epoch(self, pool, nodes, epoch):
+        futures = [pool.submit(n.seal_epoch, epoch) for n in nodes]
+        errors = [f.exception() for f in futures]        # barrier
+        for err in errors:
+            if err is not None:
+                raise err
+        self.frontier = epoch                # calling thread: fine
+        self.results.append(epoch)           # calling thread: fine
+        return futures

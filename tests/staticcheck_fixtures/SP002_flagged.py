@@ -1,0 +1,18 @@
+"""SP002 fixture: ad-hoc closures with shared-state writes on the pool."""
+
+
+class Plane:
+    def __init__(self):
+        self.results = []
+        self.frontier = -1
+
+    def seal_epoch(self, pool, nodes, epoch):
+        futures = [
+            pool.submit(lambda: self.results.append(epoch))   # SP002
+            for _ in nodes
+        ]
+
+        def task():
+            self.frontier = epoch                             # SP002
+        futures.append(pool.submit(task))
+        return futures

@@ -1,0 +1,22 @@
+"""TS001 clean twin: branching on statics, shapes and None only."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("negate",))
+def relu_or_neg(x, negate=False):
+    if negate:                        # static argument: fine
+        return -x
+    return jnp.where(x > 0, x, -x)    # traced select: fine
+
+
+@jax.jit
+def normalize(x, scale=None):
+    m, _ = x.shape                    # shape access breaks taint
+    if m == 0:                        # shape-derived: fine
+        return x
+    if scale is None:                 # identity test: fine
+        return x / jnp.maximum(jnp.abs(x).max(), 1e-30)
+    return x * scale

@@ -1,0 +1,23 @@
+"""TS001 fixture: Python control flow on traced values inside jit."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def relu_or_neg(x):
+    if x > 0:                    # TS001: 'if' on a tracer
+        return x
+    return -x
+
+
+@jax.jit
+def drain(x):
+    while x.sum() > 0:           # TS001: 'while' on a tracer
+        x = x - 1
+    return x
+
+
+@jax.jit
+def clamp(x):
+    assert jnp.all(x >= 0)       # TS001: assert on a tracer
+    return x

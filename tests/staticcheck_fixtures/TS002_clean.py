@@ -1,0 +1,15 @@
+"""TS002 clean twin: host conversions of statics, jnp for tracers."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def scaled(x):
+    scale = float(x.shape[0])    # shape is static: fine
+    return jnp.asarray(x, jnp.float32) / scale   # jnp stays traced: fine
+
+
+@jax.jit
+def widened(x):
+    n = int(x.ndim)              # ndim is static: fine
+    return x.reshape((1,) * n + x.shape)

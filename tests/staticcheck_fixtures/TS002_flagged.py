@@ -1,0 +1,19 @@
+"""TS002 fixture: concretizing traced values inside jit."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def to_scalar(x):
+    return float(x.sum())        # TS002: float() on a tracer
+
+
+@jax.jit
+def to_host(x):
+    y = x * 2
+    return np.asarray(y)         # TS002: np pulls the tracer to host
+
+
+@jax.jit
+def item_of(x):
+    return x.max().item()        # TS002: .item() on a tracer

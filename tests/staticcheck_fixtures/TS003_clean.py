@@ -1,0 +1,18 @@
+"""TS003 clean twin: loop bounds from shapes/statics, or lax loops."""
+import jax
+
+
+@jax.jit
+def accumulate(xs):
+    total = 0.0
+    for i in range(xs.shape[0]):     # shape-derived bound: fine
+        total = total + xs[i].sum()
+    return total
+
+
+@jax.jit
+def accumulate_scan(xs):
+    def step(acc, row):
+        return acc + row.sum(), None
+    total, _ = jax.lax.scan(step, 0.0, xs)
+    return total

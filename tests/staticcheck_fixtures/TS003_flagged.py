@@ -1,0 +1,10 @@
+"""TS003 fixture: Python iteration over a traced value inside jit."""
+import jax
+
+
+@jax.jit
+def accumulate(xs):
+    total = 0.0
+    for row in xs:               # TS003: unrolls per traced element
+        total = total + row.sum()
+    return total

@@ -1,0 +1,21 @@
+"""TS004 clean twin: widths routed through the pow2 discipline."""
+
+
+def pad_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def pad_plan(sources, pad=True):
+    raw = len(sources)
+    width = pad_pow2(raw) if pad else raw    # call / bare alias: fine
+    return width
+
+
+def pad_block(n):
+    base_width = pad_pow2(n)
+    width = min(base_width, 4096)        # min over pow2 terms: fine
+    cap_width = 1 << 12                  # shift literal: fine
+    return width, cap_width

@@ -1,0 +1,11 @@
+"""TS004 fixture: padding widths that are not provably pow2."""
+
+
+def pad_plan(sources):
+    width = len(sources) + 1             # TS004: arbitrary width
+    return width
+
+
+def pad_block(n, block):
+    pad_width = n + (-n) % block         # TS004: block-quantized, not pow2
+    return pad_width

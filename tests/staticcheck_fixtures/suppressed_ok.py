@@ -1,0 +1,21 @@
+"""Suppression fixture: every violation here carries a disable comment,
+so reprolint must report nothing for this file."""
+import threading
+
+
+def epoch_of(packed: int) -> int:
+    return packed >> 32    # reprolint: disable=SH003 — measured, documented
+
+
+class WindowQueue:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.pending = []
+
+    def add(self, item):
+        with self._lock:
+            self.pending.append(item)
+
+    def peek_len(self):
+        # racy-but-monotone diagnostic read, deliberately lock-free
+        return len(self.pending)    # reprolint: disable=RL001

@@ -75,7 +75,7 @@ def _pagerank_dense_oracle(view, damping=0.85, iters=200):
     n = view.n
     A = np.zeros((n, n))
     src, dst = np.asarray(view.src), np.asarray(view.dst)
-    for s, d in zip(src, dst):
+    for s, d in zip(src, dst, strict=True):
         A[d, s] += 1.0
     out_deg_raw = np.asarray(view.out_degree)
     out_deg = np.maximum(out_deg_raw, 1.0)
@@ -117,7 +117,7 @@ def _sssp_oracle(view, source):
     dist[source] = 0
     for _ in range(n):
         nd = dist.copy()
-        for s, d in zip(src, dst):
+        for s, d in zip(src, dst, strict=True):
             nd[d] = min(nd[d], dist[s] + 1.0)
         if np.array_equal(nd, dist, equal_nan=True):
             break
@@ -148,7 +148,7 @@ def test_wcc_matches_union_find():
             parent[x] = parent[parent[x]]
             x = parent[x]
         return x
-    for s, d in zip(np.asarray(view.src), np.asarray(view.dst)):
+    for s, d in zip(np.asarray(view.src), np.asarray(view.dst), strict=True):
         parent[find(int(s))] = find(int(d))
     for a in range(view.n):
         for b in range(a):

@@ -60,7 +60,7 @@ def test_collision_stress_tiny_table_growth_and_probing():
         ins = rng.choice(all_keys, size=40, replace=False)
         rows = rng.integers(0, 1 << 20, size=40)
         got_old = idx.push(ins, rows)
-        for k, r, o in zip(ins.tolist(), rows.tolist(), got_old.tolist()):
+        for k, r, o in zip(ins.tolist(), rows.tolist(), got_old.tolist(), strict=True):
             assert oracle.get(k, -1) == o
             oracle[k] = int(r)
         # empty a random live subset through the slot API
@@ -101,7 +101,7 @@ def test_duplicate_adds_chain_lifo_within_and_across_batches():
                           add_src=np.array([1], np.int32),
                           add_dst=np.array([2], np.int32)))
     # pop order: row 3 (newest), then 2, then 1, then 0
-    for e, expect_row in zip(range(2, 6), (3, 2, 1, 0)):
+    for e, expect_row in zip(range(2, 6), (3, 2, 1, 0), strict=True):
         g.apply(MutationBatch(Version(e, 0),
                               del_src=np.array([1], np.int32),
                               del_dst=np.array([2], np.int32)))

@@ -71,7 +71,7 @@ def test_reachability_matches_oracle(n_shards):
             got = np.asarray(gc.batched_reachability(sv, srcs, dsts,
                                                      max_hops))
             exp = [gc.reachability(ov, int(s), int(d), max_hops)
-                   for s, d in zip(srcs, dsts)]
+                   for s, d in zip(srcs, dsts, strict=True)]
             assert got.tolist() == exp
 
 

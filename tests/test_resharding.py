@@ -133,7 +133,7 @@ def test_server_answers_identical_across_cutover(n_shards):
         results = server.flush()
         v = results[0].version
         expect = oracle.execute(_oracle_view(ref, v), qs)
-        for r, exp in zip(results, expect):
+        for r, exp in zip(results, expect, strict=True):
             np.testing.assert_array_equal(np.asarray(r.value),
                                           np.asarray(exp))
         return v
@@ -419,7 +419,8 @@ def test_planner_driven_splits_on_skewed_stream():
     assert sg.n_shards == 2 + len(events)
     # cooldown: stats reset on split, so activations are >= min_epochs apart
     acts = [e["activation_epoch"] for e in events]
-    assert all(b - a >= planner.min_epochs for a, b in zip(acts, acts[1:]))
+    assert all(b - a >= planner.min_epochs
+               for a, b in zip(acts, acts[1:], strict=False))
     for e in range(epochs):
         _assert_stitched_equal(sg, ref, Version(e, 0))
 
@@ -486,7 +487,7 @@ def _check_plan_invariants(n_base, plans, keys):
         RoutingPlan.replay(n_base, final.history).assign(keys),
         final.assign(keys))
     # a split only ever moves keys OUT of the split shard
-    for prev, nxt in zip(plans, plans[1:]):
+    for prev, nxt in zip(plans, plans[1:], strict=False):
         hot, new, _act = nxt.history[-1]
         pa, na = prev.assign(keys), nxt.assign(keys)
         stay = pa != hot

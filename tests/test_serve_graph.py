@@ -8,6 +8,8 @@ version, (c) collapse same-kind query windows into one vectorized call,
 bounded under the ladder GC, and (e) keep serving while ingestion streams
 on a background thread.
 """
+import threading
+
 import numpy as np
 import pytest
 
@@ -83,7 +85,7 @@ def test_pagerank_warm_chain_matches_incremental_timeline():
     versions = [b.version for b in batches]
     timeline = gc.pagerank_timeline(g, versions, incremental=True, tol=1e-8,
                                     max_iter=300)
-    for got, exp in zip(served, timeline):
+    for got, exp in zip(served, timeline, strict=True):
         np.testing.assert_array_equal(got, np.asarray(exp.ranks))
     # every epoch after the first warm-started; queries all hit the cache
     assert server.engine.rank_cold_starts == 1
@@ -239,3 +241,84 @@ def test_ingested_version_log_stays_bounded():
         server.graph.latest_sealed()
     assert len(server.graph._ingested_packed) == 1
     assert server.graph.latest_sealed() == batches[-1].version
+
+
+# -- lock-discipline regressions (reprolint RL001 fixes) ------------------
+def test_requeue_on_unsealed_keeps_racing_submissions():
+    """flush() used to swap _pending outside the lock and restore it
+    wholesale on the no-snapshot path, clobbering queries submitted in
+    between. Interleave deterministically: submit from inside the
+    flush's own latest_sealed call (the lock is re-entrant, so this is
+    exactly a submitter that won the race)."""
+    server, _, batches = _setup()
+    server.submit(KHop(0, 1))
+    real = server.graph.latest_sealed
+
+    def racing_latest_sealed():
+        server.submit(KHop(1, 1))       # a submitter racing the flush
+        return real()
+
+    server.graph.latest_sealed = racing_latest_sealed
+    with pytest.raises(RuntimeError, match="no globally sealed"):
+        server.flush()
+    server.graph.latest_sealed = real
+    server.step(batches[0])
+    assert len(server.flush()) == 2     # neither query was lost
+
+
+def test_concurrent_submitters_and_flusher_lose_no_queries():
+    """submit()/flush() raced on _pending and the served/latency
+    counters: with concurrent submitters, a swap could drop whole
+    windows. 4 submitters x 50 queries against a live flusher must
+    serve exactly 200."""
+    server, _, batches = _setup(epochs=3)
+    server.step(batches[0])
+    errors = []
+    stop = threading.Event()
+
+    def flusher():
+        try:
+            while not stop.is_set():
+                server.flush()
+        except BaseException as e:      # pragma: no cover
+            errors.append(e)
+
+    def submitter():
+        try:
+            for _ in range(50):
+                server.submit(KHop(0, 1))
+        except BaseException as e:      # pragma: no cover
+            errors.append(e)
+
+    ft = threading.Thread(target=flusher)
+    subs = [threading.Thread(target=submitter) for _ in range(4)]
+    ft.start()
+    for t in subs:
+        t.start()
+    for t in subs:
+        t.join()
+    stop.set()
+    ft.join()
+    server.flush()                      # drain whatever the flusher missed
+    assert not errors
+    assert server.stats()["served"] == 200
+
+
+def test_stats_consistent_during_background_ingest():
+    """stats() used to read served/latencies_s/reshard_events outside
+    the lock while the background ingest thread mutates them (the
+    ISSUE's 'unguarded read of server state on the background-ingest
+    path'). Hammer stats() against a live stream: it must never throw
+    and served must be monotone."""
+    server, _, batches = _setup(epochs=6)
+    server.step(batches[0])
+    t = server.start_background_ingest(iter(batches[1:]), delay_s=0.001)
+    last = -1
+    while t.is_alive():
+        server.submit(KHop(0, 2))
+        server.flush()
+        s = server.stats()
+        assert s["served"] >= last
+        last = s["served"]
+    t.join()
+    assert server.stats()["served"] >= last

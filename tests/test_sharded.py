@@ -464,3 +464,26 @@ def test_multiple_batches_per_epoch_before_seal():
         ref.apply(b)
     for v in (Version(0, 0), Version(0, 1)):
         _assert_stitched_equal(sg, ref, v)
+
+
+def test_latest_sealed_and_quiescence_with_multi_version_epochs():
+    """Regression for the raw '>> 32' unpacks reprolint flagged (SH003):
+    epoch extraction now goes through Version.unpack. Epochs holding
+    several versions — where epoch != packed value — exercise exactly
+    that extraction in latest_sealed() and is_quiescent()."""
+    sg = ShardedDynamicGraph(2, 32, 256)
+    sg.ingest(MutationBatch(Version(0, 1), add_src=np.array([0], np.int32),
+                            add_dst=np.array([1], np.int32)))
+    sg.ingest(MutationBatch(Version(0, 5), add_src=np.array([2], np.int32),
+                            add_dst=np.array([3], np.int32)))
+    assert not sg.is_quiescent()                  # epoch 0 still unsealed
+    sg.seal_epoch(0)
+    assert sg.latest_sealed() == Version(0, 5)    # newest sealed VERSION
+    assert sg.is_quiescent()
+    sg.ingest(MutationBatch(Version(1, 2), add_src=np.array([4], np.int32),
+                            add_dst=np.array([5], np.int32)))
+    assert sg.latest_sealed() == Version(0, 5)    # epoch 1 not sealed yet
+    assert not sg.is_quiescent()
+    sg.seal_epoch(1)
+    assert sg.latest_sealed() == Version(1, 2)
+    assert sg.is_quiescent()
