@@ -7,7 +7,7 @@ baseline. "Regressed" means a ratio fell below half its baseline value:
 generous enough for noisy CI runners, tight enough to catch the
 vectorized/delta/sharded fast paths silently degrading to their fallbacks.
 
-Three checks are absolute rather than baseline-relative:
+Several checks are absolute rather than baseline-relative:
 
 * the ``resharding`` section must show splits firing and adaptive routing
   beating static dst-hash (speedup > 1.0) on the skewed stream — the
@@ -20,7 +20,12 @@ Three checks are absolute rather than baseline-relative:
   produced the fresh report had >= 4 CPUs (recorded in the report; the
   GitHub CI runners qualify). On smaller hosts the measurement is
   reported but not gated: a 2-core shared VM thrashes the pool instead
-  of overlapping it, and any threshold there gates host noise, not code.
+  of overlapping it, and any threshold there gates host noise, not code;
+* the ``serve_rpc`` serving-tier claims: epoch-pipelined reads must beat
+  the serialized single-lock discipline > 1.2x on sustained QPS and
+  > 1.2x on the median client round trip (the lock convoy holds on any
+  host — see the gate comments), with p99 no worse than 2x, >= 8
+  concurrent clients, and zero replay-oracle mismatches.
 
     python benchmarks/check_bench.py --fresh BENCH_ingest.json \
         --baseline /tmp/baseline.json
@@ -41,6 +46,9 @@ REQUIRED = {
                    "static_tail_max_shard_s", "adaptive_tail_max_shard_s"],
     "serve_graph": ["query_p50_s", "query_p95_s", "warm_pagerank_iters",
                     "cold_pagerank_iters", "warm_start_iter_reduction"],
+    "serve_rpc": ["pipelined_vs_single_lock_speedup", "p50_improvement",
+                  "p99_improvement", "n_clients", "answers_audited",
+                  "oracle_mismatches", "single_lock", "pipelined"],
 }
 SHARD_COUNTS = ("1", "2", "4")
 SHARD_METRICS = ["parallel_wall_s", "parallel_muts_per_s",
@@ -50,6 +58,22 @@ SHARD_METRICS = ["parallel_wall_s", "parallel_muts_per_s",
 # factor on runners with >= PARALLEL_GATE_CPUS cores
 PARALLEL_GATE = 1.3
 PARALLEL_GATE_CPUS = 4
+# epoch-pipelined RPC serving must beat the serialized single-lock
+# discipline. Two speedups, two gates, neither with a CPU floor: the
+# single-lock mode loses to a lock CONVOY — window pins wait out the
+# in-flight whole-epoch apply, and the lock-held fraction does not
+# shrink with core count — so both the sustained-QPS ratio (median over
+# paired repeats) and the median-round-trip improvement hold even on a
+# one-core host (measured ~1.5x each there; wider with real overlap).
+# The benchmark keeps the effect structural rather than noise by sizing
+# epochs so one apply takes at least a warm query round trip.
+RPC_PIPELINE_GATE = 1.2
+RPC_P50_GATE = 1.2
+# ...and must not blow up tail latency while doing it: pipelined p99 may
+# be at worst 2x the single-lock p99 (p99_improvement >= 1/2; the tail
+# is a handful of samples per run, so this only catches blowups)
+RPC_P99_FLOOR = 1 / 2
+RPC_MIN_CLIENTS = 8
 # (path-description, getter) pairs of scale-free ratios compared 2x
 REGRESSION_FACTOR = 2.0
 
@@ -69,6 +93,11 @@ def _ratio_metrics(report: dict) -> dict[str, float]:
         report["serve_graph"]["warm_start_iter_reduction"]
     out["resharding.adaptive_vs_static_speedup"] = \
         report["resharding"]["adaptive_vs_static_speedup"]
+    # the round-trip median improvement, not the QPS ratio: the QPS
+    # ratio is core-count-bound (the absolute core-aware gate covers it)
+    # while the convoy effect in the median holds on any host
+    out["serve_rpc.p50_improvement"] = \
+        report["serve_rpc"]["p50_improvement"]
     return out
 
 
@@ -122,6 +151,41 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
                   f"parallel gate skipped (measured x{got:.2f} vs single, "
                   f"parallel {shards['4']['parallel_wall_s']:.3f}s vs "
                   f"serial {shards['4']['wall_s']:.3f}s)")
+    # the serving-tier claim is absolute too: epoch-pipelined reads must
+    # beat the serialized single-lock discipline outright under the same
+    # concurrent-client + heavy-ingest load, without wrecking the tail,
+    # and every served answer must have matched the replay oracle
+    srv = fresh.get("serve_rpc", {})
+    if srv:
+        speedup = srv.get("pipelined_vs_single_lock_speedup")
+        if speedup is not None and speedup <= RPC_PIPELINE_GATE:
+            errors.append(
+                "serve_rpc: pipelined reads do not beat the single-lock "
+                f"baseline >{RPC_PIPELINE_GATE}x QPS (x{speedup:.2f} with "
+                f"{srv.get('n_clients')} clients)")
+        p50_imp = srv.get("p50_improvement")
+        if p50_imp is not None and p50_imp <= RPC_P50_GATE:
+            errors.append(
+                "serve_rpc: pipelining does not beat the single-lock "
+                f"median round trip >{RPC_P50_GATE}x "
+                f"(improvement x{p50_imp:.2f})")
+        p99_imp = srv.get("p99_improvement")
+        if p99_imp is not None and p99_imp < RPC_P99_FLOOR:
+            errors.append(
+                "serve_rpc: pipelining regressed p99 beyond "
+                f"{1 / RPC_P99_FLOOR:.1f}x the single-lock tail "
+                f"(improvement x{p99_imp:.2f})")
+        n_clients = srv.get("n_clients", 0)
+        if n_clients < RPC_MIN_CLIENTS:
+            errors.append(
+                f"serve_rpc: measured with {n_clients} concurrent clients "
+                f"(>= {RPC_MIN_CLIENTS} required)")
+        if srv.get("oracle_mismatches", 0) != 0:
+            errors.append(
+                f"serve_rpc: {srv['oracle_mismatches']} served answers "
+                "diverged from the replay oracle")
+        if not srv.get("answers_audited"):
+            errors.append("serve_rpc: replay oracle audited no answers")
     if "1" in shards and "speedup_vs_single" in shards.get("1", {}):
         ratio = shards["1"]["speedup_vs_single"]
         if ratio < 0.9:

@@ -667,8 +667,8 @@ def bench_serve_graph(quick=False):
     warm = server.engine.pagerank(view_last)   # cache hit: warm-chain result
     cold = gcomp.pagerank(view_last, tol=tol, max_iter=200)
     reduction = cold.iterations / max(warm.iterations, 1)
-    n_queries = stats["served"]
-    calls = sum(stats["vectorized_calls"].values())
+    n_queries = stats.served
+    calls = sum(stats.vectorized_calls.values())
     row("serve_graph.query_latency", p50,
         f"p95_us={p95*1e6:.1f};m={view_last.m};steady_windows={tail_epochs}")
     row("serve_graph.batching", 0,
@@ -686,12 +686,234 @@ def bench_serve_graph(quick=False):
         "warm_pagerank_iters": int(warm.iterations),
         "cold_pagerank_iters": int(cold.iterations),
         "warm_start_iter_reduction": reduction,
-        "rank_warm_starts": stats["rank_warm_starts"],
-        "rank_cold_starts": stats["rank_cold_starts"],
+        "rank_warm_starts": stats.rank_warm_starts,
+        "rank_cold_starts": stats.rank_cold_starts,
     }
     out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
     _merge_bench_json(out, {"serve_graph": report})
     row("serve_graph.report", 0, str(out))
+
+
+# ------------------------------------------------- online serving (§3.3 axis 1
+# over the wire: the RPC front + epoch-pipelined reads, measured)
+def bench_serve_rpc(quick=False):
+    """Concurrent RPC serving under simultaneous heavy ingest.
+
+    Eight socket clients hammer the ``launch.rpc`` front of one
+    ``GraphQueryServer`` while the ingest thread streams large churn
+    epochs, in BOTH serving disciplines: ``single_lock``
+    (``pipeline_reads=False`` — every window pins its snapshot under the
+    write lock, exactly the pre-split behavior, so queries convoy behind
+    in-flight shard applies) and ``pipelined`` (the seal-swap discipline:
+    windows answer at the published sealed epoch *e* while epoch *e+1*'s
+    applies run). Reports sustained client-observed QPS and p50/p95/p99
+    round-trip latency per mode, the pipelined-vs-single-lock speedups
+    ``check_bench.py`` gates (> 1.2x QPS and > 1.2x median round trip —
+    the convoy does not shrink with core count, so both hold even on a
+    one-core host), and a replay-oracle audit: EVERY
+    successful answer from both modes is recomputed on a single
+    non-sharded store at its served version and compared byte for byte.
+
+    Each mode's ingest window is only a few seconds, so a single sample
+    is at the mercy of OS scheduling: the QPS speedup is the MEDIAN over
+    paired repeats run in alternating order (so neither mode
+    systematically enjoys a warmer process), and the latency percentiles
+    pool every repeat's round trips.
+    PageRank is excluded from the client mix — its warm-started ranks are
+    reproducible only by replaying the whole warm chain, not by a
+    stateless oracle. Lands in ``BENCH_ingest.json`` under ``serve_rpc``.
+    """
+    import os
+    import pathlib
+    import threading
+
+    from repro.core.versioned import Version
+    from repro.graph.dyngraph import DynamicGraph, synthesize_churn_stream
+    from repro.graph.query import (DegreeTopK, KHop, Reachability,
+                                   SnapshotQueryEngine)
+    from repro.graph.sharded import ShardedDynamicGraph
+    from repro.launch.rpc import GraphRPCClient, GraphRPCServer
+    from repro.launch.serve_graph import GraphQueryServer
+
+    # "heavy ingest" is load-bearing: the convoy penalty a single-lock
+    # pin pays is the residual of the in-flight epoch apply, so epochs
+    # must be large enough that an apply takes at least a query round
+    # trip (~50ms warm) and the inter-epoch delay small enough that the
+    # write plane stays busy — tiny epochs make both disciplines measure
+    # the same (nothing to convoy behind) and the axis gates noise
+    n = 2_000 if quick else 8_000
+    epochs = 24
+    adds = 50_000 if quick else 150_000
+    ingest_delay_s = 0.002
+    n_clients = 8
+    repeats = 5 if quick else 3
+    # high churn: deletes add apply work (chain walks) while keeping the
+    # live edge set — and so per-query cost — smaller, which is what
+    # keeps the apply/query cost ratio (the convoy) large
+    batches = synthesize_churn_stream(n, epochs, adds, seed=0,
+                                      delete_frac=0.3)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+
+    def warmup(server):
+        # prime every jitted trace the client mix can hit (k-hop and
+        # reachability pad source counts to pow2: window sizes 1..8 hit
+        # the padded shapes 1/2/4/8) so the measured window is execution,
+        # not compilation — both modes get the identical warm start
+        rng = np.random.default_rng(7)
+        for sz in (8, 4, 2, 1):
+            for _ in range(sz):
+                server.submit(KHop(int(rng.integers(0, n)), k=2))
+            server.flush()
+            for _ in range(sz):
+                server.submit(Reachability(int(rng.integers(0, n)),
+                                           int(rng.integers(0, n)),
+                                           max_hops=6))
+            server.flush()
+        server.submit(DegreeTopK(8))
+        server.flush()
+
+    def run_mode(pipeline_reads: bool):
+        sg = ShardedDynamicGraph(4, n, e_max)
+        server = GraphQueryServer(sg, pipeline_reads=pipeline_reads)
+        server.step(batches[0])                 # first epoch queryable
+        warmup(server)
+        front = GraphRPCServer(server, port=0).start()
+        host, port = front.address
+        stop = threading.Event()
+        lat: list[list[float]] = [[] for _ in range(n_clients)]
+        answered: list[list] = [[] for _ in range(n_clients)]
+
+        def client(ci: int) -> None:
+            rng = np.random.default_rng(1000 + ci)
+            with GraphRPCClient(host, port) as c:
+                while not stop.is_set():
+                    roll = rng.random()
+                    if roll < 0.7:
+                        q = KHop(int(rng.integers(0, n)), k=2)
+                    elif roll < 0.9:
+                        q = Reachability(int(rng.integers(0, n)),
+                                         int(rng.integers(0, n)),
+                                         max_hops=6)
+                    else:
+                        q = DegreeTopK(8)
+                    t0 = time.perf_counter()
+                    r = c.query(q)
+                    lat[ci].append(time.perf_counter() - t0)
+                    assert r.ok, r.error
+                    answered[ci].append((q, r))
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        t0 = time.perf_counter()
+        ingest = server.start_background_ingest(iter(batches[1:]),
+                                                delay_s=ingest_delay_s)
+        for t in threads:
+            t.start()
+        ingest.join()                 # heavy ingest defines the window
+        stop.set()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        front.stop()
+        flat = np.asarray([x for per in lat for x in per])
+        s = server.stats()
+        mode = {
+            "qps": float(len(flat) / wall),
+            "queries": int(len(flat)),
+            "windows": int(s.windows),
+            "wall_s": float(wall),
+            "latencies_s": flat,     # pooled across repeats by aggregate()
+        }
+        return mode, [qr for per in answered for qr in per]
+
+    runs = {False: [], True: []}     # mode -> [(mode_dict, answers)]
+    for rep in range(repeats):
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        for pipeline_reads in order:
+            runs[pipeline_reads].append(run_mode(pipeline_reads))
+
+    def aggregate(mode_runs):
+        lats = np.concatenate([np.asarray(m["latencies_s"])
+                               for m, _ in mode_runs])
+        return {
+            "qps": float(np.median([m["qps"] for m, _ in mode_runs])),
+            "p50_s": float(np.percentile(lats, 50)),
+            "p95_s": float(np.percentile(lats, 95)),
+            "p99_s": float(np.percentile(lats, 99)),
+            "queries": int(sum(m["queries"] for m, _ in mode_runs)),
+            "windows": int(sum(m["windows"] for m, _ in mode_runs)),
+            "wall_s": float(sum(m["wall_s"] for m, _ in mode_runs)),
+            "repeats": len(mode_runs),
+        }
+
+    single = aggregate(runs[False])
+    pipe = aggregate(runs[True])
+    answers_single = [qr for _, ans in runs[False] for qr in ans]
+    answers_pipe = [qr for _, ans in runs[True] for qr in ans]
+    speedup = float(np.median(
+        [p["qps"] / s["qps"] for (s, _), (p, _)
+         in zip(runs[False], runs[True], strict=True)]))
+    # the round-trip MEDIAN is the convoy effect itself: single-lock
+    # round trips sit out the in-flight whole-epoch apply before they
+    # can pin, pipelined ones answer at the published snapshot
+    p50_improvement = single["p50_s"] / pipe["p50_s"]
+    p99_improvement = single["p99_s"] / pipe["p99_s"]
+
+    # replay oracle: ONE non-sharded store over the same stream; every
+    # answer from both modes recomputed at its served version, compared
+    # byte for byte (grouped per version so the oracle batches too)
+    g = DynamicGraph(n, e_max)
+    for b in batches:
+        g.apply(b)
+    eng = SnapshotQueryEngine()
+    by_version: dict[int, list] = {}
+    for q, r in answers_single + answers_pipe:
+        by_version.setdefault(r.version.pack(), []).append((q, r))
+    audited = 0
+    mismatches = 0
+    for packed, items in sorted(by_version.items()):
+        view = g.join_view(Version.unpack(packed))
+        vals = eng.execute(view, [q for q, _ in items])
+        for (q, r), exp in zip(items, vals, strict=True):
+            if isinstance(exp, tuple):
+                same = all(np.asarray(a).tobytes() == np.asarray(b).tobytes()
+                           for a, b in zip(r.value, exp, strict=True))
+            elif isinstance(exp, np.ndarray):
+                same = np.asarray(r.value).tobytes() == exp.tobytes()
+            else:
+                same = r.value == exp
+            audited += 1
+            mismatches += 0 if same else 1
+    assert mismatches == 0, f"{mismatches}/{audited} answers diverged"
+
+    for rep, ((s, _), (p, _)) in enumerate(
+            zip(runs[False], runs[True], strict=True)):
+        row(f"serve_rpc.rep{rep}", 0,
+            f"single_qps={s['qps']:.1f};pipelined_qps={p['qps']:.1f}")
+    row("serve_rpc.single_lock", single["p50_s"],
+        f"qps={single['qps']:.1f};p99_us={single['p99_s']*1e6:.1f}")
+    row("serve_rpc.pipelined", pipe["p50_s"],
+        f"qps={pipe['qps']:.1f};p99_us={pipe['p99_s']*1e6:.1f}")
+    row("serve_rpc.pipelining", 0,
+        f"qps_speedup=x{speedup:.2f};p50_improvement=x{p50_improvement:.2f};"
+        f"p99_improvement=x{p99_improvement:.2f};clients={n_clients}")
+    row("serve_rpc.oracle_audit", 0,
+        f"audited={audited};mismatches={mismatches}")
+    report = {
+        "n_vertices": n, "epochs": epochs, "adds_per_epoch": adds,
+        "n_clients": n_clients,
+        "cpu_count": os.cpu_count(),
+        "single_lock": single,
+        "pipelined": pipe,
+        "pipelined_vs_single_lock_speedup": speedup,
+        "p50_improvement": p50_improvement,
+        "p99_improvement": p99_improvement,
+        "answers_audited": audited,
+        "oracle_mismatches": mismatches,
+    }
+    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
+    _merge_bench_json(out, {"serve_rpc": report})
+    row("serve_rpc.report", 0, str(out))
 
 
 # ---------------------------------------------------------------- §3.3 axis 4
@@ -778,7 +1000,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: online,offline,ingest,"
                          "ingest_graph,ingest_sharded,resharding,"
-                         "serve_graph,replica,kernels,roofline")
+                         "serve_graph,serve_rpc,replica,kernels,roofline")
     args = ap.parse_args()
     benches = {
         "online": bench_online, "offline": bench_offline,
@@ -786,6 +1008,7 @@ def main() -> None:
         "ingest_sharded": bench_ingest_sharded,
         "resharding": bench_resharding,
         "serve_graph": bench_serve_graph,
+        "serve_rpc": bench_serve_rpc,
         "replica": bench_replica,
         "kernels": bench_kernels, "roofline": bench_roofline,
     }

@@ -79,8 +79,8 @@ def main():
 
     s = server.stats()
     print(f"\n{len(server.reshard_events)} splits fired; "
-          f"{s['n_shards']} shards under routing plan "
-          f"{s['routing_plan_id']}; served {s['served']} queries "
+          f"{s.n_shards} shards under routing plan "
+          f"{s.routing_plan_id}; served {s.served} queries "
           f"in {wall:.2f}s")
 
     # audit: replay on a single store; every k-hop answer and the final

@@ -87,15 +87,15 @@ def main():
                 f"divergence at {r.version} for {r.query}"
             checked += 1
     s = server.stats()
-    print(f"\nserved {s['served']} queries in {windows} windows while "
+    print(f"\nserved {s.served} queries in {windows} windows while "
           f"ingesting; {checked} k-hop answers audited byte-identical "
           "against the single store")
-    print(f"  p50={s['query_p50_s']*1e3:.2f}ms  p95={s['query_p95_s']*1e3:.2f}ms")
-    print(f"  vectorized calls: {s['vectorized_calls']}")
-    print(f"  pagerank: {s['rank_warm_starts']} warm starts / "
-          f"{s['rank_cold_starts']} cold, {s['rank_cache_hits']} cache hits")
-    print(f"  bounded caches: {s['cached_stitched_views']} stitched views, "
-          f"{s['cached_rank_versions']} rank versions")
+    print(f"  p50={s.query_p50_s*1e3:.2f}ms  p95={s.query_p95_s*1e3:.2f}ms")
+    print(f"  vectorized calls: {s.vectorized_calls}")
+    print(f"  pagerank: {s.rank_warm_starts} warm starts / "
+          f"{s.rank_cold_starts} cold, {s.rank_cache_hits} cache hits")
+    print(f"  bounded caches: {s.cached_stitched_views} stitched views, "
+          f"{s.cached_rank_versions} rank versions")
     print("\nOK — online queries served on live sharded snapshots")
 
 

@@ -6,8 +6,10 @@ Mechanizes the locking contracts written in prose in
 * RL001: a guarded attribute is read or written on a path that does not
   (lexically) hold its lock. Guarded-by relations come from two sources:
   the declarative :data:`SPEC` registry for the classes whose contracts
-  are part of the architecture (``GraphQueryServer._lock``,
-  ``SnapshotQueryEngine._rank_lock``), and inference for everything else —
+  are part of the architecture (``GraphQueryServer._ingest_lock`` /
+  ``GraphQueryServer._serve_lock`` — the serving tier's seal-swap planes —
+  ``GraphRPCServer._conn_lock``, ``SnapshotQueryEngine._rank_lock``), and
+  inference for everything else —
   any attribute *written* under ``with self.<lock>`` somewhere in a class
   is treated as guarded by that lock everywhere in the class.
 * RL002: inconsistent nested acquisition order — the same class acquires
@@ -55,13 +57,29 @@ class ClassLockSpec:
 # The architectural locking contracts. These override inference: if a
 # class name appears here, exactly these relations are enforced.
 SPEC: dict[str, ClassLockSpec] = {
-    # one re-entrant lock serializes every touch of mutable server state;
-    # query compute runs on immutable stitched views outside it
+    # the seal-swap discipline: the re-entrant write-plane lock serializes
+    # ingest/seal/re-shard state, the read-plane lock guards only the
+    # pending queue + published snapshot + serving counters. Query compute
+    # runs on immutable published views outside BOTH. The only permitted
+    # runtime nesting is _ingest_lock -> _serve_lock (the seal-time
+    # publish); nothing may acquire the write lock while holding the read
+    # lock (RL002 would flag the lexical shape of such a path).
     "GraphQueryServer": ClassLockSpec(locks={
-        "_lock": frozenset({
-            "graph", "_pending", "_seals", "served", "latencies_s",
-            "reshard_events",
+        "_ingest_lock": frozenset({
+            "graph", "_seals", "reshard_events",
         }),
+        "_serve_lock": frozenset({
+            "_pending", "_serving", "_published", "_touch_buffer",
+            "served", "windows", "shed_overload", "shed_deadline",
+            "latencies_s", "_kind_latencies",
+        }),
+    }),
+    # the RPC listener's only shared mutable state is the live-connection
+    # set (reader threads add/remove themselves; stop() snapshots it) —
+    # everything else is per-connection locals or the query server's own
+    # planes above
+    "GraphRPCServer": ClassLockSpec(locks={
+        "_conn_lock": frozenset({"_conns"}),
     }),
     # the engine's own lock guards the rank cache and telemetry counters,
     # independent of the server's coarser lock

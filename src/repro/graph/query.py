@@ -71,6 +71,89 @@ class PageRankQuery:
 
 Query = Union[KHop, Reachability, DegreeTopK, PageRankQuery]
 
+_KIND_OF = {KHop: "k_hop", Reachability: "reachability",
+            DegreeTopK: "degree_topk", PageRankQuery: "pagerank"}
+
+
+def query_kind(q) -> Optional[str]:
+    """Stable kind tag for a query (``"k_hop"`` / ``"reachability"`` /
+    ``"degree_topk"`` / ``"pagerank"``), or None for an object that is not
+    a known query type — the admission-time validity check the typed
+    request path uses instead of letting an unknown type poison a whole
+    execution window."""
+    return _KIND_OF.get(type(q))
+
+
+# ------------------------------------------------- typed request envelope
+#
+# One envelope shared VERBATIM by the in-process scheduler
+# (``launch.serve_graph.GraphQueryServer.submit_request``) and the wire
+# path (``launch.rpc`` encodes/decodes exactly these dataclasses): a
+# request names its query, an id the caller correlates the answer by, an
+# optional snapshot pin and an optional latency budget; a response is
+# either an answer (value + the sealed version it was computed at) or a
+# typed error. The legacy ``submit()``/``flush()`` surface is a thin shim
+# over this envelope.
+
+# error codes a response can carry (stable wire names)
+ERR_OVERLOADED = "overloaded"     # admission control shed the request
+ERR_DEADLINE = "deadline"         # latency budget expired before execution
+ERR_UNSEALED = "unsealed"         # no globally sealed snapshot yet
+ERR_BAD_PIN = "bad_pin"           # pinned version not sealed / not served
+ERR_BAD_QUERY = "bad_query"       # unknown query kind / malformed fields
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+    """One typed query submission.
+
+    ``request_id`` is the caller's correlation token (unique per
+    connection on the wire path; auto-assigned on the in-process
+    conveniences). ``pin_version`` pins execution to a specific *sealed*
+    snapshot instead of the newest one — a pinned replay is how the soak
+    tests prove byte-identity, and how a training run stays reproducible.
+    ``deadline_s`` is a relative latency budget from submission: a request
+    still queued when it expires is answered with an ``ERR_DEADLINE``
+    error instead of stale data."""
+    query: Query
+    request_id: Union[int, str] = 0
+    pin_version: Optional[Version] = None
+    deadline_s: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryError:
+    """Typed failure surface of a :class:`QueryResponse` (never an
+    exception string a client has to parse): ``code`` is one of the
+    ``ERR_*`` constants, ``message`` is human-readable detail."""
+    code: str
+    message: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResponse:
+    """The answer envelope: exactly one of ``value`` (with the sealed
+    ``version`` it was computed at) or ``error`` is meaningful, selected
+    by ``ok``. ``latency_s`` is submit-to-answer, server-side."""
+    request_id: Union[int, str]
+    ok: bool
+    value: object = None
+    version: Optional[Version] = None
+    latency_s: float = 0.0
+    error: Optional[QueryError] = None
+
+    @classmethod
+    def answered(cls, request_id, value, version: Version,
+                 latency_s: float) -> "QueryResponse":
+        return cls(request_id, True, value=value, version=version,
+                   latency_s=latency_s)
+
+    @classmethod
+    def failed(cls, request_id, code: str, message: str = "",
+               latency_s: float = 0.0) -> "QueryResponse":
+        return cls(request_id, False, latency_s=latency_s,
+                   error=QueryError(code, message))
+
 
 @dataclasses.dataclass
 class QueryResult:

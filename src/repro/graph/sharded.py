@@ -759,7 +759,9 @@ class ShardedDynamicGraph:
                 for node in lagging:
                     node.seal_epoch(node.local_frontier + 1)
         self.ingest_node.retry_blocked_batches()
-        return self.coordinator.advance()
+        frontier = self.coordinator.advance()
+        self._trim_ingest_log()
+        return frontier
 
     def seal_shard(self, shard_id: int, epoch: int) -> int:
         """Seal one shard through ``epoch`` (straggler-paced sealing) and
@@ -769,7 +771,9 @@ class ShardedDynamicGraph:
             self.ingest_node.retry_blocked_batches()
             node.seal_epoch(node.local_frontier + 1)
         self.ingest_node.retry_blocked_batches()
-        return self.coordinator.advance()
+        frontier = self.coordinator.advance()
+        self._trim_ingest_log()
+        return frontier
 
     def apply(self, batch: MutationBatch) -> None:
         """Ingest + seal in one step (the DynamicGraph-compatible path)."""
@@ -934,20 +938,35 @@ class ShardedDynamicGraph:
         has sealed; ``Version(frontier, 0)`` if the sealed epochs carried no
         batches (a sealed empty snapshot is queryable); ``None`` before the
         first global seal. (A re-sharding migration is not an ingested
-        version: it changes row placement, never snapshot content.)"""
+        version: it changes row placement, never snapshot content.)
+
+        Pure read: no writes, so the serving tier's read plane may call it
+        without the write lock. The ingest-log trim that used to piggyback
+        on this lookup runs at seal time (:meth:`_trim_ingest_log`)."""
         frontier = self.coordinator.global_frontier
         if frontier < 0:
             return None
         log = self._ingested_packed
         for i in range(len(log) - 1, -1, -1):
+            v = Version.unpack(log[i])
+            if v.epoch <= frontier:
+                return v
+        return Version(frontier, 0)
+
+    def _trim_ingest_log(self) -> None:
+        """Drop ingest-log entries older than the newest sealed one. The
+        frontier is monotone, so those entries can never be
+        ``latest_sealed()``'s answer again — trimming at every seal keeps
+        the log bounded by the unsealed backlog, not the stream length.
+        Runs on the write plane (seal paths) only, which is what lets
+        :meth:`latest_sealed` itself be a pure lock-free read."""
+        frontier = self.coordinator.global_frontier
+        log = self._ingested_packed
+        for i in range(len(log) - 1, -1, -1):
             if Version.unpack(log[i]).epoch <= frontier:
-                # the frontier is monotone, so entries older than this hit
-                # can never be the answer again — trim them so the log is
-                # bounded by the unsealed backlog, not the stream length
                 if i > 0:
                     del log[:i]
-                return Version.unpack(log[0])
-        return Version(frontier, 0)
+                return
 
     def on_frontier_advance(self, fn: Callable[[int], None]) -> None:
         """Subscribe ``fn(new_frontier)`` to global-seal notifications —

@@ -5,21 +5,40 @@ analytics and low-latency online queries. This is the online half wired
 end to end: a :class:`GraphQueryServer` owns a ``ShardedDynamicGraph``,
 keeps ingesting a mutation stream (cooperatively via :meth:`step`, or on a
 background thread via :meth:`start_background_ingest`), and answers
-batched queries strictly against the **newest frontier-sealed snapshot**
-(``latest_sealed()`` — the global-frontier rule; a partially-sealed epoch
-is never served). Query windows are answered by the
-``graph.query.SnapshotQueryEngine``: same-kind queries collapse into one
+typed :class:`~repro.graph.query.QueryRequest` envelopes strictly against
+**frontier-sealed snapshots** (``latest_sealed()`` — the global-frontier
+rule; a partially-sealed epoch is never served). Query windows are
+answered by the ``graph.query.SnapshotQueryEngine``: same-kind queries —
+across every submitting client, in-process or RPC — collapse into one
 vectorized jitted call, PageRank is cached per snapshot version and
 warm-started incrementally from the previous epoch's ranks, and both the
 rank cache and the view caches are GC'd with the version-spaced
 ``ladder_keep`` retention so server memory stays bounded under churn.
 
+**Epoch-pipelined reads (the seal-swap discipline).** Ingest and serving
+no longer share one lock. The write plane (``_ingest_lock``) serializes
+ingest/seal/re-shard/cache-GC; at every global seal the server stitches
+the newly sealed epoch's view and *publishes* it — an atomic pointer swap
+under the tiny read-plane lock (``_serve_lock``). Queries pin the
+published immutable view and execute entirely outside the write plane, so
+windows answer at sealed epoch *e* while epoch *e+1*'s shard applies run
+(on the ``parallel_apply`` thread pool) — instead of queuing behind the
+apply as they did when one RLock covered both planes. The only
+lock-ordering rule is ``_ingest_lock`` → ``_serve_lock`` (publish);
+nothing ever nests the other way (enforced by reprolint RL002).
+
+The network front for this server lives in ``launch/rpc.py``
+(length-prefixed wire codec, admission control, cross-client batching);
+``python -m repro.launch.serve_graph --rpc-port 0`` starts it on a
+synthetic stream.
+
 This is layer 5 (the top) of the pipeline mapped in
 ``docs/ARCHITECTURE.md``, and the serving loop is also where dynamic
-re-sharding closes its feedback loop: flushed windows feed query touches
-into the store's access ledger, and :meth:`GraphQueryServer.step` runs
-the planner tick at its entry — the between-epochs quiescent point, so a
-fired split's migration applies inside the incoming batch's seal.
+re-sharding closes its feedback loop: answered windows buffer their query
+touches on the read plane, :meth:`GraphQueryServer.step` drains them into
+the store's access ledger and runs the planner tick at its entry — the
+between-epochs quiescent point, so a fired split's migration applies
+inside the incoming batch's seal.
 
 Usage (synthetic ingest-while-query loop, CPU):
     PYTHONPATH=src python -m repro.launch.serve_graph --vertices 2000 \
@@ -29,52 +48,129 @@ from __future__ import annotations
 
 import argparse
 import collections
+import dataclasses
+import itertools
 import threading
 import time
-from typing import Iterable, Optional, Sequence
+from typing import Callable, Iterable, Mapping, Optional, Sequence
 
 import numpy as np
 
 from repro.core.versioned import Version
-from repro.graph.dyngraph import MutationBatch, synthesize_churn_stream
-from repro.graph.query import (DegreeTopK, KHop, PageRankQuery, Query,
-                               QueryResult, Reachability, SnapshotQueryEngine,
+from repro.graph.dyngraph import (JoinView, MutationBatch, prune_retired,
+                                  prune_views, synthesize_churn_stream)
+from repro.graph.query import (ERR_BAD_PIN, ERR_BAD_QUERY, ERR_DEADLINE,
+                               ERR_OVERLOADED,
+                               DegreeTopK, KHop, PageRankQuery, Query,
+                               QueryRequest, QueryResponse, QueryResult,
+                               Reachability, SnapshotQueryEngine, query_kind,
                                query_touch_vertices)
 from repro.graph.sharded import ShardedDynamicGraph
+
+QUERY_KINDS = ("k_hop", "reachability", "degree_topk", "pagerank")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerStats:
+    """Frozen serving snapshot with stable field names (the dict-shaped
+    ``stats()`` of earlier revisions is gone — benchmarks, examples and
+    the RPC ``stats`` op all read these fields).
+
+    ``queue_depth`` is the pending requests at sampling time;
+    ``shed_overload`` / ``shed_deadline`` count typed load-shed and
+    expired-budget responses; ``per_kind_latency_s`` maps each query kind
+    to its ``{"p50", "p95", "p99"}`` submit-to-answer quantiles over the
+    recent window (absent kinds were never served)."""
+    served: int
+    windows: int
+    queue_depth: int
+    shed_overload: int
+    shed_deadline: int
+    serving_version: Optional[Version]
+    global_frontier: int
+    n_shards: int
+    routing_plan_id: Optional[int]
+    reshard_events: tuple
+    query_p50_s: float
+    query_p95_s: float
+    query_p99_s: float
+    per_kind_latency_s: Mapping[str, Mapping[str, float]]
+    published_views: int
+    cached_stitched_views: int
+    cached_rank_versions: int
+    vectorized_calls: Mapping[str, int]
+    rank_cache_hits: int
+    rank_warm_starts: int
+    rank_cold_starts: int
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One queued request on the read plane: the typed envelope, its
+    submission timestamp (``perf_counter``), the absolute deadline derived
+    from ``deadline_s`` (None = no budget), and an optional completion
+    callback — RPC handlers pass one so the scheduler can push the
+    response back on the submitting connection; legacy ``submit()``
+    entries have none and are returned by ``flush()``."""
+    request: QueryRequest
+    enqueued_at: float
+    deadline_at: Optional[float] = None
+    on_done: Optional[Callable[[QueryResponse], None]] = None
+
+
+def _quantiles(lat: np.ndarray) -> tuple[float, float, float]:
+    if not lat.size:
+        return 0.0, 0.0, 0.0
+    p50, p95, p99 = (float(np.percentile(lat, q)) for q in (50, 95, 99))
+    return p50, p95, p99
 
 
 class GraphQueryServer:
     """Serves online graph queries while mutations stream into the shards.
 
-    ``view_keep`` / ``rank_keep`` bound the stitched-view and PageRank
-    caches (ladder retention); ``gc_every`` runs that GC every N sealed
-    epochs so a long-lived server tracks the frontier instead of pinning
-    every epoch it ever served. ``prewarm_pagerank`` computes ranks eagerly
-    after every :meth:`step` (warm-started from the previous epoch,
-    outside the server lock so queries are never stalled behind it),
-    keeping the warm chain unbroken even when PageRank queries are sparse.
+    ``view_keep`` / ``rank_keep`` bound the stitched-view, published-view
+    and PageRank caches (ladder retention); ``gc_every`` runs that GC
+    every N sealed epochs so a long-lived server tracks the frontier
+    instead of pinning every epoch it ever served. ``prewarm_pagerank``
+    computes ranks eagerly after every :meth:`step` (warm-started from the
+    previous epoch, outside the write lock so queries are never stalled
+    behind it), keeping the warm chain unbroken even when PageRank queries
+    are sparse.
+
+    ``max_pending`` bounds the typed request queue — the admission-control
+    half of the serving tier: :meth:`submit_request` load-sheds with an
+    immediate ``ERR_OVERLOADED`` response instead of queueing without
+    bound (the legacy ``submit()`` shim is exempt; in-process cooperative
+    callers flush their own windows). ``pipeline_reads=False`` restores
+    the pre-split discipline — every window pins its snapshot under the
+    write lock and therefore queues behind in-flight applies — and exists
+    so the serving benchmark can measure the seal-swap win against the
+    real old behavior rather than a strawman.
 
     The server is also the access-pattern feed for dynamic re-sharding
-    (``docs/ARCHITECTURE.md``): every flushed window's touch vertices are
-    binned into the graph's ``AccessStats`` ledger, and — when the graph
-    was constructed with a ``ShardPlanner`` and ``auto_reshard`` is left
-    on — :meth:`step` runs the planner tick at its ENTRY, the
-    between-epochs point where the store is guaranteed quiescent; a fired
-    split's migration then applies inside the incoming batch's seal, so a
-    stream that simply stops never strands a migration. Splits are
-    appended to :attr:`reshard_events` as they fire; after a cutover the
-    GC pass drops cache entries keyed by the retired routing plan
-    (``plan_floor``) instead of aging them through the ladder.
+    (``docs/ARCHITECTURE.md``): every answered window's touch vertices are
+    buffered on the read plane, and :meth:`step` — the write plane's
+    entry, where the store is guaranteed quiescent — drains them into the
+    graph's ``AccessStats`` ledger and (when the graph was constructed
+    with a ``ShardPlanner`` and ``auto_reshard`` is left on) runs the
+    planner tick, so a fired split's migration applies inside the incoming
+    batch's seal. Splits are appended to :attr:`reshard_events` as they
+    fire; after a cutover the GC pass drops cache entries keyed by the
+    retired routing plan (``plan_floor``) instead of aging them through
+    the ladder.
 
-    Thread-safety: one re-entrant lock serializes every touch of mutable
-    graph/engine state (ingest, seal, re-shard, cache GC, stats); query
-    execution runs on immutable stitched views outside the lock, so
-    ingestion never waits on query compute.
+    Thread-safety: ``_ingest_lock`` (re-entrant) serializes every touch of
+    mutable graph/engine state (ingest, seal, re-shard, cache GC);
+    ``_serve_lock`` guards only the read plane (pending queue, published
+    snapshot pointer, serving counters). Query execution runs on published
+    immutable views outside both locks, so ingestion never waits on query
+    compute and queries never wait on applies.
     """
 
     def __init__(self, graph: ShardedDynamicGraph, *,
                  view_keep: int = 8, rank_keep: int = 4, gc_every: int = 1,
                  prewarm_pagerank: bool = False, auto_reshard: bool = True,
+                 max_pending: int = 1024, pipeline_reads: bool = True,
                  **pagerank_kw):
         self.graph = graph
         self.engine = SnapshotQueryEngine(**pagerank_kw)
@@ -83,17 +179,32 @@ class GraphQueryServer:
         self.gc_every = max(1, gc_every)
         self.prewarm_pagerank = prewarm_pagerank
         self.auto_reshard = auto_reshard
+        self.max_pending = max_pending
+        self.pipeline_reads = pipeline_reads
         self.reshard_events: list[dict] = []
-        # one lock serializes every touch of the mutable graph state; query
-        # execution on an (immutable) stitched view runs outside it
-        self._lock = threading.RLock()
-        self._pending: list[tuple[Query, float]] = []
+        # write plane: every touch of mutable graph/engine state
+        self._ingest_lock = threading.RLock()
+        # read plane: pending queue + published snapshot + serving counters
+        self._serve_lock = threading.Lock()
+        self._pending: list[_Entry] = []
+        self._serving: Optional[tuple[Version, JoinView]] = None
+        self._published: dict[int, JoinView] = {}
+        self._touch_buffer: list[np.ndarray] = []
         self._seals = 0
+        self.windows = 0
+        self.shed_overload = 0
+        self.shed_deadline = 0
         # bounded: stats() percentiles are over the most recent window, and
         # a long-lived server does not accumulate per-query floats forever
         self.latencies_s: collections.deque[float] = \
             collections.deque(maxlen=8192)
+        self._kind_latencies: dict[str, collections.deque] = {
+            k: collections.deque(maxlen=2048) for k in QUERY_KINDS}
         self.served = 0
+        self._auto_ids = itertools.count(1)
+        # dispatcher wake signal: set whenever a request lands in the
+        # queue; the RPC tier's window loop waits on it instead of polling
+        self.work_available = threading.Event()
         self.ingest_thread: Optional[threading.Thread] = None
         graph.on_frontier_advance(self._on_seal)
 
@@ -101,29 +212,65 @@ class GraphQueryServer:
     def _on_seal(self, frontier: int) -> None:
         # fires inside seal_epoch/seal_shard; re-entrant lock covers the
         # case of a caller sealing the graph directly, outside step()
-        with self._lock:
+        with self._ingest_lock:
             self._seals += 1
+            # publish BEFORE the GC pass: the stitch inserts the new
+            # version into the view cache, and pruning after keeps the
+            # cache at its bound the moment the seal returns (the ladder
+            # always retains the newest entry — the serving snapshot)
+            if self.pipeline_reads:
+                self._publish()
             if self._seals % self.gc_every == 0:
                 self.graph.gc_views(self.view_keep)
                 self.engine.gc(self.rank_keep,
                                retire_below=self.graph.plan_floor())
 
+    def _publish(self) -> None:
+        """Seal-swap: stitch the newest sealed epoch's view on the write
+        plane and swap it into the read plane's published pointer. The
+        stitch (O(delta), cached per version) is paid once per seal by the
+        ingest side so no query ever stitches — or waits for the write
+        lock — on its hot path."""
+        with self._ingest_lock:
+            v = self.graph.latest_sealed()
+            if v is None:
+                return
+            view = self.graph.join_view(v)
+            floor = self.graph.plan_floor()
+        with self._serve_lock:
+            self._serving = (v, view)
+            self._published[v.pack()] = view
+            # same ladder retention as the graph-side caches, and retired
+            # routing plans drop outright — but never the serving entry
+            prune_retired(self._published, floor)
+            prune_views(self._published, self.view_keep)
+
+    def _drain_touches(self) -> None:
+        """Move buffered query touches from the read plane into the
+        graph's access ledger — called at step() entry, where the write
+        lock is held and the store is quiescent."""
+        with self._serve_lock:
+            buffered, self._touch_buffer = self._touch_buffer, []
+        with self._ingest_lock:
+            for ids in buffered:
+                self.graph.record_query_touches(ids)
+
     def _maybe_prewarm(self) -> None:
         if not self.prewarm_pagerank:
             return
-        with self._lock:
+        with self._ingest_lock:
             v = self.graph.latest_sealed()
             if v is None:
                 return
             view = self.graph.join_view(v)   # O(delta) stitch under lock
         # the PageRank iteration — the heaviest compute here — runs outside
-        # the server lock (the engine's own cache lock suffices), so the
+        # the write lock (the engine's own cache lock suffices), so the
         # query side is never stalled behind a prewarm
         self.engine.pagerank(view)
         # the prewarm inserted the newest view/ranks AFTER the seal-time GC
         # pass; re-prune so the cache bounds hold after every step (the
         # ladder always retains the newest entry, so nothing useful drops)
-        with self._lock:
+        with self._ingest_lock:
             self.graph.gc_views(self.view_keep)
             floor = self.graph.plan_floor()
         self.engine.gc(self.rank_keep, retire_below=floor)
@@ -134,15 +281,17 @@ class GraphQueryServer:
         ``prewarm_pagerank`` the epoch's ranks are warmed here, after the
         seal releases the lock.
 
-        With ``auto_reshard`` (and a planner on the graph) this is also
-        the planner tick. It runs at step ENTRY — between epochs the
-        store is quiescent, the only state a re-sharding cutover may
-        activate from — so a split's migration always applies inside THIS
-        batch's seal (the cutover epoch is the one about to be ingested),
-        and a stream that simply stops can never strand a dispatched
-        migration in a never-sealed epoch. Splits are recorded in
-        :attr:`reshard_events`."""
-        with self._lock:
+        This is also where the read plane feeds back into the write plane:
+        buffered query touches drain into the access ledger, and with
+        ``auto_reshard`` (and a planner on the graph) the planner tick
+        runs at step ENTRY — between epochs the store is quiescent, the
+        only state a re-sharding cutover may activate from — so a split's
+        migration always applies inside THIS batch's seal (the cutover
+        epoch is the one about to be ingested), and a stream that simply
+        stops can never strand a dispatched migration in a never-sealed
+        epoch. Splits are recorded in :attr:`reshard_events`."""
+        self._drain_touches()
+        with self._ingest_lock:
             if self.auto_reshard:
                 event = self.graph.maybe_reshard()
                 if event is not None:
@@ -155,8 +304,8 @@ class GraphQueryServer:
                                 delay_s: float = 0.0) -> threading.Thread:
         """Drive :meth:`step` over ``stream`` on a daemon thread — queries
         keep flowing on the caller's thread while epochs seal behind the
-        lock. Returns the (started) thread; join it to wait for the stream
-        to drain."""
+        write lock. Returns the (started) thread; join it to wait for the
+        stream to drain."""
 
         def pump():
             for batch in stream:
@@ -170,93 +319,288 @@ class GraphQueryServer:
         t.start()
         return t
 
-    # -- query side --------------------------------------------------------
+    # -- query side (typed scheduler) --------------------------------------
     def latest_version(self) -> Optional[Version]:
-        with self._lock:
+        """Newest *published* sealed version (read plane, never blocks on
+        ingest); falls back to the store when reads are unpipelined."""
+        if self.pipeline_reads:
+            with self._serve_lock:
+                if self._serving is not None:
+                    return self._serving[0]
+            return None
+        with self._ingest_lock:
             return self.graph.latest_sealed()
 
-    def submit(self, query: Query) -> None:
-        """Enqueue a query into the current window (answered at the next
-        :meth:`flush`, all same-kind queries in one vectorized call).
-        Thread-safe: submitters may race each other and the flusher."""
-        with self._lock:
-            self._pending.append((query, time.perf_counter()))
+    def submit_request(self, request: QueryRequest,
+                       on_done: Optional[Callable[[QueryResponse], None]]
+                       = None) -> Optional[QueryResponse]:
+        """Admission-controlled enqueue of one typed request.
 
-    def flush(self) -> list[QueryResult]:
-        """Answer every pending query against the newest frontier-sealed
-        snapshot. Raises if nothing is globally sealed yet."""
-        with self._lock:
+        Returns None when the request was accepted (it will be answered by
+        a subsequent window — via ``on_done`` if given, and/or in the
+        return of the :meth:`run_window` call that executes it). Returns
+        an immediate typed *response* — never raises — when the request
+        cannot be queued: ``ERR_BAD_QUERY`` for an unknown query kind,
+        ``ERR_OVERLOADED`` when the pending queue is at ``max_pending``
+        (load shed; the caller sees it instantly instead of a timeout).
+        """
+        if query_kind(request.query) is None:
+            return QueryResponse.failed(
+                request.request_id, ERR_BAD_QUERY,
+                f"unknown query type {type(request.query).__name__}")
+        now = time.perf_counter()
+        deadline_at = (now + request.deadline_s
+                       if request.deadline_s is not None else None)
+        with self._serve_lock:
+            if len(self._pending) >= self.max_pending:
+                self.shed_overload += 1
+                return QueryResponse.failed(
+                    request.request_id, ERR_OVERLOADED,
+                    f"pending queue at max_pending={self.max_pending}")
+            self._pending.append(_Entry(request, now, deadline_at, on_done))
+        self.work_available.set()
+        return None
+
+    def run_window(self) -> list[tuple[QueryRequest, QueryResponse]]:
+        """Drain the pending queue and answer it as ONE window — the
+        single code path that owns execution and cache accounting for
+        every submission surface (legacy ``submit``/``flush``, point
+        :meth:`query`, and the RPC tier's dispatcher all land here, so
+        same-kind queries collapse across clients into one jitted call).
+
+        Expired-deadline requests are answered with ``ERR_DEADLINE``
+        without executing. Unpinned requests execute at the published
+        serving snapshot; pinned requests at their pinned sealed version
+        (published fast path, else a write-locked stitch; an unsealed pin
+        is an ``ERR_BAD_PIN`` response). Completion callbacks run after
+        the window, outside every lock; answered touch vertices are
+        buffered for the next ingest tick.
+
+        Legacy-compatible failure semantics: if nothing is globally
+        sealed yet, the undeliverable entries are re-queued AHEAD of
+        later submissions and ``RuntimeError`` raises; if the engine
+        fails mid-window, every live entry is re-queued un-answered and
+        the error propagates — a window is delivered all-or-nothing.
+
+        Returns ``(request, response)`` pairs in submission order.
+        """
+        now = time.perf_counter()
+        with self._serve_lock:
             pending, self._pending = self._pending, []
-            if not pending:
-                return []
-            v = self.graph.latest_sealed()
-            if v is None:
-                # re-queue AHEAD of anything submitted since the swap so
-                # window order is preserved (nothing was answered yet)
-                self._pending = pending + self._pending
-                raise RuntimeError(
-                    "no globally sealed snapshot yet — seal an epoch on "
-                    "every shard before querying")
-            view = self.graph.join_view(v)
-        # the stitched view is immutable once built: execute outside the
-        # lock so ingestion never waits on query compute. A failing window
-        # (e.g. one malformed query) is re-queued, not silently discarded.
+            serving = self._serving
+        if not pending:
+            return []
+        expired: list[tuple[_Entry, QueryResponse]] = []
+        live: list[_Entry] = []
+        for e in pending:
+            if e.deadline_at is not None and now > e.deadline_at:
+                expired.append((e, QueryResponse.failed(
+                    e.request.request_id, ERR_DEADLINE,
+                    f"deadline_s={e.request.deadline_s} expired in queue",
+                    latency_s=now - e.enqueued_at)))
+            else:
+                live.append(e)
+        if not self.pipeline_reads:
+            # the pre-split discipline (benchmark baseline): pin the
+            # snapshot under the write lock — behind in-flight applies
+            with self._ingest_lock:
+                v = self.graph.latest_sealed()
+                serving = ((v, self.graph.join_view(v))
+                           if v is not None else None)
+        if serving is None and any(e.request.pin_version is None
+                                   for e in live):
+            # nothing answerable yet: re-queue AHEAD of anything submitted
+            # since the swap so window order is preserved (nothing was
+            # answered), deliver only the already-expired budgets
+            with self._serve_lock:
+                self._pending = live + self._pending
+                self.shed_deadline += len(expired)
+            self._deliver(expired)
+            raise RuntimeError(
+                "no globally sealed snapshot yet — seal an epoch on "
+                "every shard before querying")
+        # group by effective snapshot so one engine call per (version,
+        # kind) answers every client's same-kind queries together
+        failed_pins: list[tuple[_Entry, QueryResponse]] = []
+        groups: dict[int, list[_Entry]] = {}
+        views: dict[int, tuple[Version, JoinView]] = {}
+        for e in live:
+            pin = e.request.pin_version
+            if pin is None:
+                v, view = serving
+            else:
+                v = pin
+                packed = pin.pack()
+                if packed not in views:
+                    with self._serve_lock:
+                        pinned = self._published.get(packed)
+                    if pinned is None:
+                        try:
+                            with self._ingest_lock:
+                                pinned = self.graph.join_view(pin)
+                        except ValueError as exc:
+                            failed_pins.append((e, QueryResponse.failed(
+                                e.request.request_id, ERR_BAD_PIN,
+                                str(exc))))
+                            continue
+                    views[packed] = (pin, pinned)
+                view = views[packed][1]
+            views.setdefault(v.pack(), (v, view))
+            groups.setdefault(v.pack(), []).append(e)
+        answered: dict[int, QueryResponse] = {}
         try:
-            values = self.engine.execute(view, [q for q, _ in pending])
+            for packed in sorted(groups):
+                v, view = views[packed]
+                entries = groups[packed]
+                values = self.engine.execute(
+                    view, [e.request.query for e in entries])
+                done = time.perf_counter()
+                for e, val in zip(entries, values, strict=True):
+                    answered[id(e)] = QueryResponse.answered(
+                        e.request.request_id, val, v, done - e.enqueued_at)
         except BaseException:
-            with self._lock:
-                self._pending = pending + self._pending
+            # all-or-nothing: nothing from this window was delivered yet,
+            # so re-queue every live entry (original order) for a retry
+            # and let the error surface — a failing window is never
+            # silently discarded, and never double-answered
+            with self._serve_lock:
+                self._pending = live + self._pending
             raise
-        done = time.perf_counter()
-        results = [QueryResult(q, val, v, done - t0)
-                   for (q, t0), val in zip(pending, values, strict=True)]
-        with self._lock:
-            # access-pattern feed: bin this window's touch vertices into
-            # the re-sharding planner's ledger (no-op on custom routes) —
+        ok_entries = [e for e in live if id(e) in answered]
+        with self._serve_lock:
+            self.windows += 1
+            self.served += len(ok_entries)
+            self.shed_deadline += len(expired)
+            for e in ok_entries:
+                lat = answered[id(e)].latency_s
+                self.latencies_s.append(lat)
+                self._kind_latencies[query_kind(e.request.query)].append(lat)
+            # access-pattern feed, buffered for the next ingest tick —
             # only AFTER the window succeeded, so a failing window
             # re-queued above cannot double-count touches on every retry
-            self.graph.record_query_touches(
-                query_touch_vertices([q for q, _ in pending]))
-            self.latencies_s.extend(r.latency_s for r in results)
-            self.served += len(results)
-        return results
+            touched = query_touch_vertices(
+                [e.request.query for e in ok_entries])
+            if touched.size:
+                self._touch_buffer.append(touched)
+        pairs = []
+        for e in pending:
+            resp = answered.get(id(e))
+            if resp is None:
+                resp = next((r for x, r in expired + failed_pins
+                             if x is e), None)
+            if resp is not None:
+                pairs.append((e, resp))
+        self._deliver(pairs)
+        return [(e.request, r) for e, r in pairs]
+
+    @staticmethod
+    def _deliver(pairs: Sequence[tuple[_Entry, QueryResponse]]) -> None:
+        # completion callbacks run outside every lock: an RPC on_done
+        # blocks on its connection's socket, never on the server
+        for e, resp in pairs:
+            if e.on_done is not None:
+                e.on_done(resp)
 
     def query(self, q: Query) -> QueryResult:
-        """Submit + flush a single query (convenience / point lookups).
-        Flushes the whole pending window and returns THIS query's result
-        (it is the last submitted, so the last in the window)."""
-        self.submit(q)
-        return self.flush()[-1]
+        """Answer a single query through the SAME shared scheduler as
+        every other path (it used to bypass window accounting): the
+        request joins the pending window, :meth:`run_window` answers the
+        whole window — collapsing it with any concurrently submitted
+        same-kind queries — and this query's own response is returned.
+        """
+        done = threading.Event()
+        box: dict[str, QueryResponse] = {}
+
+        def on_done(resp: QueryResponse) -> None:
+            box["resp"] = resp
+            done.set()
+
+        request = QueryRequest(query=q, request_id=next(self._auto_ids))
+        shed = self.submit_request(request, on_done=on_done)
+        if shed is not None:
+            raise RuntimeError(f"query rejected: {shed.error.code} "
+                               f"({shed.error.message})")
+        while not done.is_set():
+            self.run_window()
+            if not done.is_set():
+                # a concurrent window claimed the entry and is executing
+                done.wait(0.002)
+        resp = box["resp"]
+        if not resp.ok:
+            raise RuntimeError(
+                f"query failed: {resp.error.code} ({resp.error.message})")
+        return QueryResult(q, resp.value, resp.version, resp.latency_s)
+
+    # -- deprecated shims ---------------------------------------------------
+    def submit(self, query: Query) -> None:
+        """DEPRECATED shim over :meth:`submit_request` (kept so existing
+        examples/tests run unchanged; new code should submit typed
+        :class:`~repro.graph.query.QueryRequest` envelopes). Enqueues a
+        bare query into the current window with no admission control, no
+        deadline and no callback — answered at the next window run.
+        Thread-safe: submitters may race each other and the flusher."""
+        with self._serve_lock:
+            self._pending.append(
+                _Entry(QueryRequest(query=query,
+                                    request_id=next(self._auto_ids)),
+                       time.perf_counter()))
+        self.work_available.set()
+
+    def flush(self) -> list[QueryResult]:
+        """DEPRECATED shim over :meth:`run_window`: answer every pending
+        query against the newest frontier-sealed snapshot and return the
+        successful answers as legacy :class:`QueryResult`\\ s (error
+        responses — expired deadlines, bad pins — are delivered through
+        their callbacks but not returned here). Raises if nothing is
+        globally sealed yet."""
+        return [QueryResult(req.query, resp.value, resp.version,
+                            resp.latency_s)
+                for req, resp in self.run_window() if resp.ok]
 
     # -- telemetry ---------------------------------------------------------
-    def stats(self) -> dict:
-        """Serving snapshot: latency percentiles over the recent window,
-        cache sizes, vectorized-call and PageRank warm-start counters,
-        plus re-sharding state (shard count, active plan id, splits so
-        far). Thread-safe."""
-        with self._lock:
-            lat = np.asarray(self.latencies_s)
-            served = self.served
-            reshard_events = list(self.reshard_events)
+    def stats(self) -> ServerStats:
+        """Serving snapshot as a frozen :class:`ServerStats`: latency
+        quantiles (overall and per kind) over the recent window, queue
+        depth and shed counters, cache sizes, vectorized-call and PageRank
+        warm-start counters, plus re-sharding state. Thread-safe; the two
+        planes are sampled one after the other, each under its own lock —
+        consistent within a plane, not across them."""
+        with self._ingest_lock:
+            reshard_events = tuple(self.reshard_events)
             frontier = self.graph.coordinator.global_frontier
             cached_views = len(self.graph._views)
             n_shards = self.graph.n_shards
             plan = self.graph.plan
-        return {
-            "served": served,
-            "n_shards": n_shards,
-            "routing_plan_id": plan.plan_id if plan is not None else None,
-            "reshard_events": reshard_events,
-            "query_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
-            "query_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
-            "global_frontier": frontier,
-            "cached_stitched_views": cached_views,
-            "cached_rank_versions": len(self.engine.cached_rank_versions),
-            "vectorized_calls": dict(self.engine.vectorized_calls),
-            "rank_cache_hits": self.engine.rank_cache_hits,
-            "rank_warm_starts": self.engine.rank_warm_starts,
-            "rank_cold_starts": self.engine.rank_cold_starts,
-        }
+        with self._serve_lock:
+            lat = np.asarray(self.latencies_s)
+            p50, p95, p99 = _quantiles(lat)
+            per_kind = {}
+            for kind, dq in self._kind_latencies.items():
+                if dq:
+                    kp50, kp95, kp99 = _quantiles(np.asarray(dq))
+                    per_kind[kind] = {"p50": kp50, "p95": kp95, "p99": kp99}
+            serving = self._serving
+            stats = ServerStats(
+                served=self.served,
+                windows=self.windows,
+                queue_depth=len(self._pending),
+                shed_overload=self.shed_overload,
+                shed_deadline=self.shed_deadline,
+                serving_version=serving[0] if serving else None,
+                global_frontier=frontier,
+                n_shards=n_shards,
+                routing_plan_id=plan.plan_id if plan is not None else None,
+                reshard_events=reshard_events,
+                query_p50_s=p50, query_p95_s=p95, query_p99_s=p99,
+                per_kind_latency_s=per_kind,
+                published_views=len(self._published),
+                cached_stitched_views=cached_views,
+                cached_rank_versions=len(self.engine.cached_rank_versions),
+                vectorized_calls=dict(self.engine.vectorized_calls),
+                rank_cache_hits=self.engine.rank_cache_hits,
+                rank_warm_starts=self.engine.rank_warm_starts,
+                rank_cold_starts=self.engine.rank_cold_starts)
+        return stats
 
 
 def _demo_queries(rng: np.random.Generator, n: int,
@@ -284,6 +628,12 @@ def main():
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--queries-per-epoch", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rpc-port", type=int, default=None,
+                    help="serve the stream over the socket RPC front on "
+                         "this port (0 = ephemeral) instead of the "
+                         "in-process demo loop")
+    ap.add_argument("--ingest-delay-s", type=float, default=0.05,
+                    help="pause between epochs in --rpc-port mode")
     args = ap.parse_args()
 
     batches = synthesize_churn_stream(args.vertices, args.epochs,
@@ -291,8 +641,33 @@ def main():
                                       delete_frac=0.2)
     e_max = sum(len(b.add_src) for b in batches) + 16
     sg = ShardedDynamicGraph(args.shards, args.vertices, e_max)
-    server = GraphQueryServer(sg, prewarm_pagerank=True, tol=1e-6,
-                              max_iter=200)
+    server = GraphQueryServer(sg, prewarm_pagerank=args.rpc_port is None,
+                              tol=1e-6, max_iter=200)
+
+    if args.rpc_port is not None:
+        from repro.launch.rpc import GraphRPCServer
+        rpc = GraphRPCServer(server, port=args.rpc_port)
+        rpc.start()
+        host, port = rpc.address
+        # the one line a driving process parses for the ephemeral port
+        print(f"RPC listening on {host}:{port}", flush=True)
+        thread = server.start_background_ingest(
+            iter(batches), delay_s=args.ingest_delay_s)
+        thread.join()
+        print(f"stream drained after {args.epochs} epochs; serving until "
+              "stdin closes", flush=True)
+        try:
+            import sys
+            sys.stdin.read()      # parent closes stdin to stop us
+        except KeyboardInterrupt:
+            pass
+        rpc.stop()
+        s = server.stats()
+        print(f"served {s.served} queries over RPC "
+              f"(shed {s.shed_overload} overload / {s.shed_deadline} "
+              f"deadline)")
+        return
+
     rng = np.random.default_rng(args.seed + 1)
     t0 = time.perf_counter()
     for batch in batches:
@@ -306,15 +681,17 @@ def main():
               f"queries @ snapshot {v}")
     wall = time.perf_counter() - t0
     s = server.stats()
-    print(f"\nserved {s['served']} queries over {args.epochs} epochs "
+    print(f"\nserved {s.served} queries over {args.epochs} epochs "
           f"in {wall:.2f}s")
-    print(f"  p50={s['query_p50_s']*1e3:.2f}ms p95={s['query_p95_s']*1e3:.2f}ms")
-    print(f"  vectorized calls: {s['vectorized_calls']} "
-          f"(vs {s['served']} queries)")
-    print(f"  pagerank warm starts: {s['rank_warm_starts']}, "
-          f"cold: {s['rank_cold_starts']}, cache hits: {s['rank_cache_hits']}")
-    print(f"  bounded caches: {s['cached_stitched_views']} views, "
-          f"{s['cached_rank_versions']} rank versions")
+    print(f"  p50={s.query_p50_s*1e3:.2f}ms p95={s.query_p95_s*1e3:.2f}ms "
+          f"p99={s.query_p99_s*1e3:.2f}ms")
+    print(f"  vectorized calls: {dict(s.vectorized_calls)} "
+          f"(vs {s.served} queries)")
+    print(f"  pagerank warm starts: {s.rank_warm_starts}, "
+          f"cold: {s.rank_cold_starts}, cache hits: {s.rank_cache_hits}")
+    print(f"  bounded caches: {s.cached_stitched_views} views, "
+          f"{s.published_views} published, "
+          f"{s.cached_rank_versions} rank versions")
 
 
 if __name__ == "__main__":

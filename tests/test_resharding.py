@@ -429,21 +429,26 @@ def test_failed_window_does_not_record_query_touches():
     """Regression: a window that fails mid-execute is re-queued — its
     touches must not land in the access ledger (retries would otherwise
     inflate shard loads with phantom queries and could trip the
-    planner)."""
+    planner). Successful windows buffer their touches on the read plane;
+    the next ingest tick drains them into the ledger."""
     sg = ShardedDynamicGraph(2, 16, 64)
     server = GraphQueryServer(sg)
-    sg.apply(MutationBatch(Version(0, 0),
-                           add_src=np.array([0], np.int32),
-                           add_dst=np.array([1], np.int32)))
+    server.step(MutationBatch(Version(0, 0),
+                              add_src=np.array([0], np.int32),
+                              add_dst=np.array([1], np.int32)))
     server.submit(KHop(1, k=1))
     server.submit("not a query")               # poisons the window
     with pytest.raises(TypeError):
         server.flush()
-    assert sg.access_stats.queries.sum() == 0   # nothing recorded
-    server._pending = [p for p in server._pending
-                       if not isinstance(p[0], str)]
+    assert not server._touch_buffer             # nothing buffered
+    server._pending = [e for e in server._pending
+                       if not isinstance(e.request.query, str)]
     server.flush()                              # retry without the poison
+    assert len(server._touch_buffer) == 1       # buffered exactly once
+    server._drain_touches()                     # the ingest tick's drain
     assert sg.access_stats.queries.sum() == 1   # counted exactly once
+    server._drain_touches()                     # buffer cleared: no double
+    assert sg.access_stats.queries.sum() == 1
 
 
 def test_server_auto_reshard_records_events():
@@ -462,9 +467,9 @@ def test_server_auto_reshard_records_events():
         server.submit(KHop(int(b.add_dst[0]), k=1))
         server.flush()                      # feeds the query-touch ledger
     s = server.stats()
-    assert server.reshard_events and s["reshard_events"]
-    assert s["n_shards"] == 2 + len(server.reshard_events)
-    assert s["routing_plan_id"] == len(server.reshard_events)
+    assert server.reshard_events and s.reshard_events
+    assert s.n_shards == 2 + len(server.reshard_events)
+    assert s.routing_plan_id == len(server.reshard_events)
     assert "reason" in server.reshard_events[0]
     _assert_stitched_equal(sg, ref, Version(epochs - 1, 0))
 

@@ -214,12 +214,12 @@ def test_failed_window_is_requeued_not_lost():
     server, _, batches = _setup()
     server.step(batches[0])
     server.submit(KHop(0, 2))
-    server._pending.append(("not-a-query", 0.0))
+    server.submit("not-a-query")              # shim skips admission checks
     with pytest.raises(TypeError, match="unknown query"):
         server.flush()
     assert len(server._pending) == 2          # nothing lost
-    server._pending = [p for p in server._pending
-                       if not isinstance(p[0], str)]
+    server._pending = [e for e in server._pending
+                       if not isinstance(e.request.query, str)]
     [res] = server.flush()                    # innocent query still answers
     assert isinstance(res.query, KHop)
 
@@ -249,8 +249,11 @@ def test_requeue_on_unsealed_keeps_racing_submissions():
     wholesale on the no-snapshot path, clobbering queries submitted in
     between. Interleave deterministically: submit from inside the
     flush's own latest_sealed call (the lock is re-entrant, so this is
-    exactly a submitter that won the race)."""
-    server, _, batches = _setup()
+    exactly a submitter that won the race). Pin the server to the
+    serialized discipline so the window pins via graph.latest_sealed —
+    the pipelined path reads the published pointer under the same lock
+    as the queue swap, which forecloses this race by construction."""
+    server, _, batches = _setup(pipeline_reads=False)
     server.submit(KHop(0, 1))
     real = server.graph.latest_sealed
 
@@ -301,7 +304,7 @@ def test_concurrent_submitters_and_flusher_lose_no_queries():
     ft.join()
     server.flush()                      # drain whatever the flusher missed
     assert not errors
-    assert server.stats()["served"] == 200
+    assert server.stats().served == 200
 
 
 def test_stats_consistent_during_background_ingest():
@@ -318,7 +321,7 @@ def test_stats_consistent_during_background_ingest():
         server.submit(KHop(0, 2))
         server.flush()
         s = server.stats()
-        assert s["served"] >= last
-        last = s["served"]
+        assert s.served >= last
+        last = s.served
     t.join()
-    assert server.stats()["served"] >= last
+    assert server.stats().served >= last

@@ -1,0 +1,370 @@
+"""Serving tier: typed request envelope, wire codec, and the RPC front.
+
+The contracts under test, per the serving-tier section of
+``docs/ARCHITECTURE.md``:
+
+* the wire codec round-trips every query/response shape byte-identically
+  (arrays travel as dtype + shape + raw bytes, not as lossy JSON floats),
+* admission control and latency budgets surface as TYPED responses
+  (``overloaded`` / ``deadline`` / ``bad_pin`` / ``bad_query``) — never
+  as hangs, lost requests, or exception strings,
+* the soak: many concurrent socket clients against one server under
+  simultaneous background ingest WITH a mid-run re-sharding split lose no
+  responses, see no duplicate ids, and every successful answer is
+  byte-identical to a single-store replay oracle at the sealed version it
+  was served from — the epoch-pipelined lock split must not be able to
+  serve a torn or stale-referenced snapshot,
+* the deprecated ``submit()``/``flush()`` shims keep their semantics on
+  top of the typed scheduler.
+"""
+import dataclasses
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.replica import ShardPlanner
+from repro.core.versioned import Version
+from repro.graph.dyngraph import (DynamicGraph, synthesize_churn_stream,
+                                  synthesize_skewed_stream)
+from repro.graph import compute as gc
+from repro.graph.query import (ERR_BAD_PIN, ERR_BAD_QUERY, ERR_DEADLINE,
+                               ERR_OVERLOADED, DegreeTopK, KHop,
+                               PageRankQuery, QueryRequest, QueryResponse,
+                               Reachability, query_kind)
+from repro.graph.sharded import ShardedDynamicGraph
+from repro.launch import rpc
+from repro.launch.serve_graph import GraphQueryServer, ServerStats
+
+
+def _server(n=64, epochs=5, adds=60, n_shards=3, seed=13, **kw):
+    batches = synthesize_churn_stream(n, epochs, adds, seed=seed,
+                                      delete_frac=0.2)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    sg = ShardedDynamicGraph(n_shards, n, e_max)
+    return GraphQueryServer(sg, **kw), batches
+
+
+# ------------------------------------------------------------------ codec
+@pytest.mark.parametrize("value", [
+    np.arange(17, dtype=np.int64),
+    np.random.default_rng(0).random(33),            # float64 exact bits
+    np.zeros((3, 5), np.float32),
+    np.array([True, False, True]),
+    (np.arange(4, dtype=np.int32), np.linspace(0, 1, 4)),
+    True,
+    None,
+])
+def test_value_codec_round_trips_byte_identical(value):
+    got = rpc.decode_value(rpc.encode_value(value))
+    if isinstance(value, tuple):
+        assert isinstance(got, tuple)
+        for g, v in zip(got, value, strict=True):
+            assert np.asarray(g).tobytes() == np.asarray(v).tobytes()
+            assert np.asarray(g).dtype == np.asarray(v).dtype
+    elif isinstance(value, np.ndarray):
+        assert got.tobytes() == value.tobytes()
+        assert got.dtype == value.dtype and got.shape == value.shape
+    else:
+        assert got == value
+
+
+@pytest.mark.parametrize("q", [
+    KHop(source=5, k=2),
+    Reachability(src=1, dst=9, max_hops=4),
+    Reachability(src=1, dst=9),                     # unbounded variant
+    DegreeTopK(7, direction="out"),
+    PageRankQuery(top_k=3),
+    PageRankQuery(),
+])
+def test_query_codec_round_trips(q):
+    enc = rpc.encode_query(q)
+    assert enc["kind"] == query_kind(q)
+    assert rpc.decode_query(enc["kind"], enc["query"]) == q
+
+
+def test_decode_query_rejects_unknown_kind_and_bad_fields():
+    with pytest.raises(ValueError, match="unknown query kind"):
+        rpc.decode_query("bogus", {})
+    with pytest.raises(TypeError):
+        rpc.decode_query("k_hop", {"nope": 1})
+
+
+def test_response_codec_round_trips_ok_and_error():
+    ok = QueryResponse.answered(7, np.arange(5), Version(3, 1), 0.25)
+    got = rpc.decode_response(rpc.encode_response(ok))
+    assert got.ok and got.request_id == 7 and got.version == Version(3, 1)
+    assert got.value.tobytes() == ok.value.tobytes()
+    err = QueryResponse.failed("abc", ERR_DEADLINE, "too slow",
+                               latency_s=0.5)
+    got = rpc.decode_response(rpc.encode_response(err))
+    assert not got.ok and got.request_id == "abc"
+    assert got.error.code == ERR_DEADLINE and got.error.message == "too slow"
+    assert got.latency_s == 0.5
+
+
+def test_frame_layer_length_prefix_and_eof():
+    a, b = socket.socketpair()
+    try:
+        frame = {"op": "query", "id": 1}
+        a.sendall(rpc.encode_frame(frame))
+        assert rpc.read_frame(b) == frame
+        a.sendall(rpc.encode_frame(frame)[:3])      # torn mid-frame
+        a.close()
+        with pytest.raises(ConnectionError, match="mid-frame"):
+            rpc.read_frame(b)
+    finally:
+        b.close()
+
+
+# ---------------------------------------------------- typed scheduler paths
+def test_submit_request_rejects_unknown_query_typed():
+    server, _ = _server()
+    resp = server.submit_request(QueryRequest(query="junk", request_id=9))
+    assert resp is not None and not resp.ok
+    assert resp.error.code == ERR_BAD_QUERY and resp.request_id == 9
+
+
+def test_admission_control_sheds_typed_overload():
+    server, batches = _server(max_pending=2)
+    server.step(batches[0])
+    assert server.submit_request(QueryRequest(KHop(0, 1), 1)) is None
+    assert server.submit_request(QueryRequest(KHop(1, 1), 2)) is None
+    shed = server.submit_request(QueryRequest(KHop(2, 1), 3))
+    assert shed is not None and shed.error.code == ERR_OVERLOADED
+    assert server.stats().shed_overload == 1
+    pairs = server.run_window()                # accepted two still answer
+    assert [r.request_id for _, r in pairs] == [1, 2]
+    assert all(r.ok for _, r in pairs)
+
+
+def test_expired_deadline_answers_typed_not_stale():
+    server, batches = _server()
+    server.step(batches[0])
+    got = []
+    assert server.submit_request(QueryRequest(KHop(0, 1), "late",
+                                              deadline_s=0.0),
+                                 on_done=got.append) is None
+    time.sleep(0.002)
+    [(req, resp)] = server.run_window()
+    assert req.request_id == "late" and not resp.ok
+    assert resp.error.code == ERR_DEADLINE
+    assert got == [resp]                       # callback got the same answer
+    assert server.stats().shed_deadline == 1
+
+
+def test_pinned_request_replays_old_sealed_version():
+    server, batches = _server()
+    g = DynamicGraph(64, 4096)
+    for b in batches:
+        server.step(b)
+        g.apply(b)
+    old = batches[1].version
+    [(_, resp)] = (server.submit_request(QueryRequest(
+        KHop(3, 2), 1, pin_version=old)) or server.run_window())
+    assert resp.ok and resp.version == old
+    expect = np.asarray(gc.k_hop(g.join_view(old), np.array([3]), 2))
+    assert np.asarray(resp.value).tobytes() == expect.tobytes()
+    # a never-sealed pin is a typed error, not an exception
+    [(_, bad)] = (server.submit_request(QueryRequest(
+        KHop(3, 2), 2, pin_version=Version(99, 0))) or server.run_window())
+    assert not bad.ok and bad.error.code == ERR_BAD_PIN
+
+
+def test_stats_is_frozen_dataclass():
+    server, batches = _server()
+    server.step(batches[0])
+    server.query(KHop(0, 1))
+    s = server.stats()
+    assert isinstance(s, ServerStats)
+    assert s.served == 1 and s.windows >= 1 and s.queue_depth == 0
+    assert s.serving_version == batches[0].version
+    assert "k_hop" in s.per_kind_latency_s
+    assert set(s.per_kind_latency_s["k_hop"]) == {"p50", "p95", "p99"}
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.served = 5
+
+
+def test_query_routes_through_shared_scheduler():
+    """The single-shot path must share the window scheduler: its query
+    collapses with pending same-kind submissions into ONE vectorized call
+    and lands in the same served/window accounting."""
+    server, batches = _server()
+    server.step(batches[0])
+    base_calls = server.engine.vectorized_calls["k_hop"]
+    server.submit(KHop(1, 2))
+    server.submit(KHop(2, 2))
+    r = server.query(KHop(3, 2))
+    assert r.query == KHop(3, 2)
+    assert server.engine.vectorized_calls["k_hop"] == base_calls + 1
+    assert server.stats().served == 3
+    assert server.stats().windows == 1
+
+
+# ------------------------------------------------------------- RPC serving
+def test_rpc_round_trip_and_typed_wire_errors():
+    server, batches = _server()
+    for b in batches:
+        server.step(b)
+    front = rpc.GraphRPCServer(server, port=0).start()
+    try:
+        host, port = front.address
+        with rpc.GraphRPCClient(host, port) as c:
+            r = c.query(KHop(source=3, k=2))
+            assert r.ok and r.version == batches[-1].version
+            # malformed wire request -> typed bad_query, connection lives
+            c._sock.sendall(rpc.encode_frame(
+                {"op": "query", "id": 99, "kind": "bogus", "query": {}}))
+            bad = c.recv()
+            assert not bad.ok and bad.error.code == ERR_BAD_QUERY
+            assert bad.request_id == 99
+            # unknown op -> typed bad_query too
+            c._sock.sendall(rpc.encode_frame({"op": "nope", "id": 100}))
+            assert c.recv().error.code == ERR_BAD_QUERY
+            # stats op serves the ServerStats fields over the wire
+            s = c.stats()
+            assert s["served"] >= 1 and s["n_shards"] == 3
+            assert Version.unpack(s["serving_version"]) \
+                == batches[-1].version
+    finally:
+        front.stop()
+
+
+def test_rpc_overload_sheds_typed_response():
+    server, batches = _server(max_pending=0)    # every request sheds
+    server.step(batches[0])
+    front = rpc.GraphRPCServer(server, port=0).start()
+    try:
+        host, port = front.address
+        with rpc.GraphRPCClient(host, port) as c:
+            r = c.query(KHop(source=0, k=1))
+            assert not r.ok and r.error.code == ERR_OVERLOADED
+    finally:
+        front.stop()
+
+
+def test_rpc_soak_concurrent_clients_ingest_and_reshard():
+    """The acceptance soak: 8 socket clients hammer the front while the
+    ingest thread streams a zipf-skewed stream that trips a mid-run
+    planner split. No response is lost or duplicated, typed errors are
+    the only failure surface, and every successful answer matches the
+    single-store replay oracle byte for byte at its served version."""
+    n, epochs = 64, 8
+    batches = synthesize_skewed_stream(n, epochs, 200, seed=13)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    planner = ShardPlanner(imbalance_threshold=1.2, min_load=100.0,
+                           min_epochs=2, max_shards=6)
+    sg = ShardedDynamicGraph(2, n, e_max, planner=planner)
+    server = GraphQueryServer(sg, tol=1e-6, max_iter=100)
+    server.step(batches[0])                     # seal one epoch up front
+    front = rpc.GraphRPCServer(server, port=0).start()
+    host, port = front.address
+    n_clients, per_client = 8, 25
+    results: dict[int, list[QueryResponse]] = {}
+    errors: list[BaseException] = []
+
+    def client(ci: int) -> None:
+        rng = np.random.default_rng(100 + ci)
+        mine: list[QueryResponse] = []
+        try:
+            with rpc.GraphRPCClient(host, port) as c:
+                pinned: Version | None = None
+                for j in range(per_client):
+                    roll = rng.random()
+                    if roll < 0.5:
+                        q = KHop(int(rng.integers(0, n)), k=2)
+                    elif roll < 0.8:
+                        q = Reachability(int(rng.integers(0, n)),
+                                         int(rng.integers(0, n)),
+                                         max_hops=6)
+                    else:
+                        q = DegreeTopK(5)
+                    # every 5th query replays a version seen earlier —
+                    # pinned reads must survive concurrent re-sharding
+                    pin = pinned if (j % 5 == 4) else None
+                    r = c.query(q, pin_version=pin, deadline_s=30.0)
+                    assert r.request_id == j + 1, "response misrouted"
+                    mine.append(r)
+                    if r.ok and pinned is None:
+                        pinned = r.version
+        except BaseException as e:              # pragma: no cover
+            errors.append(e)
+        results[ci] = mine
+
+    ingest = server.start_background_ingest(iter(batches[1:]),
+                                            delay_s=0.01)
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ingest.join()
+    front.stop()
+
+    assert not errors
+    # no lost or duplicated responses, ids correlate per connection
+    for ci in range(n_clients):
+        assert len(results[ci]) == per_client, f"client {ci} lost answers"
+        ids = [r.request_id for r in results[ci]]
+        assert ids == list(range(1, per_client + 1))
+    flat = [r for rs in results.values() for r in rs]
+    ok = [r for r in flat if r.ok]
+    # typed errors only (a pin can retire if a split GCs old plans)
+    assert all(r.error.code in (ERR_BAD_PIN, ERR_DEADLINE, ERR_OVERLOADED)
+               for r in flat if not r.ok)
+    assert len(ok) >= n_clients * per_client * 0.9
+    assert server.reshard_events, "stream must trip at least one split"
+    # replay oracle: single store, same stream; every answer byte-exact
+    g = DynamicGraph(n, e_max)
+    for b in batches:
+        g.apply(b)
+    sent_queries = {}      # regenerate each client's query sequence
+    for ci in range(n_clients):
+        rng = np.random.default_rng(100 + ci)
+        qs = []
+        for _ in range(per_client):
+            roll = rng.random()
+            if roll < 0.5:
+                qs.append(KHop(int(rng.integers(0, n)), k=2))
+            elif roll < 0.8:
+                qs.append(Reachability(int(rng.integers(0, n)),
+                                       int(rng.integers(0, n)),
+                                       max_hops=6))
+            else:
+                qs.append(DegreeTopK(5))
+        sent_queries[ci] = qs
+    audited = 0
+    for ci in range(n_clients):
+        for q, r in zip(sent_queries[ci], results[ci], strict=True):
+            if not r.ok:
+                continue
+            view = g.join_view(r.version)
+            if isinstance(q, KHop):
+                exp = np.asarray(gc.k_hop(view, np.array([q.source]), q.k))
+                assert np.asarray(r.value).tobytes() == exp.tobytes()
+            elif isinstance(q, Reachability):
+                assert r.value == gc.reachability(view, q.src, q.dst,
+                                                  q.max_hops)
+            else:
+                ids, degs = r.value
+                exp_ids, exp_degs = gc.degree_topk(view, q.k)
+                assert np.asarray(ids).tobytes() == \
+                    np.asarray(exp_ids).tobytes()
+                assert np.asarray(degs).tobytes() == \
+                    np.asarray(exp_degs).tobytes()
+            audited += 1
+    assert audited == len(ok)
+
+
+def test_rpc_stop_is_idempotent_and_releases_port():
+    server, batches = _server()
+    server.step(batches[0])
+    front = rpc.GraphRPCServer(server, port=0).start()
+    host, port = front.address
+    front.stop()
+    front.stop()                                # second stop is a no-op
+    with pytest.raises(OSError):
+        socket.create_connection((host, port), timeout=0.5)

@@ -141,7 +141,8 @@ import threading
 class GraphQueryServer:
     def __init__(self, graph):
         self.graph = graph
-        self._lock = threading.RLock()
+        self._ingest_lock = threading.RLock()
+        self._serve_lock = threading.Lock()
         self.served = 0
 
     def drain(self):
@@ -166,12 +167,20 @@ def test_registry_matches_real_attribute_names():
     """Registry entries must reference attributes that still exist, so a
     rename in the server/engine cannot silently hollow out the rule."""
     import repro.graph.query as q
+    import repro.launch.rpc as rpc
     import repro.launch.serve_graph as sg
     from repro.graph.sharded import ShardedDynamicGraph
 
     srv = sg.GraphQueryServer(ShardedDynamicGraph(2, 64, 256))
-    for attr in lockcheck.SPEC["GraphQueryServer"].locks["_lock"]:
-        assert hasattr(srv, attr), attr
+    for lock, attrs in lockcheck.SPEC["GraphQueryServer"].locks.items():
+        assert hasattr(srv, lock), lock
+        for attr in attrs:
+            assert hasattr(srv, attr), attr
+    front = rpc.GraphRPCServer(srv)
+    for lock, attrs in lockcheck.SPEC["GraphRPCServer"].locks.items():
+        assert hasattr(front, lock), lock
+        for attr in attrs:
+            assert hasattr(front, attr), attr
     eng = q.SnapshotQueryEngine()
     for attr in lockcheck.SPEC["SnapshotQueryEngine"].locks["_rank_lock"]:
         assert hasattr(eng, attr), attr
