@@ -25,7 +25,12 @@ Several checks are absolute rather than baseline-relative:
   the serialized single-lock discipline > 1.2x on sustained QPS and
   > 1.2x on the median client round trip (the lock convoy holds on any
   host — see the gate comments), with p99 no worse than 2x, >= 8
-  concurrent clients, and zero replay-oracle mismatches.
+  concurrent clients, and zero replay-oracle mismatches;
+* the ``replica_locality`` replica-plane claims: on the zipf-hot stream
+  replica-first routing must touch >= 1.5x fewer shards per window than
+  global-view execution and improve the p99 round trip > 1.15x, with
+  every answer replay-audited byte-identical (I10: mirrors are never
+  visible in answers).
 
     python benchmarks/check_bench.py --fresh BENCH_ingest.json \
         --baseline /tmp/baseline.json
@@ -49,6 +54,11 @@ REQUIRED = {
     "serve_rpc": ["pipelined_vs_single_lock_speedup", "p50_improvement",
                   "p99_improvement", "n_clients", "answers_audited",
                   "oracle_mismatches", "single_lock", "pipelined"],
+    "replica_locality": ["fanout_reduction", "routed_mean_fanout",
+                         "routed_windows", "mirror_hit_rate",
+                         "p50_improvement", "p99_improvement",
+                         "answers_audited", "oracle_mismatches",
+                         "no_replica", "replicated"],
 }
 SHARD_COUNTS = ("1", "2", "4")
 SHARD_METRICS = ["parallel_wall_s", "parallel_muts_per_s",
@@ -74,6 +84,15 @@ RPC_P50_GATE = 1.2
 # is a handful of samples per run, so this only catches blowups)
 RPC_P99_FLOOR = 1 / 2
 RPC_MIN_CLIENTS = 8
+# the replica plane's locality claims, absolute like the serving gates:
+# on the zipf-hot stream at 4 shards, replica-first routing must touch
+# >= 1.5x fewer shards per window than global-view execution, and the
+# shape-stable routed subsets must improve the p99 round trip > 1.15x —
+# both hold on any host (the fan-out is counted, not timed, and the p99
+# gap is structural: routed windows run pow2-bucketed edge subsets far
+# smaller than the global CSR), with zero replay-oracle mismatches
+REPLICA_FANOUT_GATE = 1.5
+REPLICA_P99_GATE = 1.15
 # (path-description, getter) pairs of scale-free ratios compared 2x
 REGRESSION_FACTOR = 2.0
 
@@ -186,6 +205,36 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
                 "diverged from the replay oracle")
         if not srv.get("answers_audited"):
             errors.append("serve_rpc: replay oracle audited no answers")
+    # the replica plane's locality claim, absolute: replica-first routing
+    # must shrink both per-window shard fan-out and the p99 round trip on
+    # the zipf-hot stream, and every answer must have matched the oracle
+    # (mirrors may never be visible in answers — I10)
+    rl = fresh.get("replica_locality", {})
+    if rl:
+        fr = rl.get("fanout_reduction")
+        if fr is not None and fr < REPLICA_FANOUT_GATE:
+            errors.append(
+                "replica_locality: routed windows touch only "
+                f"x{fr:.2f} fewer shards than global-view execution "
+                f"(>= {REPLICA_FANOUT_GATE}x required at "
+                f"{rl.get('n_shards')} shards)")
+        p99_imp = rl.get("p99_improvement")
+        if p99_imp is not None and p99_imp <= REPLICA_P99_GATE:
+            errors.append(
+                "replica_locality: replica-first routing does not beat "
+                f"the no-replica p99 >{REPLICA_P99_GATE}x "
+                f"(improvement x{p99_imp:.2f})")
+        if not rl.get("routed_windows"):
+            errors.append(
+                "replica_locality: no windows were replica-routed "
+                "(mirror nomination never fired)")
+        if rl.get("oracle_mismatches", 0) != 0:
+            errors.append(
+                f"replica_locality: {rl['oracle_mismatches']} answers "
+                "diverged from the replay oracle")
+        if not rl.get("answers_audited"):
+            errors.append("replica_locality: replay oracle audited "
+                          "no answers")
     if "1" in shards and "speedup_vs_single" in shards.get("1", {}):
         ratio = shards["1"]["speedup_vs_single"]
         if ratio < 0.9:

@@ -916,6 +916,240 @@ def bench_serve_rpc(quick=False):
     row("serve_rpc.report", 0, str(out))
 
 
+# ------------------------------------------- replica-coherent read plane
+# (§2.2 data management on the live store: hot-vertex mirrors +
+# locality-aware query routing, measured)
+def bench_replica_locality(quick=False):
+    """Replica-first routing vs global-view execution on a zipf-hot
+    query stream.
+
+    The graph is scale-free (zipf destinations: a small head of hub
+    vertices receives most edges) and the query stream is zipf-hot over
+    those hubs — the regime the replica plane exists for: most frontier
+    mass lands on a few dozen vertices, so mirroring their adjacency
+    lets same-kind windows resolve expansions locally instead of
+    touching every shard's CSR. Two servers drive the identical
+    mutation + query stream over 4 shards, one with ``replicate_hot``
+    on and one off, alternating order across paired repeats. After a
+    heat-warmup phase (the ledger needs sealed epochs of query touches
+    before ``MirrorPlanner`` nominates; the warmup also primes the
+    routed jit traces so the timed window measures execution), the
+    steady-state phase measures:
+
+    * mean fan-out — shards touched per routed group, from the engine's
+      ``fanout_hist`` delta over the timed phase — against the
+      structural fan-out of global-view execution (every window reads
+      the stitched CSR of all ``n_shards`` shards). The gate is
+      ``fanout_reduction >= 1.5`` at 4 shards;
+    * p50/p99 submit-to-answer latency per mode (pooled across
+      repeats); the gate is ``p99_improvement > 1.15`` — mirrored
+      windows run the frontier kernels on pow2-padded edge subsets
+      orders of magnitude smaller than the global CSR;
+    * a replay oracle: EVERY answer from BOTH modes is recomputed on a
+      single non-sharded store at its served version and compared byte
+      for byte (mirrors must be invisible in answers — I10), exactly
+      the ``serve_rpc`` audit discipline.
+
+    Lands in ``BENCH_ingest.json`` under ``replica_locality``.
+    """
+    import pathlib
+
+    from repro.core.versioned import Version
+    from repro.graph.dyngraph import (DynamicGraph, MutationBatch,
+                                      synthesize_skewed_stream)
+    from repro.graph.query import (KHop, Reachability, SnapshotQueryEngine)
+    from repro.graph.sharded import ShardedDynamicGraph
+    from repro.launch.serve_graph import GraphQueryServer
+
+    n = 6_000 if quick else 20_000
+    n_shards = 4
+    build_epochs = 4 if quick else 5
+    adds = 5_000 if quick else 12_000
+    warm_epochs = 2            # mirrors live from the 2nd warm publish
+    steady_epochs = 4 if quick else 6
+    tail_adds = max(2, n // 1000)
+    zipf_a = 1.8               # scale-free head: top-48 dsts carry ~97%
+    pool_size = 48             # hot anchor pool (< mirror_k: full cover)
+    mirror_k = 64
+    # zipf-tail pool anchors settle at EWMA heat well below 1.0 (decay
+    # 0.5/epoch over ~38 touches split zipf-wise across 48 anchors), so
+    # the nomination floor must sit below the tail's steady state
+    mirror_min_heat = 0.05
+    repeats = 2 if quick else 3
+
+    batches = synthesize_skewed_stream(n, build_epochs, adds, seed=0,
+                                       zipf_a=zipf_a)
+    rng = np.random.default_rng(1)
+    total_epochs = build_epochs + warm_epochs + steady_epochs
+    for e in range(build_epochs, total_epochs):
+        batches.append(MutationBatch(
+            Version(e, 0),
+            add_src=rng.integers(0, n, tail_adds).astype(np.int32),
+            add_dst=rng.integers(0, n, tail_adds).astype(np.int32)))
+    e_max = sum(len(b.add_src) for b in batches) + 16
+
+    # the replay oracle (one non-sharded store over the same stream)
+    # doubles as the hub finder: the hot pool is the in-degree head of
+    # the final graph — the vertices most frontier mass lands on
+    g_oracle = DynamicGraph(n, e_max)
+    for b in batches:
+        g_oracle.apply(b)
+    final_view = g_oracle.join_view(batches[-1].version)
+    indeg = np.asarray(final_view.in_degree)
+    pool = np.argsort(-indeg, kind="stable")[:pool_size].astype(np.int64)
+    w = 1.0 / np.arange(1, pool_size + 1) ** 1.1     # zipf-hot anchors
+    w /= w.sum()
+
+    def windows_for_epoch(qrng):
+        """One epoch's query windows, each flushed alone so one flush is
+        one same-kind routed group. Reachability endpoints both come
+        from the pool (hub-to-hub connectivity) so the heat ledger's
+        candidate set stays the pool."""
+        wins = []
+        for _ in range(7):
+            wins.append([KHop(int(s), k=1)
+                         for s in qrng.choice(pool, 4, p=w)])
+        for _ in range(3):
+            wins.append([KHop(int(s), k=2)
+                         for s in qrng.choice(pool, 2, p=w)])
+        for _ in range(2):
+            wins.append([Reachability(int(s), int(d), max_hops=2)
+                         for s, d in zip(qrng.choice(pool, 2, p=w),
+                                         qrng.choice(pool, 2, p=w))])
+        return wins
+
+    def run_mode(replicate: bool):
+        sg = ShardedDynamicGraph(n_shards, n, e_max)
+        server = GraphQueryServer(sg, replicate_hot=replicate,
+                                  mirror_k=mirror_k,
+                                  mirror_min_heat=mirror_min_heat)
+        qrng = np.random.default_rng(42)     # identical stream per mode
+        lats: list[float] = []
+        answered = []
+        stats0: dict = {}
+        for b in batches:
+            server.step(b)
+            e = b.version.epoch
+            if e < build_epochs - 1:
+                continue                     # build phase: ingest only
+            timed = e >= build_epochs + warm_epochs
+            if timed and not stats0:
+                # telemetry baseline: warmup windows route before the
+                # heat ledger warms (0-mirror plans fan out wide) and
+                # must not pollute the steady-state fan-out numbers
+                stats0 = server.engine.replica_stats()
+            for win in windows_for_epoch(qrng):
+                for q in win:
+                    server.submit(q)
+                results = server.flush()
+                if timed:
+                    lats.extend(r.latency_s for r in results)
+                    answered.extend(results)
+        stats1 = server.engine.replica_stats()
+        s = server.stats()
+        sg.shutdown()
+        hist = {k: stats1["fanout_hist"].get(k, 0) - stats0.get(
+                    "fanout_hist", {}).get(k, 0)
+                for k in stats1["fanout_hist"]}
+        return {
+            "latencies_s": lats,
+            "routed_windows": (stats1["routed_windows"]
+                               - stats0.get("routed_windows", 0)),
+            "fanout_hist": {k: v for k, v in hist.items() if v},
+            "mirror_hits": (stats1["mirror_hits"]
+                            - stats0.get("mirror_hits", 0)),
+            "mirror_misses": (stats1["mirror_misses"]
+                              - stats0.get("mirror_misses", 0)),
+            "mirrored_vertices": s.mirrored_vertices,
+        }, answered
+
+    runs = {False: [], True: []}
+    for rep in range(repeats):
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        for replicate in order:
+            runs[replicate].append(run_mode(replicate))
+
+    def pooled(mode_runs):
+        lat = np.concatenate([np.asarray(m["latencies_s"])
+                              for m, _ in mode_runs])
+        return {"p50_s": float(np.percentile(lat, 50)),
+                "p95_s": float(np.percentile(lat, 95)),
+                "p99_s": float(np.percentile(lat, 99)),
+                "queries": int(lat.size)}
+
+    base = pooled(runs[False])
+    repl = pooled(runs[True])
+    hist: dict[int, int] = {}
+    routed_windows = hits = misses = 0
+    for m, _ in runs[True]:
+        for k, v in m["fanout_hist"].items():
+            hist[k] = hist.get(k, 0) + v
+        routed_windows += m["routed_windows"]
+        hits += m["mirror_hits"]
+        misses += m["mirror_misses"]
+    mean_fanout = (sum(k * v for k, v in hist.items())
+                   / max(sum(hist.values()), 1))
+    # all-mirrored steady states drive the mean toward 0; the clamp
+    # keeps the reported ratio finite (and JSON-encodable)
+    fanout_reduction = n_shards / max(mean_fanout, 0.05)
+    hit_rate = hits / max(hits + misses, 1)
+    p50_improvement = base["p50_s"] / repl["p50_s"]
+    p99_improvement = base["p99_s"] / repl["p99_s"]
+
+    # replay oracle: every answer from both modes, byte for byte
+    eng = SnapshotQueryEngine()
+    by_version: dict[int, list] = {}
+    for _, answered in runs[False] + runs[True]:
+        for r in answered:
+            by_version.setdefault(r.version.pack(), []).append(r)
+    audited = mismatches = 0
+    for packed, items in sorted(by_version.items()):
+        view = g_oracle.join_view(Version.unpack(packed))
+        vals = eng.execute(view, [r.query for r in items])
+        for r, exp in zip(items, vals, strict=True):
+            if isinstance(exp, np.ndarray):
+                same = np.asarray(r.value).tobytes() == exp.tobytes()
+            else:
+                same = r.value == exp
+            audited += 1
+            mismatches += 0 if same else 1
+    assert mismatches == 0, f"{mismatches}/{audited} answers diverged"
+
+    row("replica_locality.no_replica", base["p50_s"],
+        f"p99_us={base['p99_s']*1e6:.1f};fanout={n_shards}")
+    row("replica_locality.replicated", repl["p50_s"],
+        f"p99_us={repl['p99_s']*1e6:.1f};mean_fanout={mean_fanout:.2f};"
+        f"hit_rate={hit_rate:.2f}")
+    row("replica_locality.routing", 0,
+        f"fanout_reduction=x{fanout_reduction:.2f};"
+        f"p50_improvement=x{p50_improvement:.2f};"
+        f"p99_improvement=x{p99_improvement:.2f};"
+        f"routed_windows={routed_windows}")
+    row("replica_locality.oracle_audit", 0,
+        f"audited={audited};mismatches={mismatches}")
+    report = {
+        "n_vertices": n, "n_shards": n_shards, "zipf_a": zipf_a,
+        "mirror_k": mirror_k, "hot_pool": pool_size, "repeats": repeats,
+        "edges_final": int(final_view.m),
+        "routed_windows": int(routed_windows),
+        "fanout_hist": {str(k): int(v) for k, v in sorted(hist.items())},
+        "routed_mean_fanout": float(mean_fanout),
+        "structural_fanout": n_shards,
+        "fanout_reduction": float(fanout_reduction),
+        "mirror_hit_rate": float(hit_rate),
+        "mirrored_vertices": int(runs[True][-1][0]["mirrored_vertices"]),
+        "no_replica": base,
+        "replicated": repl,
+        "p50_improvement": float(p50_improvement),
+        "p99_improvement": float(p99_improvement),
+        "answers_audited": int(audited),
+        "oracle_mismatches": int(mismatches),
+    }
+    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
+    _merge_bench_json(out, {"replica_locality": report})
+    row("replica_locality.report", 0, str(out))
+
+
 # ---------------------------------------------------------------- §3.3 axis 4
 def bench_replica(quick=False):
     """Data-management efficiency: hit rate + modeled comm per mode."""
@@ -1000,7 +1234,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: online,offline,ingest,"
                          "ingest_graph,ingest_sharded,resharding,"
-                         "serve_graph,serve_rpc,replica,kernels,roofline")
+                         "serve_graph,serve_rpc,replica_locality,replica,"
+                         "kernels,roofline")
     args = ap.parse_args()
     benches = {
         "online": bench_online, "offline": bench_offline,
@@ -1009,6 +1244,7 @@ def main() -> None:
         "resharding": bench_resharding,
         "serve_graph": bench_serve_graph,
         "serve_rpc": bench_serve_rpc,
+        "replica_locality": bench_replica_locality,
         "replica": bench_replica,
         "kernels": bench_kernels, "roofline": bench_roofline,
     }

@@ -81,12 +81,16 @@ SPEC: dict[str, ClassLockSpec] = {
     "GraphRPCServer": ClassLockSpec(locks={
         "_conn_lock": frozenset({"_conns"}),
     }),
-    # the engine's own lock guards the rank cache and telemetry counters,
+    # the engine's own lock guards the rank cache and telemetry counters
+    # — including the replica-plane counters (mirror hit/miss, routed
+    # windows, fan-out histogram), which concurrent flushers race on —
     # independent of the server's coarser lock
     "SnapshotQueryEngine": ClassLockSpec(locks={
         "_rank_lock": frozenset({
             "_rank_cache", "rank_cache_hits", "rank_warm_starts",
             "rank_cold_starts", "vectorized_calls",
+            "mirror_hits", "mirror_misses", "routed_windows",
+            "fanout_hist",
         }),
     }),
 }

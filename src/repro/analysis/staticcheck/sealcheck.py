@@ -43,9 +43,13 @@ SCOPE = ("graph", "core", "launch")
 SHARD_ID_PARAMS = frozenset({"shard_id", "shard", "sid"})
 # containers indexed by shard id; the plane owns exactly its slot
 SHARD_OWNED = frozenset({"shards", "nodes", "shard_apply_seconds"})
-# coordinator-plane state: serial seams between seal rounds
+# coordinator-plane state: serial seams between seal rounds — including
+# the replica plane's guarded state (the retired-shard set mutates only
+# at merge cutovers, and mirror refresh state only at the publish
+# boundary; a per-shard seal closure touching either breaks I10)
 SERIAL_SEAM = frozenset({"coordinator", "ingest_node", "plan", "route",
-                         "access_stats", "migrations", "_views", "planner"})
+                         "access_stats", "migrations", "_views", "planner",
+                         "retired", "_serving", "_mirror_planner"})
 MUTATORS = frozenset({"append", "extend", "insert", "pop", "popitem",
                       "remove", "clear", "update", "add", "discard",
                       "setdefault", "sort"})

@@ -16,6 +16,8 @@ import dataclasses
 from collections import Counter, defaultdict
 from typing import Any, Optional
 
+import numpy as np
+
 from repro.core.versioned import Version, VersionedStore
 
 
@@ -191,6 +193,19 @@ class SplitDecision:
     reason: str
 
 
+@dataclasses.dataclass(frozen=True)
+class MergeDecision:
+    """One planner verdict: fold ``removed`` back into its split sibling
+    ``survivor`` (the inverse of :class:`SplitDecision`). ``load`` is the
+    pair's combined observed load, ``mean_load`` the live-fleet mean at
+    decision time."""
+    survivor: int
+    removed: int
+    load: float
+    mean_load: float
+    reason: str
+
+
 class ShardPlanner:
     """Access-pattern-driven re-sharding policy — the paper's scheduler rule
     (:meth:`ReplicaManager.rebalance`) lifted from per-item replicas to
@@ -207,6 +222,14 @@ class ShardPlanner:
     ``repro.graph.sharded``; this class is pure policy and holds no graph
     state, so it is trivially testable and swappable.
 
+    The inverse lever, leaf coarsening, uses the same ledger: when a
+    mergeable sibling pair's COMBINED load falls below
+    ``merge_threshold`` times the live-fleet mean, :meth:`propose_merge`
+    folds the pair back into one shard — reclaiming fan-out headroom the
+    earlier split spent (which sibling pairs are legal comes from the
+    routing plan's leaf tree, passed in as ``pairs``; policy stays
+    graph-state-free).
+
     Guard rails: never propose beyond ``max_shards``; require
     ``min_epochs`` of observation since the last split (cooldown — stats
     reset on every split, so ``epochs_observed`` restarts) and ``min_load``
@@ -215,33 +238,52 @@ class ShardPlanner:
 
     def __init__(self, *, imbalance_threshold: float = 1.5,
                  min_load: float = 512.0, min_epochs: int = 2,
-                 max_shards: int = 16):
+                 max_shards: int = 16, merge_threshold: float = 0.35):
         if imbalance_threshold <= 1.0:
             raise ValueError("imbalance_threshold must exceed 1.0 "
                              "(1.0 means perfectly balanced)")
+        if not 0.0 < merge_threshold < 1.0:
+            raise ValueError("merge_threshold must sit in (0, 1) "
+                             "(a fraction of the fleet-mean load)")
         self.imbalance_threshold = imbalance_threshold
         self.min_load = min_load
         self.min_epochs = min_epochs
         self.max_shards = max_shards
+        self.merge_threshold = merge_threshold
 
-    def propose(self, loads, *, epochs_observed: int) -> Optional[SplitDecision]:
+    @staticmethod
+    def _live_mask(n: int, live) -> list[bool]:
+        if live is None:
+            return [True] * n
+        mask = [bool(x) for x in live]
+        if len(mask) != n:
+            raise ValueError(f"live mask has {len(mask)} entries for "
+                             f"{n} shards")
+        return mask
+
+    def propose(self, loads, *, epochs_observed: int,
+                live=None) -> Optional[SplitDecision]:
         """One scheduler round: return the split to perform, or None.
 
         ``loads`` is the per-shard load vector (any sequence of floats);
         ``epochs_observed`` is how many sealed epochs the vector spans.
-        Pure function of its inputs — safe to call every epoch.
+        ``live`` optionally masks out retired (merged-away) shards: they
+        are never proposed and their permanently-zero loads are excluded
+        from the mean. Pure function of its inputs — safe to call every
+        epoch.
         """
         loads = [float(x) for x in loads]
-        n_shards = len(loads)
-        if n_shards >= self.max_shards:
+        mask = self._live_mask(len(loads), live)
+        alive = [i for i in range(len(loads)) if mask[i]]
+        if len(alive) >= self.max_shards:
             return None
         if epochs_observed < self.min_epochs:
             return None
-        total = sum(loads)
+        total = sum(loads[i] for i in alive)
         if total < self.min_load:
             return None
-        mean = total / n_shards
-        hot = max(range(n_shards), key=lambda i: loads[i])
+        mean = total / len(alive)
+        hot = max(alive, key=lambda i: loads[i])
         if loads[hot] <= self.imbalance_threshold * mean:
             return None
         return SplitDecision(
@@ -249,6 +291,77 @@ class ShardPlanner:
             reason=(f"shard {hot} load {loads[hot]:.0f} > "
                     f"{self.imbalance_threshold:.2f}x mean {mean:.1f} "
                     f"over {epochs_observed} epochs"))
+
+    def propose_merge(self, loads, *, epochs_observed: int,
+                      pairs, live=None) -> Optional[MergeDecision]:
+        """Return the sibling merge to perform, or None.
+
+        ``pairs`` is the legal ``(survivor, removed)`` sibling pairs from
+        the routing plan (``RoutingPlan.mergeable_pairs()``). Picks the
+        coldest pair, and only if its combined load is below
+        ``merge_threshold`` x the live-fleet mean — the deliberate gap
+        between that and ``imbalance_threshold`` is the hysteresis band
+        that keeps a borderline shard from split/merge flapping. Same
+        ``min_epochs`` / ``min_load`` noise guards as :meth:`propose`
+        (an idle store looks uniformly cold; that is no reason to
+        coarsen it)."""
+        loads = [float(x) for x in loads]
+        mask = self._live_mask(len(loads), live)
+        alive = [i for i in range(len(loads)) if mask[i]]
+        if epochs_observed < self.min_epochs or not alive:
+            return None
+        total = sum(loads[i] for i in alive)
+        if total < self.min_load:
+            return None
+        mean = total / len(alive)
+        best = None
+        for survivor, removed in pairs:
+            if not (mask[survivor] and mask[removed]):
+                continue
+            pair_load = loads[survivor] + loads[removed]
+            if best is None or pair_load < best[0]:
+                best = (pair_load, survivor, removed)
+        if best is None:
+            return None
+        pair_load, survivor, removed = best
+        if pair_load >= self.merge_threshold * mean:
+            return None
+        return MergeDecision(
+            survivor=survivor, removed=removed, load=pair_load,
+            mean_load=mean,
+            reason=(f"siblings ({survivor}, {removed}) combined load "
+                    f"{pair_load:.0f} < {self.merge_threshold:.2f}x mean "
+                    f"{mean:.1f} over {epochs_observed} epochs"))
+
+
+class MirrorPlanner:
+    """Hot-vertex nomination policy for the replica plane: pick which
+    vertices get their adjacency mirrored at the next publish.
+
+    Deliberately a pure function of the access ledger's per-vertex heat
+    vector — stable top-k (ties broken by vertex id), filtered by
+    ``min_heat``, returned as sorted ids. No hysteresis state, so the
+    resulting :class:`~repro.graph.sharded.ReplicaPlan` — and therefore
+    replica-first routing — is deterministic given (plan, ledger), which
+    the property tests assert.
+    """
+
+    def __init__(self, *, mirror_k: int = 64, min_heat: float = 1.0):
+        if mirror_k < 0:
+            raise ValueError("mirror_k must be >= 0")
+        self.mirror_k = mirror_k
+        self.min_heat = min_heat
+
+    def nominate(self, heat) -> np.ndarray:
+        """Sorted int64 ids of the up-to-``mirror_k`` hottest vertices
+        with heat >= ``min_heat``."""
+        h = np.asarray(heat, np.float64).reshape(-1)
+        if not self.mirror_k or not h.size:
+            return np.zeros(0, np.int64)
+        # stable argsort on -heat: equal heat resolves to the lower id
+        order = np.argsort(-h, kind="stable")[:self.mirror_k]
+        hot = order[h[order] >= self.min_heat]
+        return np.sort(hot.astype(np.int64))
 
 
 # ----------------------------------------------------- LM-side sharding policy

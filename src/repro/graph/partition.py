@@ -83,38 +83,68 @@ def partition_graph(view: JoinView, n_parts: int, *, hub_k: int = 0,
 
 
 def partition_graph_sharded(shard_views, *, hub_k: int = 0,
-                            pad_to: int | None = None) -> PartitionedGraph:
-    """Fast path: build a PartitionedGraph from pre-sharded per-shard join
-    views (``ShardedDynamicGraph.shard_views``) without re-bucketing.
+                            pad_to: int | None = None,
+                            placement: str = "dst_hash") -> PartitionedGraph:
+    """Build a PartitionedGraph from pre-sharded per-shard join views
+    (``ShardedDynamicGraph.shard_views``).
 
-    ``partition_graph`` pays an O(P·m) mask-and-gather pass to bucket a
-    global edge list; here each shard's rows ARE its partition's rows
-    already, so construction is one padded copy per shard. The placement is
-    the store's dst-hash layout, which supports the ``allgather`` compute
-    mode (partial aggregates merge by ``psum_scatter`` regardless of edge
-    placement); ``scatter``/``hub`` need src placement and are rejected by
-    ``distributed_join_group_by``.
+    ``placement="dst_hash"`` (default) is the zero-copy fast path: each
+    shard's rows ARE its partition's rows, so construction is one padded
+    copy per shard — but only the ``allgather`` compute mode is valid
+    (partial aggregates merge by ``psum_scatter`` regardless of edge
+    placement). ``placement="src"`` re-buckets the concatenated shard
+    rows by source range in one vectorized grouping pass (no O(P·m)
+    mask-and-gather like ``partition_graph``), making every edge's source
+    value local to its partition — which is what unlocks the
+    ``scatter``/``hub`` modes of ``distributed_join_group_by``, i.e. lets
+    hub-mirror placement compose with the sharded store's views.
     """
     if not shard_views:
         raise ValueError("no shard views")
+    if placement not in ("dst_hash", "src"):
+        raise ValueError(f"unknown placement {placement!r}")
     n_parts = len(shard_views)
     n = ((shard_views[0].n + n_parts - 1) // n_parts) * n_parts
-    widest = max(v.m for v in shard_views)
-    m_pad = pad_to or max(1, widest)
-    if m_pad < widest:
-        raise ValueError(
-            f"pad_to={m_pad} would silently drop edges (widest shard has "
-            f"{widest}); pass pad_to >= {widest}")
-    ps = np.zeros((n_parts, m_pad), np.int32)
-    pd = np.zeros((n_parts, m_pad), np.int32)
-    pm = np.zeros((n_parts, m_pad), bool)
     deg = np.zeros(n, np.float32)
-    for p, view in enumerate(shard_views):
-        m = view.m
-        ps[p, :m] = view.np_src
-        pd[p, :m] = view.np_dst
-        pm[p, :m] = True
+    for view in shard_views:
         deg[:view.n] += view.np_out_deg
+    if placement == "src":
+        n_local = n // n_parts
+        src = np.concatenate([v.np_src for v in shard_views])
+        dst = np.concatenate([v.np_dst for v in shard_views])
+        part_of = src // n_local
+        order = np.argsort(part_of, kind="stable")
+        counts = np.bincount(part_of, minlength=n_parts)
+        widest = max(1, int(counts.max()))
+        m_pad = pad_to or widest
+        if m_pad < widest:
+            raise ValueError(
+                f"pad_to={m_pad} would silently drop edges (widest "
+                f"partition has {widest}); pass pad_to >= {widest}")
+        ps = np.zeros((n_parts, m_pad), np.int32)
+        pd = np.zeros((n_parts, m_pad), np.int32)
+        pm = np.zeros((n_parts, m_pad), bool)
+        bounds = np.r_[0, np.cumsum(counts)]
+        for p in range(n_parts):
+            rows = order[bounds[p]:bounds[p + 1]]
+            ps[p, :len(rows)] = src[rows]
+            pd[p, :len(rows)] = dst[rows]
+            pm[p, :len(rows)] = True
+    else:
+        widest = max(v.m for v in shard_views)
+        m_pad = pad_to or max(1, widest)
+        if m_pad < widest:
+            raise ValueError(
+                f"pad_to={m_pad} would silently drop edges (widest shard "
+                f"has {widest}); pass pad_to >= {widest}")
+        ps = np.zeros((n_parts, m_pad), np.int32)
+        pd = np.zeros((n_parts, m_pad), np.int32)
+        pm = np.zeros((n_parts, m_pad), bool)
+        for p, view in enumerate(shard_views):
+            m = view.m
+            ps[p, :m] = view.np_src
+            pd[p, :m] = view.np_dst
+            pm[p, :m] = True
     hubs = np.argsort(-deg)[:hub_k].astype(np.int32) if hub_k else \
         np.zeros(0, np.int32)
     is_hub = np.zeros(n, bool)
@@ -122,7 +152,7 @@ def partition_graph_sharded(shard_views, *, hub_k: int = 0,
     return PartitionedGraph(n, n_parts, jnp.asarray(ps), jnp.asarray(pd),
                             jnp.asarray(pm), jnp.asarray(deg),
                             jnp.asarray(hubs), jnp.asarray(is_hub),
-                            placement="dst_hash")
+                            placement=placement)
 
 
 def _local_partials(src, dst, mask, values_full, n, exclude_hubs=None):

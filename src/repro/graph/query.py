@@ -38,6 +38,7 @@ import numpy as np
 from repro.core.versioned import Version
 from repro.graph import compute as gc
 from repro.graph.dyngraph import JoinView, prune_retired, prune_views
+from repro.graph.sharded import ReplicaPlan, replica_route
 
 
 # ------------------------------------------------------------- query types
@@ -187,6 +188,34 @@ def query_touch_vertices(queries: Sequence[Query]) -> np.ndarray:
     return np.asarray(touched, np.int64)
 
 
+@dataclasses.dataclass(frozen=True)
+class _SubView:
+    """Edge-restricted stand-in for a :class:`JoinView`: exactly the
+    surface the batched frontier kernels read (``n``/``m``/``src``/
+    ``dst``), holding the routed edge subset instead of the global CSR."""
+    n: int
+    src: np.ndarray
+    dst: np.ndarray
+
+    @property
+    def m(self) -> int:
+        return len(self.src)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutedSnapshot:
+    """Replica-first routing context for one serving snapshot: the
+    snapshot's :class:`~repro.graph.sharded.ReplicaPlan` plus the
+    per-shard views it indexes. Built by the serving layer at publish
+    (both pieces derive from the SAME sealed version — that pairing is
+    the I10 coherence invariant) and handed to
+    :meth:`SnapshotQueryEngine.execute`, which ignores it unless its
+    version matches the view being queried (pinned replays at other
+    versions fall back to the global view)."""
+    plan: ReplicaPlan
+    shard_views: list[JoinView]
+
+
 class SnapshotQueryEngine:
     """Answers query windows against one snapshot view, vectorized.
 
@@ -209,6 +238,13 @@ class SnapshotQueryEngine:
         self.rank_cache_hits = 0
         self.rank_warm_starts = 0
         self.rank_cold_starts = 0
+        # replica-plane telemetry (same lock): per frontier vertex, did
+        # its adjacency come from a mirror; per routed group, how many
+        # shards the frontier closure actually touched
+        self.mirror_hits = 0
+        self.mirror_misses = 0
+        self.routed_windows = 0
+        self.fanout_hist: dict[int, int] = {}
 
     # -- PageRank cache ----------------------------------------------------
     def pagerank(self, view: JoinView) -> gc.PageRankResult:
@@ -263,12 +299,63 @@ class SnapshotQueryEngine:
         with self._rank_lock:
             return sorted(self._rank_cache)
 
+    def replica_stats(self) -> dict:
+        """Snapshot of the replica-routing telemetry (thread-safe)."""
+        with self._rank_lock:
+            total = self.mirror_hits + self.mirror_misses
+            return {"mirror_hits": self.mirror_hits,
+                    "mirror_misses": self.mirror_misses,
+                    "mirror_hit_rate": self.mirror_hits / max(total, 1),
+                    "routed_windows": self.routed_windows,
+                    "fanout_hist": dict(self.fanout_hist)}
+
+    def _route(self, routed: Optional[RoutedSnapshot], view: JoinView,
+               anchors: np.ndarray,
+               hops: Optional[int]) -> Optional[_SubView]:
+        """Resolve one same-kind group through the replica plane, or None
+        to fall back to the global view. The version check is the
+        coherence gate: a RoutedSnapshot only ever speaks for its own
+        sealed version, so a pinned replay at another version can never
+        be answered from these mirrors."""
+        if routed is None or routed.plan.version.pack() != view.version.pack():
+            return None
+        sub_src, sub_dst, fanout, hits, misses = replica_route(
+            routed.plan, routed.shard_views, anchors, hops)
+        # pow2-pad the routed subset on the host, with the kernels' own
+        # phantom-row convention (src 0 gathers harmlessly, dst ``n`` is
+        # the sliced-off segment). Routed edge counts vary per window —
+        # handing raw lengths to ``_padded_edges`` would compile its
+        # eager pad op once per distinct m; pre-bucketing collapses
+        # routed windows onto a few stable shapes, so the replica path
+        # keeps its traces warm even while the global CSR drifts
+        width = gc.pad_pow2(sub_src.size)
+        if width > sub_src.size:
+            extra = width - sub_src.size
+            sub_src = np.concatenate(
+                [sub_src, np.zeros(extra, sub_src.dtype)])
+            sub_dst = np.concatenate(
+                [sub_dst, np.full(extra, view.n, sub_dst.dtype)])
+        with self._rank_lock:
+            self.mirror_hits += hits
+            self.mirror_misses += misses
+            self.routed_windows += 1
+            self.fanout_hist[fanout] = self.fanout_hist.get(fanout, 0) + 1
+        return _SubView(view.n, sub_src, sub_dst)
+
     # -- window execution --------------------------------------------------
-    def execute(self, view: JoinView,
-                queries: Sequence[Query]) -> list[object]:
+    def execute(self, view: JoinView, queries: Sequence[Query], *,
+                routed: Optional[RoutedSnapshot] = None) -> list[object]:
         """Answer a window of queries against ``view`` with one vectorized
         call per (kind, shape) group. Returns values aligned with
-        ``queries``."""
+        ``queries``.
+
+        With ``routed`` (and only when it speaks for ``view``'s exact
+        version), the frontier kernels (k-hop, reachability) run on the
+        replica-routed edge subset instead of the global CSR — byte-
+        identical answers (the subset contains every edge the sweep can
+        read), touching only shards that own or mirror the frontier.
+        Whole-graph kernels (degree top-k, PageRank) always use the
+        global view."""
         values: list[object] = [None] * len(queries)
 
         khops: dict[int, list[int]] = {}        # k -> query indices
@@ -291,7 +378,8 @@ class SnapshotQueryEngine:
 
         for k, idxs in khops.items():
             sources = np.asarray([queries[i].source for i in idxs], np.int32)
-            reach = np.asarray(gc.batched_k_hop(view, sources, k))
+            target = self._route(routed, view, sources, k) or view
+            reach = np.asarray(gc.batched_k_hop(target, sources, k))
             with self._rank_lock:
                 self.vectorized_calls["k_hop"] += 1
             for row, i in enumerate(idxs):
@@ -300,7 +388,10 @@ class SnapshotQueryEngine:
         for max_hops, idxs in reaches.items():
             srcs = np.asarray([queries[i].src for i in idxs], np.int32)
             dsts = np.asarray([queries[i].dst for i in idxs], np.int32)
-            got = np.asarray(gc.batched_reachability(view, srcs, dsts,
+            # frontier expansion only ever walks forward from the
+            # sources, so they alone anchor the route
+            target = self._route(routed, view, srcs, max_hops) or view
+            got = np.asarray(gc.batched_reachability(target, srcs, dsts,
                                                      max_hops))
             with self._rank_lock:
                 self.vectorized_calls["reachability"] += 1

@@ -103,17 +103,25 @@ class ShardLeaf:
 
 @dataclasses.dataclass(frozen=True)
 class RoutingPlan:
-    """Versioned key->shard assignment with consistent-hash range splits.
+    """Versioned key->shard assignment with consistent-hash range splits
+    and merges.
 
     Plan 0 (:meth:`initial`) reproduces the static dst-hash of PR 2
     exactly: shard ``i`` owns ``key % n_base == i`` at depth 0. Each
     :meth:`split` derives the successor plan: the hot shard's leaf gains
-    one refinement bit (bit value 0 stays), and a NEW shard (id = previous
-    shard count) takes the bit-1 half — so only the migrating half-range
-    moves and every other shard's assignment is untouched.
+    one refinement bit (bit value 0 stays), and a NEW shard
+    (id = :attr:`n_total`, the physical allocation counter) takes the
+    bit-1 half — so only the migrating half-range moves and every other
+    shard's assignment is untouched. :meth:`merge` is the inverse: a cold
+    leaf's whole range folds back into its *sibling* (the leaf it was
+    split from, or that was split from it), the merged leaf loses one
+    refinement bit, and the merged-away shard owns nothing under the
+    successor plan (the store retires it in place — shard ids are
+    positional and never reused, which is why ``n_total`` does not shrink).
 
-    Plans are immutable; ``history`` records every split as
-    ``(hot_shard, new_shard, activation_epoch)`` so :meth:`replay`
+    Plans are immutable; ``history`` records every re-sharding event as
+    ``("split", hot, new, activation_epoch)`` /
+    ``("merge", survivor, removed, activation_epoch)`` so :meth:`replay`
     reproduces any plan deterministically (property-tested in
     ``tests/test_resharding.py``). ``activation_epoch`` is the first epoch
     routed by this plan — mutations of earlier epochs were routed (and
@@ -123,31 +131,88 @@ class RoutingPlan:
     activation_epoch: int
     n_base: int
     leaves: tuple[ShardLeaf, ...]
-    history: tuple[tuple[int, int, int], ...] = ()
+    n_total: int = 0
+    history: tuple[tuple[str, int, int, int], ...] = ()
+
+    def __post_init__(self):
+        if self.n_total < len(self.leaves):   # hand-built plan: every leaf
+            object.__setattr__(self, "n_total",  # owner was once allocated
+                               1 + max(leaf.shard for leaf in self.leaves))
 
     @classmethod
     def initial(cls, n_shards: int) -> "RoutingPlan":
         """Plan 0: the static ``key % n_shards`` dst-hash route."""
         return cls(0, 0, n_shards,
-                   tuple(ShardLeaf(i, i, 0, 0) for i in range(n_shards)))
+                   tuple(ShardLeaf(i, i, 0, 0) for i in range(n_shards)),
+                   n_shards)
 
     @classmethod
     def replay(cls, n_base: int,
-               history: tuple[tuple[int, int, int], ...]) -> "RoutingPlan":
-        """Rebuild the plan a split history produced. Deterministic: the
-        same history always yields the same leaves, hence the same
+               history: tuple[tuple[str, int, int, int], ...]
+               ) -> "RoutingPlan":
+        """Rebuild the plan a split/merge history produced. Deterministic:
+        the same history always yields the same leaves, hence the same
         assignment for every key."""
         plan = cls.initial(n_base)
-        for hot, new, activation in history:
-            plan = plan.split(hot, activation)
-            if plan.leaves[-1].shard != new:
-                raise ValueError(f"history names new shard {new} but replay "
-                                 f"produced {plan.leaves[-1].shard}")
+        for op, a, b, activation in history:
+            if op == "split":
+                plan = plan.split(a, activation)
+                if plan.leaves[-1].shard != b:
+                    raise ValueError(
+                        f"history names new shard {b} but replay "
+                        f"produced {plan.leaves[-1].shard}")
+            elif op == "merge":
+                if plan.sibling_of(b) != a:
+                    raise ValueError(
+                        f"history merges shard {b} into {a} but its "
+                        f"sibling under replay is {plan.sibling_of(b)}")
+                plan = plan.merge(b, activation)
+            else:
+                raise ValueError(f"unknown history op {op!r}")
         return plan
 
     @property
     def n_shards(self) -> int:
+        """LIVE shard count (leaves in the plan). After a merge this is
+        smaller than ``n_total``, the physical shards the store holds."""
         return len(self.leaves)
+
+    def leaf_of(self, shard: int) -> ShardLeaf:
+        """The leaf ``shard`` owns, or ``ValueError`` if it owns none
+        (merged away, or never allocated)."""
+        for leaf in self.leaves:
+            if leaf.shard == shard:
+                return leaf
+        raise ValueError(f"shard {shard} owns no leaf under plan "
+                         f"{self.plan_id} (retired or never allocated)")
+
+    def sibling_of(self, shard: int) -> Optional[int]:
+        """The shard owning ``shard``'s sibling leaf — same residue, same
+        depth, paths differing only in the top refinement bit — or None
+        when no such leaf exists (depth 0, or the sibling range was split
+        further). Merging is only defined between siblings: their union
+        is exactly one depth-1 leaf."""
+        leaf = self.leaf_of(shard)
+        if leaf.depth == 0:
+            return None
+        want = leaf.path ^ (1 << (leaf.depth - 1))
+        for other in self.leaves:
+            if (other.residue == leaf.residue and other.depth == leaf.depth
+                    and other.path == want):
+                return other.shard
+        return None
+
+    def mergeable_pairs(self) -> list[tuple[int, int]]:
+        """Current sibling pairs as ``(survivor, removed)`` candidates,
+        bit-0 half first (the shard a split kept) — the planner's merge
+        menu. Deterministic order (by survivor id)."""
+        pairs = []
+        for leaf in self.leaves:
+            if leaf.depth > 0 and not leaf.path & (1 << (leaf.depth - 1)):
+                sib = self.sibling_of(leaf.shard)
+                if sib is not None:
+                    pairs.append((leaf.shard, sib))
+        return sorted(pairs)
 
     def _table(self) -> tuple[np.ndarray, int]:
         """Dense ``(residue, low-D refinement bits) -> shard`` lookup,
@@ -190,19 +255,45 @@ class RoutingPlan:
 
     def split(self, hot_shard: int, activation_epoch: int) -> "RoutingPlan":
         """Successor plan: halve ``hot_shard``'s range, giving the bit-1
-        half to a new shard (id = current shard count)."""
-        leaf = self.leaves[hot_shard]
-        if leaf.shard != hot_shard:
-            raise AssertionError("leaf/shard correspondence broken")
-        new_shard = len(self.leaves)
+        half to a new shard (id = ``n_total``, the next physical slot)."""
+        leaf = self.leaf_of(hot_shard)
+        new_shard = self.n_total
         leaves = list(self.leaves)
-        leaves[hot_shard] = ShardLeaf(hot_shard, leaf.residue,
-                                      leaf.depth + 1, leaf.path)
+        leaves[leaves.index(leaf)] = ShardLeaf(hot_shard, leaf.residue,
+                                               leaf.depth + 1, leaf.path)
         leaves.append(ShardLeaf(new_shard, leaf.residue, leaf.depth + 1,
                                 leaf.path | (1 << leaf.depth)))
         return RoutingPlan(
             self.plan_id + 1, activation_epoch, self.n_base, tuple(leaves),
-            self.history + ((hot_shard, new_shard, activation_epoch),))
+            self.n_total + 1,
+            self.history + (("split", hot_shard, new_shard,
+                             activation_epoch),))
+
+    def merge(self, removed_shard: int,
+              activation_epoch: int) -> "RoutingPlan":
+        """Successor plan: fold ``removed_shard``'s whole range into its
+        sibling's leaf, which loses one refinement bit. The removed shard
+        owns nothing afterwards; ``n_total`` is unchanged (shard ids are
+        never reused). Raises ``ValueError`` when the leaf has no sibling
+        (depth 0, or the sibling range was split further — coarsening can
+        only un-do a split)."""
+        survivor = self.sibling_of(removed_shard)
+        if survivor is None:
+            raise ValueError(
+                f"shard {removed_shard} has no sibling leaf under plan "
+                f"{self.plan_id}; only split halves can merge back")
+        gone = self.leaf_of(removed_shard)
+        kept = self.leaf_of(survivor)
+        merged = ShardLeaf(survivor, kept.residue, kept.depth - 1,
+                           kept.path & ((1 << (kept.depth - 1)) - 1))
+        leaves = list(self.leaves)
+        leaves[leaves.index(kept)] = merged
+        leaves.remove(gone)
+        return RoutingPlan(
+            self.plan_id + 1, activation_epoch, self.n_base, tuple(leaves),
+            self.n_total,
+            self.history + (("merge", survivor, removed_shard,
+                             activation_epoch),))
 
 
 class AccessStats:
@@ -217,16 +308,25 @@ class AccessStats:
     cools off. ``epochs_observed`` counts sealed epochs since the last
     :meth:`reset` (splits reset the ledger — fresh plan, fresh window —
     which doubles as the planner's cooldown clock).
+
+    With ``n_vertices > 0`` the ledger additionally keeps a per-VERTEX
+    EWMA of query touches (``vertex_heat``) — the replica plane's
+    nomination signal: the hottest query anchors get their adjacency
+    mirrored (``core.replica.MirrorPlanner`` turns this vector into the
+    mirror set). Vertex heat decays on the same per-epoch tick as the
+    shard counters but survives :meth:`reset`: a routing-plan change
+    re-bins shard loads, it does not change which *vertices* are hot.
     """
 
     def __init__(self, n_shards: int, *, decay: float = 0.5,
-                 query_weight: float = 1.0):
+                 query_weight: float = 1.0, n_vertices: int = 0):
         if not 0.0 < decay <= 1.0:
             raise ValueError("decay must be in (0, 1]")
         self.decay = decay
         self.query_weight = query_weight
         self.mutations = np.zeros(n_shards, np.float64)
         self.queries = np.zeros(n_shards, np.float64)
+        self.vertex_heat = np.zeros(int(n_vertices), np.float64)
         self.epochs_observed = 0
         self._last_frontier = -1
 
@@ -235,6 +335,17 @@ class AccessStats:
 
     def record_queries(self, counts: np.ndarray) -> None:
         self.queries += counts
+
+    def record_vertex_touches(self, vertex_ids) -> None:
+        """Per-vertex heat feed (query anchors; ids outside [0, n) are
+        ignored — a query may name a vertex that does not exist yet)."""
+        if not self.vertex_heat.size:
+            return
+        ids = np.asarray(vertex_ids, np.int64)
+        ids = ids[(ids >= 0) & (ids < self.vertex_heat.size)]
+        if ids.size:
+            self.vertex_heat += np.bincount(
+                ids, minlength=self.vertex_heat.size)
 
     def on_frontier_advance(self, frontier: int) -> None:
         """Decay tick, one per newly-sealed EPOCH. A straggler catching up
@@ -251,6 +362,8 @@ class AccessStats:
         if self.decay < 1.0:
             self.mutations *= self.decay ** epochs
             self.queries *= self.decay ** epochs
+            if self.vertex_heat.size:
+                self.vertex_heat *= self.decay ** epochs
 
     def loads(self) -> np.ndarray:
         """Per-shard load vector the planner scores."""
@@ -258,8 +371,9 @@ class AccessStats:
 
     def reset(self, n_shards: int) -> None:
         """Start a fresh observation window (sized for ``n_shards``).
-        The frontier watermark is global state, not window state, so it
-        survives the reset."""
+        The frontier watermark and the vertex-heat vector are global
+        state, not window state, so both survive the reset — a plan
+        change re-bins shard loads without cooling hot vertices."""
         self.mutations = np.zeros(n_shards, np.float64)
         self.queries = np.zeros(n_shards, np.float64)
         self.epochs_observed = 0
@@ -454,6 +568,113 @@ def stitch_join_views(version: Version,
                            in_deg, out_deg)
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaPlan:
+    """Seal-coherent replica state for ONE sealed snapshot — the versioned
+    sibling of :class:`RoutingPlan` on the read side.
+
+    ``mirrored`` marks the hot vertices whose COMPLETE live out-adjacency
+    is mirrored in ``(mirror_src, mirror_dst)`` (canonical (dst, src)
+    row order, gathered from the sealed global view — so a mirror row is
+    byte-for-byte a row of the snapshot it mirrors). ``src_presence`` is
+    the locality index: ``src_presence[j, u]`` is True iff shard ``j``
+    holds at least one live out-edge of vertex ``u`` at this snapshot —
+    what :func:`replica_route` consults to skip shards that cannot
+    contribute to a frontier.
+
+    Coherence is by construction, not by protocol (invariant I10 in
+    ``docs/ARCHITECTURE.md``): a plan is built at the publish-at-seal
+    boundary from snapshot ``version``'s own views and is only ever
+    consulted for windows executing at exactly that version — the
+    write-invalidation of the keyed :class:`~repro.core.replica
+    .ReplicaManager` protocol falls out for free, because a mutation can
+    only land in a LATER sealed snapshot, which gets a fresh plan.
+    """
+    plan_id: int                # routing plan this was built under
+    version: Version            # the one snapshot these mirrors serve
+    mirrored: np.ndarray        # (n,) bool — vertex adjacency is mirrored
+    mirror_src: np.ndarray      # (mm,) out-edges of mirrored vertices...
+    mirror_dst: np.ndarray      # (mm,) ...complete at `version`, canonical
+    src_presence: np.ndarray    # (n_shards, n) bool locality index
+
+    @property
+    def n_mirrored(self) -> int:
+        return int(self.mirrored.sum())
+
+
+def replica_route(plan: ReplicaPlan, shard_views: list[JoinView],
+                  anchors, hops: Optional[int]) -> tuple[
+                      np.ndarray, np.ndarray, int, int, int]:
+    """Replica-first routing for one same-kind window: compute the union
+    frontier closure of ``anchors`` (k-hop sources / reachability sources)
+    out to ``hops`` expansions (None = until the frontier drains), pulling
+    each hop's neighbors from the MIRROR for mirrored frontier vertices
+    and only from shards whose ``src_presence`` says they hold out-edges
+    of the non-mirrored rest.
+
+    Returns ``(sub_src, sub_dst, fanout, mirror_hits, mirror_misses)``:
+    the restricted edge set (mirror rows + full rows of every shard
+    touched), the number of distinct shards touched, and per-vertex
+    mirror hit/miss counts. The edge set contains every out-edge of every
+    vertex whose edges a ``hops``-step frontier sweep from ``anchors`` can
+    read — mirrors are complete per vertex and presence is exact per
+    (shard, vertex) — and only rows of the same sealed snapshot, so
+    running the ordinary batched kernels on it is byte-identical to
+    running them on the stitched global view (the replica-plane
+    equivalence tests assert exactly this across split and merge
+    cutovers)."""
+    n = plan.mirrored.shape[0]
+    ids = np.asarray(anchors, np.int64).reshape(-1)
+    frontier = np.unique(ids[(ids >= 0) & (ids < n)])
+    reached = np.zeros(n, bool)
+    reached[frontier] = True
+    touched = np.zeros(len(shard_views), bool)
+    use_mirror = False
+    hits = misses = 0
+    fmask = np.empty(n, bool)
+    expansions = n if hops is None else int(hops)
+    for _ in range(expansions):
+        if not frontier.size:
+            break
+        is_m = plan.mirrored[frontier]
+        f_mir, f_rest = frontier[is_m], frontier[~is_m]
+        hits += int(f_mir.size)
+        misses += int(f_rest.size)
+        parts = []
+        if f_mir.size:
+            use_mirror = True
+            fmask[:] = False
+            fmask[f_mir] = True
+            parts.append(plan.mirror_dst[fmask[plan.mirror_src]])
+        if f_rest.size:
+            touched |= plan.src_presence[:, f_rest].any(axis=1)
+            fmask[:] = False
+            fmask[f_rest] = True
+            for j in np.flatnonzero(plan.src_presence[:, f_rest]
+                                    .any(axis=1)):
+                v = shard_views[j]
+                parts.append(v.np_dst[fmask[v.np_src]])
+        if not parts:
+            break
+        neigh = np.concatenate(parts).astype(np.int64, copy=False)
+        frontier = np.unique(neigh[~reached[neigh]])
+        reached[frontier] = True
+    src_parts, dst_parts = [], []
+    if use_mirror:
+        src_parts.append(plan.mirror_src)
+        dst_parts.append(plan.mirror_dst)
+    for j in np.flatnonzero(touched):
+        src_parts.append(shard_views[j].np_src)
+        dst_parts.append(shard_views[j].np_dst)
+    if src_parts:
+        sub_src = np.concatenate(src_parts)
+        sub_dst = np.concatenate(dst_parts)
+    else:
+        sub_src = np.zeros(0, np.int32)
+        sub_dst = np.zeros(0, np.int32)
+    return sub_src, sub_dst, int(touched.sum()), hits, misses
+
+
 class ShardedDynamicGraph:
     """N DynamicGraph shards behind an IngestNode + SnapshotCoordinator,
     re-shardable at runtime from observed access patterns.
@@ -523,7 +744,8 @@ class ShardedDynamicGraph:
             self.route = self.plan.assign
         self.planner = planner
         self.access_stats = AccessStats(n_shards, decay=stats_decay,
-                                        query_weight=query_weight)
+                                        query_weight=query_weight,
+                                        n_vertices=n_max)
         self.shards = [DynamicGraph(n_max, e_max, churn_threshold)
                        for _ in range(n_shards)]
         self.nodes = [DataNode(i, on_seal=self._on_seal(i))
@@ -536,17 +758,31 @@ class ShardedDynamicGraph:
         self._views: dict[int, JoinView] = {}
         self._last_version = -1
         self._ingested_packed: list[int] = []   # every ingested version, asc
-        # completed split records: {"plan_id", "source", "target",
-        # "activation_epoch", "migrated_edges"} — telemetry + plan-aware GC
+        # completed re-sharding records: {"kind", "plan_id", "source",
+        # "target", "activation_epoch", "migrated_edges"} — telemetry +
+        # plan-aware GC (a merge's source is the retired shard)
         self.migrations: list[dict] = []
+        # shards merged away: they stay in ``shards``/``nodes`` (shard ids
+        # are positional across the store, and pre-cutover snapshots still
+        # resolve from their tombstoned rows) but the plan routes them
+        # nothing, so they seal empty epochs from the cutover on
+        self.retired: set[int] = set()
         # per-shard cumulative apply seconds — the benchmark's critical-path
         # model of parallel shard ingestion reads these
         self.shard_apply_seconds = [0.0] * n_shards
 
     @property
     def n_shards(self) -> int:
-        """Current shard count (grows by one per split)."""
+        """PHYSICAL shard count (grows by one per split; never shrinks —
+        a merge retires a shard in place rather than deleting it, because
+        shard ids are positional and old snapshots still resolve from the
+        retired shard's rows). Live count is ``len(live_shards())``."""
         return len(self.shards)
+
+    def live_shards(self) -> list[int]:
+        """Shard ids the active plan routes keys to (physical minus
+        retired), ascending."""
+        return [i for i in range(len(self.shards)) if i not in self.retired]
 
     def _on_seal(self, shard_id: int) -> Callable[[int, list], None]:
         def on_seal(epoch: int, payloads: list) -> None:
@@ -793,6 +1029,10 @@ class ShardedDynamicGraph:
             return
         self.access_stats.record_queries(
             np.bincount(self.plan.assign(ids), minlength=self.n_shards))
+        # per-vertex heat feeds hot-vertex mirror nomination (replica
+        # plane); deliberately NOT fed from the ingest hot path — query
+        # skew, not write skew, is what mirrors exploit
+        self.access_stats.record_vertex_touches(ids)
 
     def is_quiescent(self) -> bool:
         """True when nothing is in flight: every local frontier equals the
@@ -840,9 +1080,18 @@ class ShardedDynamicGraph:
             raise RuntimeError(
                 "re-sharding requires a quiescent store: seal every "
                 "ingested epoch on every shard first")
+        if hot_shard in self.retired:
+            raise ValueError(f"shard {hot_shard} is retired (merged away)")
         activation = self.coordinator.global_frontier + 1
         new_plan = self.plan.split(hot_shard, activation)
-        target = new_plan.n_shards - 1
+        # the new leaf's shard id, allocated from the plan's monotone
+        # physical counter — NOT n_shards-1, which under-counts once a
+        # merge has retired a leaf
+        target = new_plan.leaves[-1].shard
+        if target != len(self.shards):   # pragma: no cover - plan invariant
+            raise AssertionError(
+                f"plan allocated shard {target}, store has "
+                f"{len(self.shards)} physical shards")
         shard = DynamicGraph(self.n_max, self.e_max, self.churn_threshold)
         node = DataNode(target, on_seal=self._on_seal(target))
         # the new shard joins AT the cutover boundary: marking every prior
@@ -858,8 +1107,64 @@ class ShardedDynamicGraph:
         self.route = new_plan.assign
         self.ingest_node.route = new_plan.assign
         self.access_stats.reset(self.n_shards)
-        summary = {"plan_id": new_plan.plan_id, "source": hot_shard,
-                   "target": target, "activation_epoch": activation,
+        summary = {"kind": "split", "plan_id": new_plan.plan_id,
+                   "source": hot_shard, "target": target,
+                   "activation_epoch": activation,
+                   "migrated_edges": migrated}
+        self.migrations.append(summary)
+        return summary
+
+    def merge_shards(self, removed_shard: int) -> dict:
+        """Coarsen a split back: fold ``removed_shard``'s half-range into
+        its split sibling (the leaf differing only in the newest path
+        bit), the inverse of :meth:`split_shard`.
+
+        Same cutover discipline as a split — quiescent store, successor
+        plan activating at the next epoch, the retiring shard's live rows
+        riding the ordinary ingest path as (delete @ source, add @
+        survivor) payload rows at version ``(activation, 0)``, applied
+        atomically when that epoch seals. Under the merged plan EVERY
+        live key of the removed leaf routes to the survivor, so the
+        migration drains the shard completely; it is then retired in
+        place (see :attr:`retired`) — pre-cutover snapshots keep
+        resolving from its tombstoned rows, post-cutover it seals empty
+        epochs. Views are byte-identical across the cutover at every
+        sealed version (the merge-coherence tests assert this).
+
+        Returns a summary dict (also appended to :attr:`migrations`).
+
+        Raises:
+            ValueError: custom-route store, retired/unknown shard, or a
+                shard whose leaf has no split sibling (depth-0 base
+                leaves never merge).
+            RuntimeError: store not quiescent.
+        """
+        if self.plan is None:
+            raise ValueError("re-sharding needs plan-based routing "
+                             "(construct without a custom `route`)")
+        if removed_shard in self.retired:
+            raise ValueError(f"shard {removed_shard} is already retired")
+        if not self.is_quiescent():
+            raise RuntimeError(
+                "re-sharding requires a quiescent store: seal every "
+                "ingested epoch on every shard first")
+        survivor = self.plan.sibling_of(removed_shard)
+        if survivor is None:
+            raise ValueError(
+                f"shard {removed_shard} has no split sibling to merge "
+                "into (only split halves can coarsen back)")
+        activation = self.coordinator.global_frontier + 1
+        new_plan = self.plan.merge(removed_shard, activation)
+        migrated = self._dispatch_migration(removed_shard, survivor,
+                                            new_plan, activation)
+        self.plan = new_plan
+        self.route = new_plan.assign
+        self.ingest_node.route = new_plan.assign
+        self.retired.add(removed_shard)
+        self.access_stats.reset(self.n_shards)
+        summary = {"kind": "merge", "plan_id": new_plan.plan_id,
+                   "source": removed_shard, "target": survivor,
+                   "activation_epoch": activation,
                    "migrated_edges": migrated}
         self.migrations.append(summary)
         return summary
@@ -899,24 +1204,38 @@ class ShardedDynamicGraph:
 
     def maybe_reshard(self) -> Optional[dict]:
         """Planner tick: consult the :class:`ShardPlanner` on the current
-        access ledger and execute the proposed split, if any.
+        access ledger and execute the proposed split — or, failing that,
+        the proposed cold-sibling merge — if any.
 
         Safe to call every epoch — returns None (without touching the
         store) when there is no planner, the store is not quiescent, or
-        the planner declines. On a split, returns the
-        :meth:`split_shard` summary with the planner's ``reason``
-        attached."""
+        the planner declines both ways. Returns the
+        :meth:`split_shard` / :meth:`merge_shards` summary with the
+        planner's ``reason`` attached. Retired shards are masked out of
+        both decisions (their permanently-zero loads would deflate the
+        mean every live shard is compared against)."""
         if self.planner is None or self.plan is None:
             return None
         if not self.is_quiescent():
             return None
+        loads = self.access_stats.loads()
+        live = np.ones(self.n_shards, bool)
+        if self.retired:
+            live[list(self.retired)] = False
         decision = self.planner.propose(
-            self.access_stats.loads(),
-            epochs_observed=self.access_stats.epochs_observed)
-        if decision is None:
+            loads, epochs_observed=self.access_stats.epochs_observed,
+            live=live)
+        if decision is not None:
+            summary = self.split_shard(decision.shard)
+            summary["reason"] = decision.reason
+            return summary
+        merge = self.planner.propose_merge(
+            loads, epochs_observed=self.access_stats.epochs_observed,
+            pairs=self.plan.mergeable_pairs(), live=live)
+        if merge is None:
             return None
-        summary = self.split_shard(decision.shard)
-        summary["reason"] = decision.reason
+        summary = self.merge_shards(merge.removed)
+        summary["reason"] = merge.reason
         return summary
 
     def plan_floor(self) -> int:
@@ -1005,6 +1324,34 @@ class ShardedDynamicGraph:
                                                   use_kernel=use_kernel))
         self._views[key] = view
         return view
+
+    def build_replica_plan(self, version: Version, hot_ids,
+                           use_kernel: bool = False) -> ReplicaPlan:
+        """Materialize the replica plane for one sealed snapshot: mirror
+        the complete live out-adjacency of ``hot_ids`` (gathered from the
+        stitched global view, so mirror rows are byte-for-byte snapshot
+        rows in canonical order) and build the per-shard ``src_presence``
+        locality index from the per-shard views.
+
+        Called by the serving layer at the publish-at-seal boundary —
+        rebuilding from ``version``'s own views at every publish IS the
+        coherence protocol (invariant I10): a mirror can never be staler
+        than the snapshot it is consulted for, because it is derived from
+        it. Raises ``ValueError`` if ``version`` is not globally sealed."""
+        self._gate(version)
+        views = self.shard_views(version, use_kernel=use_kernel)
+        n = self.n_max
+        mirrored = np.zeros(n, bool)
+        ids = np.asarray(hot_ids, np.int64).reshape(-1)
+        mirrored[ids[(ids >= 0) & (ids < n)]] = True
+        g = self.join_view(version, use_kernel=use_kernel)
+        sel = mirrored[g.np_src]
+        presence = np.zeros((len(views), n), bool)
+        for j, v in enumerate(views):
+            presence[j, v.np_src] = True
+        pid = self.plan.plan_id if self.plan is not None else -1
+        return ReplicaPlan(pid, version, mirrored,
+                           g.np_src[sel], g.np_dst[sel], presence)
 
     def gc_views(self, keep_latest: int = 4) -> int:
         """Ladder-GC every shard's view cache plus the stitched cache,

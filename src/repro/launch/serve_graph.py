@@ -56,6 +56,7 @@ from typing import Callable, Iterable, Mapping, Optional, Sequence
 
 import numpy as np
 
+from repro.core.replica import MirrorPlanner
 from repro.core.versioned import Version
 from repro.graph.dyngraph import (JoinView, MutationBatch, prune_retired,
                                   prune_views, synthesize_churn_stream)
@@ -63,7 +64,8 @@ from repro.graph.query import (ERR_BAD_PIN, ERR_BAD_QUERY, ERR_DEADLINE,
                                ERR_OVERLOADED,
                                DegreeTopK, KHop, PageRankQuery, Query,
                                QueryRequest, QueryResponse, QueryResult,
-                               Reachability, SnapshotQueryEngine, query_kind,
+                               Reachability, RoutedSnapshot,
+                               SnapshotQueryEngine, query_kind,
                                query_touch_vertices)
 from repro.graph.sharded import ShardedDynamicGraph
 
@@ -80,7 +82,15 @@ class ServerStats:
     ``shed_overload`` / ``shed_deadline`` count typed load-shed and
     expired-budget responses; ``per_kind_latency_s`` maps each query kind
     to its ``{"p50", "p95", "p99"}`` submit-to-answer quantiles over the
-    recent window (absent kinds were never served)."""
+    recent window (absent kinds were never served).
+
+    Replica-plane telemetry: ``mirror_hits`` / ``mirror_misses`` count
+    frontier vertices resolved from mirrors vs shards across every routed
+    window; ``fanout_hist`` maps shards-touched-per-routed-group (as a
+    string key, for the JSON wire) to occurrence count, ``mean_fanout``
+    its mean (`-1.0` before any routed window); ``mirrored_vertices`` is
+    the serving snapshot's mirror set size; ``split_events`` /
+    ``merge_events`` count completed re-sharding cutovers of each kind."""
     served: int
     windows: int
     queue_depth: int
@@ -102,6 +112,15 @@ class ServerStats:
     rank_cache_hits: int
     rank_warm_starts: int
     rank_cold_starts: int
+    mirror_hits: int
+    mirror_misses: int
+    mirror_hit_rate: float
+    routed_windows: int
+    fanout_hist: Mapping[str, int]
+    mean_fanout: float
+    mirrored_vertices: int
+    split_events: int
+    merge_events: int
 
 
 @dataclasses.dataclass
@@ -171,6 +190,8 @@ class GraphQueryServer:
                  view_keep: int = 8, rank_keep: int = 4, gc_every: int = 1,
                  prewarm_pagerank: bool = False, auto_reshard: bool = True,
                  max_pending: int = 1024, pipeline_reads: bool = True,
+                 replicate_hot: Optional[bool] = None, mirror_k: int = 64,
+                 mirror_min_heat: float = 1.0,
                  **pagerank_kw):
         self.graph = graph
         self.engine = SnapshotQueryEngine(**pagerank_kw)
@@ -181,13 +202,27 @@ class GraphQueryServer:
         self.auto_reshard = auto_reshard
         self.max_pending = max_pending
         self.pipeline_reads = pipeline_reads
+        # replica plane: mirror the hottest vertices' adjacency at every
+        # publish and route frontier queries replica-first. Defaults on
+        # when the prerequisites hold — plan-based routing (the locality
+        # index needs per-shard views keyed by the plan) and pipelined
+        # reads (mirrors refresh at the publish boundary)
+        if replicate_hot is None:
+            replicate_hot = pipeline_reads and graph.plan is not None
+        self.replicate_hot = replicate_hot
+        self._mirror_planner = MirrorPlanner(mirror_k=mirror_k,
+                                             min_heat=mirror_min_heat)
         self.reshard_events: list[dict] = []
         # write plane: every touch of mutable graph/engine state
         self._ingest_lock = threading.RLock()
         # read plane: pending queue + published snapshot + serving counters
         self._serve_lock = threading.Lock()
         self._pending: list[_Entry] = []
-        self._serving: Optional[tuple[Version, JoinView]] = None
+        # (version, stitched view, replica routing context or None) — one
+        # atomic pointer, so a window can never pair a view with another
+        # version's mirrors (invariant I10)
+        self._serving: Optional[
+            tuple[Version, JoinView, Optional[RoutedSnapshot]]] = None
         self._published: dict[int, JoinView] = {}
         self._touch_buffer: list[np.ndarray] = []
         self._seals = 0
@@ -237,8 +272,18 @@ class GraphQueryServer:
                 return
             view = self.graph.join_view(v)
             floor = self.graph.plan_floor()
+            routed = None
+            if self.replicate_hot:
+                # mirror refresh rides the publish: nominate from the
+                # ledger's vertex heat, rebuild the plan from THIS sealed
+                # version's own views — a mirror is exactly as fresh as
+                # the snapshot it serves, never staler (invariant I10)
+                hot = self._mirror_planner.nominate(
+                    self.graph.access_stats.vertex_heat)
+                plan = self.graph.build_replica_plan(v, hot)
+                routed = RoutedSnapshot(plan, self.graph.shard_views(v))
         with self._serve_lock:
-            self._serving = (v, view)
+            self._serving = (v, view, routed)
             self._published[v.pack()] = view
             # same ladder retention as the graph-side caches, and retired
             # routing plans drop outright — but never the serving entry
@@ -405,7 +450,7 @@ class GraphQueryServer:
             # snapshot under the write lock — behind in-flight applies
             with self._ingest_lock:
                 v = self.graph.latest_sealed()
-                serving = ((v, self.graph.join_view(v))
+                serving = ((v, self.graph.join_view(v), None)
                            if v is not None else None)
         if serving is None and any(e.request.pin_version is None
                                    for e in live):
@@ -424,10 +469,11 @@ class GraphQueryServer:
         failed_pins: list[tuple[_Entry, QueryResponse]] = []
         groups: dict[int, list[_Entry]] = {}
         views: dict[int, tuple[Version, JoinView]] = {}
+        routed = serving[2] if serving is not None else None
         for e in live:
             pin = e.request.pin_version
             if pin is None:
-                v, view = serving
+                v, view = serving[0], serving[1]
             else:
                 v = pin
                 packed = pin.pack()
@@ -452,8 +498,12 @@ class GraphQueryServer:
             for packed in sorted(groups):
                 v, view = views[packed]
                 entries = groups[packed]
+                # replica-first routing only for the serving snapshot the
+                # mirrors were built for (the engine re-checks versions,
+                # so a stale pairing degrades to the global view)
                 values = self.engine.execute(
-                    view, [e.request.query for e in entries])
+                    view, [e.request.query for e in entries],
+                    routed=routed)
                 done = time.perf_counter()
                 for e, val in zip(entries, values, strict=True):
                     answered[id(e)] = QueryResponse.answered(
@@ -571,6 +621,15 @@ class GraphQueryServer:
             cached_views = len(self.graph._views)
             n_shards = self.graph.n_shards
             plan = self.graph.plan
+            split_events = sum(1 for m in self.graph.migrations
+                               if m.get("kind", "split") == "split")
+            merge_events = sum(1 for m in self.graph.migrations
+                               if m.get("kind") == "merge")
+        replica = self.engine.replica_stats()
+        hist = replica["fanout_hist"]
+        total_routed = sum(hist.values())
+        mean_fanout = (sum(k * c for k, c in hist.items()) / total_routed
+                       if total_routed else -1.0)
         with self._serve_lock:
             lat = np.asarray(self.latencies_s)
             p50, p95, p99 = _quantiles(lat)
@@ -599,7 +658,17 @@ class GraphQueryServer:
                 vectorized_calls=dict(self.engine.vectorized_calls),
                 rank_cache_hits=self.engine.rank_cache_hits,
                 rank_warm_starts=self.engine.rank_warm_starts,
-                rank_cold_starts=self.engine.rank_cold_starts)
+                rank_cold_starts=self.engine.rank_cold_starts,
+                mirror_hits=replica["mirror_hits"],
+                mirror_misses=replica["mirror_misses"],
+                mirror_hit_rate=replica["mirror_hit_rate"],
+                routed_windows=replica["routed_windows"],
+                fanout_hist={str(k): c for k, c in sorted(hist.items())},
+                mean_fanout=mean_fanout,
+                mirrored_vertices=(serving[2].plan.n_mirrored
+                                   if serving and serving[2] else 0),
+                split_events=split_events,
+                merge_events=merge_events)
         return stats
 
 

@@ -491,13 +491,19 @@ def _check_plan_invariants(n_base, plans, keys):
     np.testing.assert_array_equal(
         RoutingPlan.replay(n_base, final.history).assign(keys),
         final.assign(keys))
-    # a split only ever moves keys OUT of the split shard
+    # a split only ever moves keys OUT of the split shard; a merge only
+    # ever moves the removed shard's keys onto the survivor
     for prev, nxt in zip(plans, plans[1:], strict=False):
-        hot, new, _act = nxt.history[-1]
+        op, a, b, _act = nxt.history[-1]
         pa, na = prev.assign(keys), nxt.assign(keys)
-        stay = pa != hot
-        np.testing.assert_array_equal(pa[stay], na[stay])
-        assert np.isin(na[~stay], [hot, new]).all()
+        if op == "split":
+            stay = pa != a
+            np.testing.assert_array_equal(pa[stay], na[stay])
+            assert np.isin(na[~stay], [a, b]).all()
+        else:
+            moved = pa == b
+            np.testing.assert_array_equal(pa[~moved], na[~moved])
+            assert (na[moved] == a).all()
 
 
 def test_routing_plan_determinism_fixed_histories():
