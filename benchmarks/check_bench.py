@@ -30,7 +30,12 @@ Several checks are absolute rather than baseline-relative:
   replica-first routing must touch >= 1.5x fewer shards per window than
   global-view execution and improve the p99 round trip > 1.15x, with
   every answer replay-audited byte-identical (I10: mirrors are never
-  visible in answers).
+  visible in answers);
+* the ``serve_fastpath`` low-latency claims: the two-lane scheduler +
+  versioned result cache + publish-time prewarm must improve the
+  cheap-kind p99 round trip >= 2x over the single-queue baseline under
+  an expensive-query convoy with concurrent ingest, with non-zero cache
+  hits and zero replay-oracle mismatches.
 
     python benchmarks/check_bench.py --fresh BENCH_ingest.json \
         --baseline /tmp/baseline.json
@@ -59,6 +64,10 @@ REQUIRED = {
                          "p50_improvement", "p99_improvement",
                          "answers_audited", "oracle_mismatches",
                          "no_replica", "replicated"],
+    "serve_fastpath": ["cheap_p99_improvement", "cheap_p50_improvement",
+                       "cache_hits", "cache_hit_rate", "prewarm_runs",
+                       "n_clients", "answers_audited", "oracle_mismatches",
+                       "single_queue", "fastpath"],
 }
 SHARD_COUNTS = ("1", "2", "4")
 SHARD_METRICS = ["parallel_wall_s", "parallel_muts_per_s",
@@ -93,6 +102,18 @@ RPC_MIN_CLIENTS = 8
 # smaller than the global CSR), with zero replay-oracle mismatches
 REPLICA_FANOUT_GATE = 1.5
 REPLICA_P99_GATE = 1.15
+# the fast-path serving claims, absolute: under an expensive-query
+# convoy (~10% multi-iteration PageRank windows) with concurrent ingest,
+# the two-lane + result-cache + prewarm discipline must improve the
+# cheap-kind (k-hop + degree-top-k) p99 round trip >= 2x over the PR 8
+# single-queue baseline. The convoy is structural, not a tuning
+# artifact: in the single queue every cheap round trip can land behind
+# an in-flight PageRank window (tens of ms), while the cheap lane
+# drains independently and cache hits skip execution entirely — so the
+# gap holds on any host, one-core included. Cache hits must be non-zero
+# (the zipf-hot workload guarantees repeat fingerprints within a
+# version) and every audited answer byte-identical to the replay oracle.
+FASTPATH_P99_GATE = 2.0
 # (path-description, getter) pairs of scale-free ratios compared 2x
 REGRESSION_FACTOR = 2.0
 
@@ -117,6 +138,11 @@ def _ratio_metrics(report: dict) -> dict[str, float]:
     # while the convoy effect in the median holds on any host
     out["serve_rpc.p50_improvement"] = \
         report["serve_rpc"]["p50_improvement"]
+    # the cheap-lane tail ratio: the convoy dodge is structural (see the
+    # absolute gate), so a collapse here means the lanes or the cache
+    # silently stopped doing their job, not a slower host
+    out["serve_fastpath.cheap_p99_improvement"] = \
+        report["serve_fastpath"]["cheap_p99_improvement"]
     return out
 
 
@@ -234,6 +260,33 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
                 "diverged from the replay oracle")
         if not rl.get("answers_audited"):
             errors.append("replica_locality: replay oracle audited "
+                          "no answers")
+    # the fast-path claim, absolute: the two-lane + result-cache +
+    # prewarm discipline must dodge the expensive-query convoy the
+    # single-queue baseline pays, with real cache hits and a clean audit
+    fp = fresh.get("serve_fastpath", {})
+    if fp:
+        p99_imp = fp.get("cheap_p99_improvement")
+        if p99_imp is not None and p99_imp < FASTPATH_P99_GATE:
+            errors.append(
+                "serve_fastpath: cheap-lane p99 improves only "
+                f"x{p99_imp:.2f} over the single-queue baseline "
+                f"(>= {FASTPATH_P99_GATE}x required)")
+        if not fp.get("cache_hits"):
+            errors.append(
+                "serve_fastpath: the versioned result cache served no "
+                "hits on the zipf-hot workload")
+        n_clients = fp.get("n_clients", 0)
+        if n_clients < RPC_MIN_CLIENTS:
+            errors.append(
+                f"serve_fastpath: measured with {n_clients} concurrent "
+                f"clients (>= {RPC_MIN_CLIENTS} required)")
+        if fp.get("oracle_mismatches", 0) != 0:
+            errors.append(
+                f"serve_fastpath: {fp['oracle_mismatches']} served "
+                "answers diverged from the replay oracle")
+        if not fp.get("answers_audited"):
+            errors.append("serve_fastpath: replay oracle audited "
                           "no answers")
     if "1" in shards and "speedup_vs_single" in shards.get("1", {}):
         ratio = shards["1"]["speedup_vs_single"]

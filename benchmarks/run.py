@@ -782,25 +782,33 @@ def bench_serve_rpc(quick=False):
         stop = threading.Event()
         lat: list[list[float]] = [[] for _ in range(n_clients)]
         answered: list[list] = [[] for _ in range(n_clients)]
+        failures: list[BaseException] = []
 
         def client(ci: int) -> None:
             rng = np.random.default_rng(1000 + ci)
-            with GraphRPCClient(host, port) as c:
-                while not stop.is_set():
-                    roll = rng.random()
-                    if roll < 0.7:
-                        q = KHop(int(rng.integers(0, n)), k=2)
-                    elif roll < 0.9:
-                        q = Reachability(int(rng.integers(0, n)),
-                                         int(rng.integers(0, n)),
-                                         max_hops=6)
-                    else:
-                        q = DegreeTopK(8)
-                    t0 = time.perf_counter()
-                    r = c.query(q)
-                    lat[ci].append(time.perf_counter() - t0)
-                    assert r.ok, r.error
-                    answered[ci].append((q, r))
+            # a failure inside a client thread must fail the RUN, not
+            # silently thin the sample set and skew the percentiles —
+            # collect it here and re-raise on the main thread after join
+            try:
+                with GraphRPCClient(host, port) as c:
+                    while not stop.is_set():
+                        roll = rng.random()
+                        if roll < 0.7:
+                            q = KHop(int(rng.integers(0, n)), k=2)
+                        elif roll < 0.9:
+                            q = Reachability(int(rng.integers(0, n)),
+                                             int(rng.integers(0, n)),
+                                             max_hops=6)
+                        else:
+                            q = DegreeTopK(8)
+                        t0 = time.perf_counter()
+                        r = c.query(q)
+                        lat[ci].append(time.perf_counter() - t0)
+                        assert r.ok, r.error
+                        answered[ci].append((q, r))
+            except BaseException as exc:
+                failures.append(exc)
+                stop.set()
 
         threads = [threading.Thread(target=client, args=(i,))
                    for i in range(n_clients)]
@@ -815,6 +823,8 @@ def bench_serve_rpc(quick=False):
             t.join()
         wall = time.perf_counter() - t0
         front.stop()
+        if failures:
+            raise failures[0]
         flat = np.asarray([x for per in lat for x in per])
         s = server.stats()
         mode = {
@@ -914,6 +924,302 @@ def bench_serve_rpc(quick=False):
     out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
     _merge_bench_json(out, {"serve_rpc": report})
     row("serve_rpc.report", 0, str(out))
+
+
+# ----------------------------------------------- low-latency fast path
+# (ROADMAP tail-latency item: versioned result cache + two-lane
+# scheduler + publish-time trace prewarm, measured against the PR 8
+# single-queue discipline)
+def bench_serve_fastpath(quick=False):
+    """Cheap-query tail latency under an expensive-query convoy, with
+    concurrent ingest.
+
+    Eight socket clients drive a mixed workload — zipf-hot k-hop and
+    degree-top-k (the cheap kinds; the hot pool makes the result cache
+    earn hits), cold reachability, and ~10% PageRank (the convoy
+    generator: a multi-iteration window that holds the engine for tens
+    of milliseconds) — against BOTH serving disciplines: ``single_queue``
+    (``two_lane=False, result_cache=False, prewarm_traces=False`` — the
+    PR 8 shape: one dispatcher, one queue, every cheap round trip can
+    land behind an in-flight PageRank window) and ``fastpath`` (the
+    two-lane scheduler + versioned result cache + publish-time trace
+    prewarm). Reports per-kind pooled p50/p95/p99 round trips and the
+    cheap-lane (k-hop + degree-top-k pooled) improvements
+    ``check_bench.py`` gates: ``cheap_p99_improvement >= 2.0`` — the
+    convoy is structural, not a tuning artifact — plus a non-zero cache
+    hit rate and a zero-mismatch replay audit (every successful
+    non-PageRank answer from both modes recomputed byte-for-byte on a
+    single non-sharded store at its served version; PageRank's
+    warm-start chain is serving-history-dependent, so it is workload,
+    not auditable oracle).
+
+    Same repeat discipline as ``serve_rpc``: paired repeats in
+    alternating order, improvements from percentiles pooled across
+    repeats. Lands in ``BENCH_ingest.json`` under ``serve_fastpath``.
+
+    The stream separates the two costs the axis must keep apart. One
+    big seed batch sets a large STANDING edge set — that is what makes
+    a PageRank window expensive (per-iteration cost is O(edges)), i.e.
+    the convoy the baseline pays. The churn epochs after it are small
+    (adds balanced by 50% self-deletes), so each apply is a short
+    burst: the apply plane's host-side chain walks hold the GIL, and on
+    a small host a long apply would floor BOTH modes' cheap tails at
+    the burst length, drowning the scheduling difference under
+    ingest-thread noise. Small epochs keep that floor low while the
+    live edge count stays inside ONE pow2 bucket for the whole run
+    (seed + churn steady state both inside ``(P/2, P]`` for the bucket
+    ``P`` the warmup primed) — so every jit trace stays hot in both
+    modes and the axis measures the scheduling disciplines, not retrace
+    luck: a mid-run bucket step would put a multi-hundred-ms compile
+    storm into whichever mode's window it lands in (on a 1-core host
+    the prewarm thread's compiles steal the only core from the cheap
+    lane — exactly the one-off cost prewarm exists to absorb, but a
+    latency-percentile axis must not gate on where that one-off
+    lands). Bucket-step retrace behavior is covered by the prewarm
+    tests, not timed here.
+    """
+    import dataclasses
+    import os
+    import pathlib
+    import threading
+
+    from repro.core.versioned import Version
+    from repro.graph.dyngraph import DynamicGraph, synthesize_churn_stream
+    from repro.graph.query import (DegreeTopK, KHop, PageRankQuery,
+                                   Reachability, SnapshotQueryEngine,
+                                   query_kind)
+    from repro.graph.sharded import ShardedDynamicGraph
+    from repro.launch.rpc import GraphRPCClient, GraphRPCServer
+    from repro.launch.serve_graph import CHEAP_KINDS, GraphQueryServer
+
+    n = 2_000 if quick else 6_000
+    # the full run doubles the graph, which doubles every kernel — so it
+    # runs more epochs (a p99 needs many convoy events averaged, not
+    # longer ones) and TRIMS the PageRank sweep to hold the convoy at a
+    # few hundred ms. The convoy is structural at any size — every
+    # single-queue cheap query can land behind one — but its absolute
+    # size sets where the DODGED tail lands: on a small host the lanes
+    # timeshare one core, so an expensive window several seconds long
+    # floors the cheap lane's p99 at raw compute scarcity in both modes
+    # and the axis stops measuring scheduling. Same reason the churn
+    # burst stays at the quick size: the apply plane's GIL-held chain
+    # walks stall both modes equally, and a 2x burst just dilutes the
+    # tail ratio with mode-independent noise.
+    epochs = 24 if quick else 48
+    max_iter = 150 if quick else 40
+    # bucket-stable sizing (see docstring): seed 100k + churn steady
+    # state stays in (65k, 131k] for quick; 200k + steady state in
+    # (131k, 262k] for full. The churn's 50% deletes only ever target
+    # its own stream's edges, so the two streams concatenate cleanly.
+    seed_edges = 100_000 if quick else 200_000
+    churn_adds = 6_000
+    ingest_delay_s = 0.08 if quick else 0.1
+    n_clients = 8
+    repeats = 3
+    hot_pool_size = 16
+    churn = synthesize_churn_stream(n, epochs - 1, churn_adds,
+                                    seed=12, delete_frac=0.5)
+    batches = (synthesize_churn_stream(n, 1, seed_edges, seed=11)
+               + [dataclasses.replace(
+                      b, version=Version(b.version.epoch + 1, 0))
+                  for b in churn])
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    hot_pool = np.random.default_rng(2).integers(0, n, hot_pool_size)
+
+    def pick_query(rng):
+        roll = rng.random()
+        if roll < 0.55:
+            # zipf-hot: most k-hops land on the small hot pool, so the
+            # fastpath's cache sees the same fingerprints again within a
+            # version while the baseline recomputes every time
+            src = (int(hot_pool[rng.integers(0, hot_pool_size)])
+                   if rng.random() < 0.8 else int(rng.integers(0, n)))
+            return KHop(src, k=2)
+        if roll < 0.75:
+            return Reachability(int(rng.integers(0, n)),
+                                int(rng.integers(0, n)), max_hops=6)
+        if roll < 0.9:
+            return DegreeTopK(8)
+        return PageRankQuery(top_k=8)
+
+    def warmup(server):
+        rng = np.random.default_rng(7)
+        for sz in (8, 4, 2, 1):
+            for _ in range(sz):
+                server.submit(KHop(int(rng.integers(0, n)), k=2))
+            server.flush()
+            for _ in range(sz):
+                server.submit(Reachability(int(rng.integers(0, n)),
+                                           int(rng.integers(0, n)),
+                                           max_hops=6))
+            server.flush()
+        server.submit(DegreeTopK(8))
+        server.submit(PageRankQuery(top_k=8))
+        server.flush()
+
+    def run_mode(fastpath: bool):
+        sg = ShardedDynamicGraph(4, n, e_max)
+        # tol=0 pins every PageRank window at the full max_iter sweep —
+        # the convoy must be a fixed structural cost, not whatever the
+        # warm-start chain happens to converge to on the low-churn
+        # stream (identical in both modes, so the comparison is fair)
+        server = GraphQueryServer(
+            sg, two_lane=fastpath, result_cache=fastpath,
+            prewarm_traces=fastpath, tol=0.0, max_iter=max_iter)
+        server.step(batches[0])
+        warmup(server)
+        front = GraphRPCServer(server, port=0).start()
+        host, port = front.address
+        stop = threading.Event()
+        lat: list[list] = [[] for _ in range(n_clients)]
+        answered: list[list] = [[] for _ in range(n_clients)]
+        failures: list[BaseException] = []
+
+        def client(ci: int) -> None:
+            rng = np.random.default_rng(500 + ci)
+            # a failure inside a client thread must fail the RUN, not
+            # silently thin the sample set and skew the percentiles —
+            # collect it here and re-raise on the main thread after join
+            try:
+                with GraphRPCClient(host, port) as c:
+                    while not stop.is_set():
+                        q = pick_query(rng)
+                        t0 = time.perf_counter()
+                        r = c.query(q)
+                        lat[ci].append((query_kind(q),
+                                        time.perf_counter() - t0))
+                        assert r.ok, r.error
+                        answered[ci].append((q, r))
+            except BaseException as exc:
+                failures.append(exc)
+                stop.set()
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        t0 = time.perf_counter()
+        ingest = server.start_background_ingest(iter(batches[1:]),
+                                                delay_s=ingest_delay_s)
+        for t in threads:
+            t.start()
+        ingest.join()               # concurrent ingest defines the window
+        stop.set()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        s = server.stats()
+        front.stop()
+        if failures:
+            raise failures[0]
+        flat = [x for per in lat for x in per]
+        mode = {
+            "qps": float(len(flat) / wall),
+            "queries": int(len(flat)),
+            "windows": int(s.windows),
+            "wall_s": float(wall),
+            "kind_lat": flat,        # pooled across repeats by aggregate()
+            "cache_hits": int(s.result_cache_hits),
+            "cache_misses": int(s.result_cache_misses),
+            "cache_hit_rate": float(s.result_cache_hit_rate),
+            "prewarm_runs": int(s.prewarm_runs),
+        }
+        return mode, [(q, r) for per in answered for q, r in per
+                      if not isinstance(q, PageRankQuery)]
+
+    runs = {False: [], True: []}
+    for rep in range(repeats):
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        for fastpath in order:
+            runs[fastpath].append(run_mode(fastpath))
+
+    def pooled(mode_runs, kinds=None):
+        vals = np.asarray([t for m, _ in mode_runs
+                           for k, t in m["kind_lat"]
+                           if kinds is None or k in kinds])
+        return {q: float(np.percentile(vals, p))
+                for q, p in (("p50_s", 50), ("p95_s", 95), ("p99_s", 99))}
+
+    def aggregate(mode_runs):
+        agg = pooled(mode_runs)
+        agg["per_kind"] = {
+            kind: pooled(mode_runs, {kind})
+            for kind in ("k_hop", "reachability", "degree_topk",
+                         "pagerank")}
+        agg["cheap"] = pooled(mode_runs, CHEAP_KINDS)
+        agg.update({
+            "qps": float(np.median([m["qps"] for m, _ in mode_runs])),
+            "queries": int(sum(m["queries"] for m, _ in mode_runs)),
+            "windows": int(sum(m["windows"] for m, _ in mode_runs)),
+            "wall_s": float(sum(m["wall_s"] for m, _ in mode_runs)),
+            "repeats": len(mode_runs),
+            "cache_hits": int(sum(m["cache_hits"] for m, _ in mode_runs)),
+            "cache_hit_rate": float(np.mean(
+                [m["cache_hit_rate"] for m, _ in mode_runs])),
+            "prewarm_runs": int(sum(m["prewarm_runs"]
+                                    for m, _ in mode_runs)),
+        })
+        return agg
+
+    single = aggregate(runs[False])
+    fast = aggregate(runs[True])
+    cheap_p50_improvement = single["cheap"]["p50_s"] / fast["cheap"]["p50_s"]
+    cheap_p99_improvement = single["cheap"]["p99_s"] / fast["cheap"]["p99_s"]
+
+    # replay oracle: one non-sharded store, every non-PageRank answer
+    # from BOTH modes recomputed at its served version, byte for byte
+    g = DynamicGraph(n, e_max)
+    for b in batches:
+        g.apply(b)
+    eng = SnapshotQueryEngine(result_cache=False)
+    by_version: dict[int, list] = {}
+    for _, answers in runs[False] + runs[True]:
+        for q, r in answers:
+            by_version.setdefault(r.version.pack(), []).append((q, r))
+    audited = mismatches = 0
+    for packed, items in sorted(by_version.items()):
+        view = g.join_view(Version.unpack(packed))
+        vals = eng.execute(view, [q for q, _ in items])
+        for (q, r), exp in zip(items, vals, strict=True):
+            if isinstance(exp, tuple):
+                same = all(np.asarray(a).tobytes() == np.asarray(b).tobytes()
+                           for a, b in zip(r.value, exp, strict=True))
+            elif isinstance(exp, np.ndarray):
+                same = np.asarray(r.value).tobytes() == exp.tobytes()
+            else:
+                same = r.value == exp
+            audited += 1
+            mismatches += 0 if same else 1
+    assert mismatches == 0, f"{mismatches}/{audited} answers diverged"
+
+    row("serve_fastpath.single_queue", single["cheap"]["p50_s"],
+        f"cheap_p99_us={single['cheap']['p99_s']*1e6:.1f};"
+        f"qps={single['qps']:.1f}")
+    row("serve_fastpath.fastpath", fast["cheap"]["p50_s"],
+        f"cheap_p99_us={fast['cheap']['p99_s']*1e6:.1f};"
+        f"qps={fast['qps']:.1f};hit_rate={fast['cache_hit_rate']:.2f};"
+        f"prewarms={fast['prewarm_runs']}")
+    row("serve_fastpath.improvement", 0,
+        f"cheap_p50=x{cheap_p50_improvement:.2f};"
+        f"cheap_p99=x{cheap_p99_improvement:.2f};clients={n_clients}")
+    row("serve_fastpath.oracle_audit", 0,
+        f"audited={audited};mismatches={mismatches}")
+    report = {
+        "n_vertices": n, "epochs": epochs, "seed_edges": seed_edges,
+        "churn_adds_per_epoch": churn_adds, "pagerank_max_iter": max_iter,
+        "n_clients": n_clients, "hot_pool": hot_pool_size,
+        "cpu_count": os.cpu_count(),
+        "single_queue": single,
+        "fastpath": fast,
+        "cheap_p50_improvement": float(cheap_p50_improvement),
+        "cheap_p99_improvement": float(cheap_p99_improvement),
+        "cache_hits": int(fast["cache_hits"]),
+        "cache_hit_rate": float(fast["cache_hit_rate"]),
+        "prewarm_runs": int(fast["prewarm_runs"]),
+        "answers_audited": int(audited),
+        "oracle_mismatches": int(mismatches),
+    }
+    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
+    _merge_bench_json(out, {"serve_fastpath": report})
+    row("serve_fastpath.report", 0, str(out))
 
 
 # ------------------------------------------- replica-coherent read plane
@@ -1234,8 +1540,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: online,offline,ingest,"
                          "ingest_graph,ingest_sharded,resharding,"
-                         "serve_graph,serve_rpc,replica_locality,replica,"
-                         "kernels,roofline")
+                         "serve_graph,serve_rpc,serve_fastpath,"
+                         "replica_locality,replica,kernels,roofline")
     args = ap.parse_args()
     benches = {
         "online": bench_online, "offline": bench_offline,
@@ -1244,6 +1550,7 @@ def main() -> None:
         "resharding": bench_resharding,
         "serve_graph": bench_serve_graph,
         "serve_rpc": bench_serve_rpc,
+        "serve_fastpath": bench_serve_fastpath,
         "replica_locality": bench_replica_locality,
         "replica": bench_replica,
         "kernels": bench_kernels, "roofline": bench_roofline,

@@ -69,9 +69,15 @@ SPEC: dict[str, ClassLockSpec] = {
             "graph", "_seals", "reshard_events",
         }),
         "_serve_lock": frozenset({
-            "_pending", "_serving", "_published", "_touch_buffer",
+            "_pending_cheap", "_pending_expensive", "_serving",
+            "_published", "_touch_buffer", "_touch_buffered",
             "served", "windows", "shed_overload", "shed_deadline",
-            "latencies_s", "_kind_latencies",
+            "latencies_s", "_kind_latencies", "_lane_latencies",
+        }),
+        # prewarm mailbox: the one-slot coalescing target the publish
+        # path hands to the trace-prewarm worker, plus its run counter
+        "_prewarm_lock": frozenset({
+            "_prewarm_target", "prewarm_runs",
         }),
     }),
     # the RPC listener's only shared mutable state is the live-connection
@@ -84,13 +90,18 @@ SPEC: dict[str, ClassLockSpec] = {
     # the engine's own lock guards the rank cache and telemetry counters
     # — including the replica-plane counters (mirror hit/miss, routed
     # windows, fan-out histogram), which concurrent flushers race on —
-    # independent of the server's coarser lock
+    # independent of the server's coarser lock. The versioned result
+    # cache and the prewarm signature memory ride the same lock: the
+    # cheap/expensive dispatchers and the prewarm worker all touch them
     "SnapshotQueryEngine": ClassLockSpec(locks={
         "_rank_lock": frozenset({
             "_rank_cache", "rank_cache_hits", "rank_warm_starts",
             "rank_cold_starts", "vectorized_calls",
             "mirror_hits", "mirror_misses", "routed_windows",
             "fanout_hist",
+            "_result_cache", "result_cache_hits", "result_cache_misses",
+            "result_cache_evictions", "_warm_signatures",
+            "_warmed_traces",
         }),
     }),
 }

@@ -46,10 +46,14 @@ SHARD_OWNED = frozenset({"shards", "nodes", "shard_apply_seconds"})
 # coordinator-plane state: serial seams between seal rounds — including
 # the replica plane's guarded state (the retired-shard set mutates only
 # at merge cutovers, and mirror refresh state only at the publish
-# boundary; a per-shard seal closure touching either breaks I10)
+# boundary; a per-shard seal closure touching either breaks I10), and
+# the trace-prewarm worker handoff (spawned/fed only from the publish
+# path, which the write lock serializes — never from a shard closure)
 SERIAL_SEAM = frozenset({"coordinator", "ingest_node", "plan", "route",
                          "access_stats", "migrations", "_views", "planner",
-                         "retired", "_serving", "_mirror_planner"})
+                         "retired", "_serving", "_mirror_planner",
+                         "_prewarm_thread", "_prewarm_wake",
+                         "_prewarm_target"})
 MUTATORS = frozenset({"append", "extend", "insert", "pop", "popitem",
                       "remove", "clear", "update", "add", "discard",
                       "setdefault", "sort"})

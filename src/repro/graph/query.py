@@ -20,6 +20,22 @@ calls as possible —
   ``ladder_keep`` retention the view caches use, so serving memory stays
   bounded under churn.
 
+The serving fast path adds a **versioned result cache** on top: every
+answered query is memoized under ``(packed version, kind,
+canonical-args fingerprint)`` — see :func:`query_fingerprint` — so a
+repeated query at the same sealed snapshot is a dict lookup, not a jitted
+call. Invalidation is by construction, not by protocol: a mutation can
+only land in a LATER sealed version, which is a brand-new key space, so
+no entry can ever go stale (the same argument as the replica plane's I10
+coherence). A pinned replay keys into its own pinned version's space and
+therefore can never observe another version's cache. The outer
+per-version dict is GC'd by the same ladder the rank cache uses; the
+inner per-version dict is capped (``result_cache_entries``). The engine
+also records the jit-trace *signatures* windows actually hit (kind,
+static args, pow2-padded source width) so :meth:`SnapshotQueryEngine
+.warm_traces` — the publish-time prewarm — can retrace exactly the
+shapes real clients use against a new snapshot's edge bucket.
+
 The engine is deliberately snapshot-agnostic — the serving loop
 (``launch.serve_graph``) picks WHICH snapshot (always
 ``ShardedDynamicGraph.latest_sealed()``) and hands the view in. It is
@@ -166,6 +182,31 @@ class QueryResult:
     latency_s: float = 0.0
 
 
+def query_fingerprint(q: Query, n: int) -> Optional[tuple]:
+    """Canonical cache key for one query at a snapshot with ``n``
+    vertices, or None for an unknown query type.
+
+    Canonicalization makes semantically identical argument spellings
+    share one entry: a falsy reachability hop bound (``None`` or ``0``)
+    means "unbounded" on every execution path, so both spell the same
+    key; a degree top-k larger than ``n`` returns all ``n`` vertices, so
+    ``k`` clamps to ``n``. The snapshot version is NOT part of this
+    fingerprint — the result cache keys the version as the outer dict, so
+    sealing an epoch opens a fresh key space (invalidation by
+    construction)."""
+    if isinstance(q, KHop):
+        return ("k_hop", int(q.source), int(q.k))
+    if isinstance(q, Reachability):
+        return ("reachability", int(q.src), int(q.dst),
+                int(q.max_hops or 0))
+    if isinstance(q, DegreeTopK):
+        return ("degree_topk", min(int(q.k), int(n)), q.direction)
+    if isinstance(q, PageRankQuery):
+        return ("pagerank",
+                None if q.top_k is None else int(q.top_k))
+    return None
+
+
 def query_touch_vertices(queries: Sequence[Query]) -> np.ndarray:
     """Vertex ids a query window touches — the access-pattern feed for the
     re-sharding planner.
@@ -216,17 +257,50 @@ class RoutedSnapshot:
     shard_views: list[JoinView]
 
 
+_MISS = object()          # result-cache sentinel (None is a legal value)
+
+
+def _freeze_result(val: object) -> object:
+    """Make a to-be-memoized value safe to hand out by reference. Cache
+    hits return the stored object itself, so an in-process caller that
+    mutated a returned ndarray would poison every later hit at that
+    version; marking arrays read-only (recursing into tuples) turns that
+    silent corruption into an immediate ``ValueError`` at the caller."""
+    if isinstance(val, np.ndarray):
+        val.flags.writeable = False
+    elif isinstance(val, tuple):
+        for item in val:
+            _freeze_result(item)
+    return val
+# jit-trace signature memory: enough distinct (kind, static-arg, width)
+# shapes for a realistic client mix, small enough that prewarm stays a
+# few-millisecond background errand
+MAX_WARM_SIGNATURES = 64
+
+
 class SnapshotQueryEngine:
     """Answers query windows against one snapshot view, vectorized.
 
     ``pagerank_kw`` is forwarded to :func:`compute.pagerank` (damping, tol,
     max_iter); keep it fixed across a serving session so the warm-start
     chain stays meaningful.
+
+    ``result_cache`` enables the versioned result cache (see module
+    docs); ``result_cache_entries`` caps the per-version entry count —
+    past it, new results are served but not memoized (counted in
+    ``result_cache_evictions``), so one version of a high-cardinality
+    query stream cannot pin unbounded memory.
     """
 
-    def __init__(self, **pagerank_kw):
+    def __init__(self, *, result_cache: bool = True,
+                 result_cache_entries: int = 4096, **pagerank_kw):
         self.pagerank_kw = pagerank_kw
+        self.result_cache = result_cache
+        self.result_cache_entries = result_cache_entries
         self._rank_cache: dict[int, gc.PageRankResult] = {}
+        # packed version -> {query fingerprint -> answered value}; the
+        # versioned result cache (ladder-GC'd with the rank cache)
+        self._result_cache: dict[int, dict[tuple, object]] = {}
         # serving runs queries on one thread while the ingest thread
         # prewarms/GCs the rank cache — this lock is the cache's own, so
         # cache integrity never depends on the server's coarser lock
@@ -238,6 +312,19 @@ class SnapshotQueryEngine:
         self.rank_cache_hits = 0
         self.rank_warm_starts = 0
         self.rank_cold_starts = 0
+        self.result_cache_hits = 0
+        self.result_cache_misses = 0
+        self.result_cache_evictions = 0
+        # jit-trace signatures real windows hit (insertion-ordered, so
+        # overflow drops the stalest) — what warm_traces() replays
+        self._warm_signatures: dict[tuple, None] = {}
+        # (signature, edge width) pairs already replayed: a signature is
+        # only re-run when the snapshot's pow2 edge bucket steps (a new
+        # width IS a new trace), so steady-state publishes cost nothing —
+        # a replay executes the kernel for real, and burning a core on
+        # sweeps whose traces are already warm starves serving on small
+        # hosts for zero cache benefit
+        self._warmed_traces: set[tuple] = set()
         # replica-plane telemetry (same lock): per frontier vertex, did
         # its adjacency come from a mirror; per routed group, how many
         # shards the frontier closure actually touched
@@ -292,12 +379,47 @@ class SnapshotQueryEngine:
         Thread-safe (holds the cache lock)."""
         with self._rank_lock:
             dropped = prune_retired(self._rank_cache, retire_below)
-            return dropped + prune_views(self._rank_cache, keep_latest)
+            dropped += prune_views(self._rank_cache, keep_latest)
+            # the result cache rides the same ladder: whole key spaces
+            # (versions) drop at once, entries never drop individually
+            evicted = prune_retired(self._result_cache, retire_below)
+            evicted += prune_views(self._result_cache, keep_latest)
+            self.result_cache_evictions += evicted
+            return dropped + evicted
 
     @property
     def cached_rank_versions(self) -> list[int]:
         with self._rank_lock:
             return sorted(self._rank_cache)
+
+    def result_cache_stats(self) -> dict:
+        """Snapshot of the result-cache telemetry (thread-safe):
+        hit/miss/eviction counters, live entry count across every cached
+        version, and the hit rate over all lookups so far."""
+        with self._rank_lock:
+            total = self.result_cache_hits + self.result_cache_misses
+            return {"hits": self.result_cache_hits,
+                    "misses": self.result_cache_misses,
+                    "evictions": self.result_cache_evictions,
+                    "entries": sum(len(s)
+                                   for s in self._result_cache.values()),
+                    "hit_rate": self.result_cache_hits / max(total, 1)}
+
+    def has_cached_result(self, version: Version, q: Query,
+                          n: Optional[int] = None) -> bool:
+        """True when ``q``'s answer at ``version`` is already memoized —
+        the serving layer's lane classifier asks this so an expensive-kind
+        query that will be a dict lookup can ride the cheap lane. ``n``
+        is the snapshot's vertex count (only degree-top-k fingerprints
+        clamp on it; omitting it leaves k unclamped). Thread-safe; a
+        False answer may race a concurrent insert (the query then just
+        executes on the expensive lane, still correct)."""
+        fp = query_fingerprint(q, n if n is not None else 1 << 30)
+        if fp is None:
+            return False
+        with self._rank_lock:
+            slot = self._result_cache.get(version.pack())
+            return slot is not None and fp in slot
 
     def replica_stats(self) -> dict:
         """Snapshot of the replica-routing telemetry (thread-safe)."""
@@ -310,8 +432,8 @@ class SnapshotQueryEngine:
                     "fanout_hist": dict(self.fanout_hist)}
 
     def _route(self, routed: Optional[RoutedSnapshot], view: JoinView,
-               anchors: np.ndarray,
-               hops: Optional[int]) -> Optional[_SubView]:
+               anchors: np.ndarray, hops: Optional[int], *,
+               record: bool = True) -> Optional[_SubView]:
         """Resolve one same-kind group through the replica plane, or None
         to fall back to the global view. The version check is the
         coherence gate: a RoutedSnapshot only ever speaks for its own
@@ -335,19 +457,34 @@ class SnapshotQueryEngine:
                 [sub_src, np.zeros(extra, sub_src.dtype)])
             sub_dst = np.concatenate(
                 [sub_dst, np.full(extra, view.n, sub_dst.dtype)])
-        with self._rank_lock:
-            self.mirror_hits += hits
-            self.mirror_misses += misses
-            self.routed_windows += 1
-            self.fanout_hist[fanout] = self.fanout_hist.get(fanout, 0) + 1
+        if record:
+            # prewarm passes record=False: a trace-warming sweep must not
+            # pollute the mirror-hit / fan-out telemetry real windows feed
+            with self._rank_lock:
+                self.mirror_hits += hits
+                self.mirror_misses += misses
+                self.routed_windows += 1
+                self.fanout_hist[fanout] = \
+                    self.fanout_hist.get(fanout, 0) + 1
         return _SubView(view.n, sub_src, sub_dst)
 
     # -- window execution --------------------------------------------------
     def execute(self, view: JoinView, queries: Sequence[Query], *,
-                routed: Optional[RoutedSnapshot] = None) -> list[object]:
+                routed: Optional[RoutedSnapshot] = None,
+                use_cache: Optional[bool] = None) -> list[object]:
         """Answer a window of queries against ``view`` with one vectorized
         call per (kind, shape) group. Returns values aligned with
         ``queries``.
+
+        With the result cache enabled (``use_cache`` overrides the
+        engine-wide default), each query is first looked up under
+        ``(view.version, fingerprint)`` — hits skip compute entirely and
+        are byte-identical to the value originally computed at this
+        version, because they ARE that value (the cached object itself;
+        memoized ndarrays are marked read-only, so a caller that tried to
+        mutate a hit would fault instead of poisoning the cache). The
+        misses execute through the grouped path below and are then
+        memoized, subject to the per-version entry cap.
 
         With ``routed`` (and only when it speaks for ``view``'s exact
         version), the frontier kernels (k-hop, reachability) run on the
@@ -356,6 +493,148 @@ class SnapshotQueryEngine:
         read), touching only shards that own or mirror the frontier.
         Whole-graph kernels (degree top-k, PageRank) always use the
         global view."""
+        cache_on = self.result_cache if use_cache is None else use_cache
+        if not cache_on:
+            return self._execute_groups(view, queries, routed)
+        values: list[object] = [None] * len(queries)
+        fps = [query_fingerprint(q, view.n) for q in queries]
+        key = view.version.pack()
+        misses: list[int] = []
+        with self._rank_lock:
+            slot = self._result_cache.get(key)
+            for i, fp in enumerate(fps):
+                hit = (slot.get(fp, _MISS)
+                       if slot is not None and fp is not None else _MISS)
+                if hit is not _MISS:
+                    self.result_cache_hits += 1
+                    values[i] = hit
+                else:
+                    self.result_cache_misses += 1
+                    misses.append(i)
+        if not misses:
+            return values
+        computed = self._execute_groups(
+            view, [queries[i] for i in misses], routed)
+        for i, val in zip(misses, computed, strict=True):
+            values[i] = val
+        with self._rank_lock:
+            slot = self._result_cache.setdefault(key, {})
+            for i in misses:
+                fp = fps[i]
+                if fp is None or fp in slot:
+                    continue
+                if len(slot) >= self.result_cache_entries:
+                    # cap reached: serve but don't memoize (no point
+                    # churning entries — a version's key space is
+                    # short-lived; the ladder drops it whole)
+                    self.result_cache_evictions += 1
+                    continue
+                slot[fp] = _freeze_result(values[i])
+        return values
+
+    def _record_signatures(self, khops, reaches, topks, n: int) -> None:
+        """Remember the jit-trace signatures this window hit so a later
+        :meth:`warm_traces` can replay them against a new snapshot.
+        Insertion-ordered with a cap: overflow drops the stalest."""
+        sigs = []
+        for k, idxs in khops.items():
+            sigs.append(("k_hop", int(k), gc.pad_pow2(len(idxs))))
+        for _max_hops, idxs in reaches.items():
+            sigs.append(("reachability", gc.pad_pow2(len(idxs))))
+        for (k, direction), _idxs in topks.items():
+            sigs.append(("degree_topk", min(int(k), n), direction))
+        if not sigs:
+            return
+        with self._rank_lock:
+            for sig in sigs:
+                self._warm_signatures.pop(sig, None)   # refresh recency
+                self._warm_signatures[sig] = None
+            while len(self._warm_signatures) > MAX_WARM_SIGNATURES:
+                self._warm_signatures.pop(
+                    next(iter(self._warm_signatures)))
+
+    def warm_traces(self, view: JoinView,
+                    routed: Optional[RoutedSnapshot] = None, *,
+                    max_anchors: int = 8) -> int:
+        """Publish-time trace prewarm: replay every recorded jit-trace
+        signature against ``view`` so the first real query after a seal
+        pays a dict-cache hit, not a compile/retrace.
+
+        A live stream grows the snapshot's pow2 edge bucket over time;
+        whenever the bucket steps, every batched-kernel trace goes cold
+        and the first window at the new bucket pays the retrace. Running
+        the recorded signatures here (on the ingest side's background
+        prewarm thread, against the freshly published immutable view)
+        moves that cost off the query path. With ``routed``, the hottest
+        ``max_anchors`` mirrored vertices additionally warm the
+        replica-routed buckets (via :meth:`_route` with telemetry
+        recording off — prewarm is invisible in the mirror stats).
+
+        Idempotent and safe to race with queries or the next seal: it
+        only reads the immutable snapshot and the jit trace caches, and
+        touches no result-cache or telemetry state real windows read.
+        A ``(signature, edge width)`` pair is replayed at most once —
+        the width is the trace key, so replaying a combination that
+        already ran would execute a full kernel sweep for a guaranteed
+        jit-cache hit; steady-state publishes (no bucket step) are
+        therefore near-free. Returns the number of replays executed
+        (0 once everything recorded is warm at the current widths)."""
+        with self._rank_lock:
+            sigs = list(self._warm_signatures)
+        hot = None
+        if routed is not None \
+                and routed.plan.version.pack() == view.version.pack() \
+                and routed.plan.n_mirrored:
+            hot = np.flatnonzero(routed.plan.mirrored)[:max_anchors] \
+                .astype(np.int32)
+        m = int(view.src.size)
+        warmed = 0
+
+        def fresh(key):
+            with self._rank_lock:
+                if key in self._warmed_traces:
+                    return False
+                if len(self._warmed_traces) > 4096:   # distinct widths are
+                    self._warmed_traces.clear()       # few; belt and braces
+                self._warmed_traces.add(key)
+            return True
+
+        for sig in sigs:
+            if sig[0] == "k_hop":
+                _, k, width = sig
+                anchors = np.zeros(width, np.int32)
+                if fresh((sig, m)):
+                    gc.batched_k_hop(view, anchors, k)
+                    warmed += 1
+                if hot is not None:
+                    sub = self._route(routed, view, hot, k, record=False)
+                    if sub is not None and fresh((sig, int(sub.src.size))):
+                        gc.batched_k_hop(sub, anchors, k)
+                        warmed += 1
+            elif sig[0] == "reachability":
+                _, width = sig
+                anchors = np.zeros(width, np.int32)
+                # src == dst, so the while_loop exits on round one: the
+                # warm is the trace, not a graph sweep
+                if fresh((sig, m)):
+                    gc.batched_reachability(view, anchors, anchors, 1)
+                    warmed += 1
+                if hot is not None:
+                    sub = self._route(routed, view, hot, 1, record=False)
+                    if sub is not None and fresh((sig, int(sub.src.size))):
+                        gc.batched_reachability(sub, anchors, anchors, 1)
+                        warmed += 1
+            elif sig[0] == "degree_topk":
+                _, k, direction = sig
+                if fresh((sig, m)):
+                    gc.degree_topk(view, k, direction=direction)
+                    warmed += 1
+        return warmed
+
+    def _execute_groups(self, view: JoinView, queries: Sequence[Query],
+                        routed: Optional[RoutedSnapshot]) -> list[object]:
+        """The grouped vectorized path under :meth:`execute` (one jitted
+        call per (kind, shape) group; no caching at this layer)."""
         values: list[object] = [None] * len(queries)
 
         khops: dict[int, list[int]] = {}        # k -> query indices
@@ -375,6 +654,7 @@ class SnapshotQueryEngine:
                 ranks.append(i)
             else:
                 raise TypeError(f"unknown query type {type(q).__name__}")
+        self._record_signatures(khops, reaches, topks, view.n)
 
         for k, idxs in khops.items():
             sources = np.asarray([queries[i].source for i in idxs], np.int32)

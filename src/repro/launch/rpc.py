@@ -30,9 +30,12 @@ Response frames mirror :class:`~repro.graph.query.QueryResponse`::
      "latency_s": <float>}
 
 Threading model: one accept thread, one reader thread per connection, and
-ONE dispatcher thread that runs the shared scheduler
-(``GraphQueryServer.run_window``) whenever work is queued. Readers never
-execute queries — they decode, pass the typed
+one dispatcher thread PER SCHEDULER LANE (cheap/expensive; a single
+dispatcher when the server runs single-queue) that runs the shared
+scheduler (``GraphQueryServer.run_window``) whenever work is queued on
+its lane — so a multi-iteration PageRank window on the expensive
+dispatcher never blocks the cheap dispatcher's dict-lookup windows.
+Readers never execute queries — they decode, pass the typed
 :class:`~repro.graph.query.QueryRequest` to ``submit_request`` with an
 ``on_done`` that frames the response back onto their own connection, and
 go back to reading. Admission control therefore happens at the server's
@@ -223,16 +226,34 @@ class GraphRPCServer:
                                     backlog=self.backlog, reuse_port=False)
         sock.settimeout(0.2)        # so the accept loop notices stop()
         self._sock = sock
-        for name, target in (("rpc-accept", self._accept_loop),
-                             ("rpc-dispatch", self._dispatch_loop)):
-            t = threading.Thread(target=target, daemon=True, name=name)
+        threads = [("rpc-accept", self._accept_loop, ())]
+        if self.server.two_lane:
+            # one dispatcher per scheduler lane: the cheap dispatcher
+            # keeps draining dict-lookup/one-sweep windows while the
+            # expensive dispatcher works through PageRank convoys in
+            # budgeted slices — the lanes share the engine, not the queue
+            threads += [
+                ("rpc-dispatch-cheap", self._dispatch_loop,
+                 ("cheap", self.server.work_cheap)),
+                ("rpc-dispatch-exp", self._dispatch_loop,
+                 ("expensive", self.server.work_expensive))]
+        else:
+            threads += [("rpc-dispatch", self._dispatch_loop,
+                         (None, self.server.work_available))]
+        for name, target, args in threads:
+            t = threading.Thread(target=target, args=args, daemon=True,
+                                 name=name)
             t.start()
             self._threads.append(t)
         return self
 
     def stop(self) -> None:
         self._stop.set()
-        self.server.work_available.set()     # wake the dispatcher
+        # wake every dispatcher flavor
+        self.server.work_available.set()
+        self.server.work_cheap.set()
+        self.server.work_expensive.set()
+        self.server.stop_prewarm()
         if self._sock is not None:
             self._sock.close()
         with self._conn_lock:
@@ -263,12 +284,17 @@ class GraphRPCServer:
             t.start()
             self._threads.append(t)
 
-    def _dispatch_loop(self) -> None:
-        """The one thread that runs query windows for every connection —
-        this is where cross-client batching happens: all requests queued
-        since the last window (no matter which reader enqueued them)
-        execute as one scheduler window."""
-        work = self.server.work_available
+    def _dispatch_loop(self, lane=None, work=None) -> None:
+        """A thread that runs query windows for every connection — this
+        is where cross-client batching happens: all requests queued on
+        this dispatcher's lane since its last window (no matter which
+        reader enqueued them) execute as one scheduler window. With
+        ``two_lane`` there are two of these — one per lane, each waiting
+        on its own wake event — so cheap windows never queue behind an
+        expensive window's compute; the single-dispatcher (``lane=None``)
+        flavor preserves the PR 8 behavior for the benchmark baseline."""
+        if work is None:
+            work = self.server.work_available
         while not self._stop.is_set():
             if not work.wait(timeout=0.2):
                 continue
@@ -276,7 +302,7 @@ class GraphRPCServer:
                 time.sleep(self.batch_wait_s)   # let a batch accumulate
             work.clear()
             try:
-                self.server.run_window()
+                self.server.run_window(lane)
             except Exception:
                 # all-or-nothing window: everything undelivered was
                 # re-queued (e.g. nothing sealed yet) — retry shortly

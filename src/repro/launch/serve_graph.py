@@ -71,6 +71,15 @@ from repro.graph.sharded import ShardedDynamicGraph
 
 QUERY_KINDS = ("k_hop", "reachability", "degree_topk", "pagerank")
 
+# lane classification for the two-lane scheduler: cheap kinds answer in
+# one bounded jitted sweep (or a cache hit); expensive kinds iterate to
+# convergence (PageRank) or may walk the whole graph (cold unbounded
+# reachability). An expensive-kind request whose answer is already
+# memoized at its target version rides the cheap lane too — it is a dict
+# lookup, and that is the whole point of the fast path.
+LANES = ("cheap", "expensive")
+CHEAP_KINDS = frozenset({"k_hop", "degree_topk"})
+
 
 @dataclasses.dataclass(frozen=True)
 class ServerStats:
@@ -90,7 +99,13 @@ class ServerStats:
     string key, for the JSON wire) to occurrence count, ``mean_fanout``
     its mean (`-1.0` before any routed window); ``mirrored_vertices`` is
     the serving snapshot's mirror set size; ``split_events`` /
-    ``merge_events`` count completed re-sharding cutovers of each kind."""
+    ``merge_events`` count completed re-sharding cutovers of each kind.
+
+    Fast-path telemetry: ``queue_depth_by_lane`` / ``per_lane_latency_s``
+    break the queue and the quantiles down by scheduler lane;
+    ``result_cache_*`` mirror the engine's versioned result cache
+    (hits/misses/evictions, live entries, hit rate over all lookups);
+    ``prewarm_runs`` counts completed publish-time trace prewarms."""
     served: int
     windows: int
     queue_depth: int
@@ -121,20 +136,30 @@ class ServerStats:
     mirrored_vertices: int
     split_events: int
     merge_events: int
+    queue_depth_by_lane: Mapping[str, int]
+    per_lane_latency_s: Mapping[str, Mapping[str, float]]
+    result_cache_hits: int
+    result_cache_misses: int
+    result_cache_hit_rate: float
+    result_cache_entries: int
+    result_cache_evictions: int
+    prewarm_runs: int
 
 
 @dataclasses.dataclass
 class _Entry:
     """One queued request on the read plane: the typed envelope, its
     submission timestamp (``perf_counter``), the absolute deadline derived
-    from ``deadline_s`` (None = no budget), and an optional completion
+    from ``deadline_s`` (None = no budget), an optional completion
     callback — RPC handlers pass one so the scheduler can push the
     response back on the submitting connection; legacy ``submit()``
-    entries have none and are returned by ``flush()``."""
+    entries have none and are returned by ``flush()`` — and the scheduler
+    lane the request was classified into at submission."""
     request: QueryRequest
     enqueued_at: float
     deadline_at: Optional[float] = None
     on_done: Optional[Callable[[QueryResponse], None]] = None
+    lane: str = "cheap"
 
 
 def _quantiles(lat: np.ndarray) -> tuple[float, float, float]:
@@ -192,9 +217,16 @@ class GraphQueryServer:
                  max_pending: int = 1024, pipeline_reads: bool = True,
                  replicate_hot: Optional[bool] = None, mirror_k: int = 64,
                  mirror_min_heat: float = 1.0,
+                 two_lane: bool = True, expensive_budget: int = 16,
+                 result_cache: bool = True,
+                 result_cache_entries: int = 4096,
+                 prewarm_traces: Optional[bool] = None,
+                 max_touch_buffer: int = 65536,
                  **pagerank_kw):
         self.graph = graph
-        self.engine = SnapshotQueryEngine(**pagerank_kw)
+        self.engine = SnapshotQueryEngine(
+            result_cache=result_cache,
+            result_cache_entries=result_cache_entries, **pagerank_kw)
         self.view_keep = view_keep
         self.rank_keep = rank_keep
         self.gc_every = max(1, gc_every)
@@ -202,6 +234,18 @@ class GraphQueryServer:
         self.auto_reshard = auto_reshard
         self.max_pending = max_pending
         self.pipeline_reads = pipeline_reads
+        # fast path knobs: two_lane splits the window queue by cost class
+        # (the RPC tier runs one dispatcher per lane); expensive_budget
+        # caps how many expensive entries one lane drain executes so a
+        # PageRank convoy yields the engine back to the cheap lane.
+        # prewarm_traces (default: on whenever reads are pipelined) warms
+        # jit traces for the new serving snapshot off the publish path.
+        self.two_lane = two_lane
+        self.expensive_budget = max(1, expensive_budget)
+        if prewarm_traces is None:
+            prewarm_traces = pipeline_reads
+        self.prewarm_traces = prewarm_traces
+        self.max_touch_buffer = max_touch_buffer
         # replica plane: mirror the hottest vertices' adjacency at every
         # publish and route frontier queries replica-first. Defaults on
         # when the prerequisites hold — plan-based routing (the locality
@@ -215,16 +259,27 @@ class GraphQueryServer:
         self.reshard_events: list[dict] = []
         # write plane: every touch of mutable graph/engine state
         self._ingest_lock = threading.RLock()
-        # read plane: pending queue + published snapshot + serving counters
+        # read plane: pending lane queues + published snapshot + counters
         self._serve_lock = threading.Lock()
-        self._pending: list[_Entry] = []
+        self._pending_cheap: list[_Entry] = []
+        self._pending_expensive: list[_Entry] = []
         # (version, stitched view, replica routing context or None) — one
         # atomic pointer, so a window can never pair a view with another
         # version's mirrors (invariant I10)
         self._serving: Optional[
             tuple[Version, JoinView, Optional[RoutedSnapshot]]] = None
+        # lock-free copy of the newest globally sealed version, refreshed
+        # at every seal: the admission path's lane classifier reads it on
+        # unpipelined servers so submission never touches the write lock
+        # (an in-flight apply would stall the RPC reader otherwise)
+        self._sealed_hint: Optional[Version] = None
         self._published: dict[int, JoinView] = {}
-        self._touch_buffer: list[np.ndarray] = []
+        # bounded ring of touch arrays (drop-oldest past max_touch_buffer
+        # total ids): a serving-only server with no ingest tick to drain
+        # it must not accumulate query touches forever
+        self._touch_buffer: collections.deque[np.ndarray] = \
+            collections.deque()
+        self._touch_buffered = 0
         self._seals = 0
         self.windows = 0
         self.shed_overload = 0
@@ -235,12 +290,28 @@ class GraphQueryServer:
             collections.deque(maxlen=8192)
         self._kind_latencies: dict[str, collections.deque] = {
             k: collections.deque(maxlen=2048) for k in QUERY_KINDS}
+        self._lane_latencies: dict[str, collections.deque] = {
+            lane: collections.deque(maxlen=4096) for lane in LANES}
         self.served = 0
         self._auto_ids = itertools.count(1)
-        # dispatcher wake signal: set whenever a request lands in the
-        # queue; the RPC tier's window loop waits on it instead of polling
+        # dispatcher wake signals: work_available is the any-lane event
+        # (legacy single-dispatcher waiters); work_cheap / work_expensive
+        # wake the two-lane RPC dispatchers independently
         self.work_available = threading.Event()
+        self.work_cheap = threading.Event()
+        self.work_expensive = threading.Event()
         self.ingest_thread: Optional[threading.Thread] = None
+        # publish-time trace prewarm: a single persistent daemon worker
+        # coalesces to the newest published snapshot (_prewarm_target is a
+        # one-slot mailbox under its own lock; the wake event is set by
+        # _publish and cleared by the worker before reading the slot)
+        self._prewarm_lock = threading.Lock()
+        self._prewarm_target: Optional[
+            tuple[Version, JoinView, Optional[RoutedSnapshot]]] = None
+        self._prewarm_wake = threading.Event()
+        self._prewarm_stop = threading.Event()
+        self._prewarm_thread: Optional[threading.Thread] = None
+        self.prewarm_runs = 0
         graph.on_frontier_advance(self._on_seal)
 
     # -- ingestion side ----------------------------------------------------
@@ -249,6 +320,7 @@ class GraphQueryServer:
         # case of a caller sealing the graph directly, outside step()
         with self._ingest_lock:
             self._seals += 1
+            self._sealed_hint = self.graph.latest_sealed()
             # publish BEFORE the GC pass: the stitch inserts the new
             # version into the view cache, and pruning after keeps the
             # cache at its bound the moment the seal returns (the ladder
@@ -289,13 +361,66 @@ class GraphQueryServer:
             # routing plans drop outright — but never the serving entry
             prune_retired(self._published, floor)
             prune_views(self._published, self.view_keep)
+        if self.prewarm_traces:
+            # hand the new snapshot to the prewarm worker (coalescing
+            # one-slot mailbox: a faster seal cadence overwrites the slot
+            # and the worker only ever warms the newest target)
+            with self._prewarm_lock:
+                self._prewarm_target = (v, view, routed)
+            self._prewarm_wake.set()
+            self._ensure_prewarm_thread()
+
+    def _ensure_prewarm_thread(self) -> None:
+        if self._prewarm_thread is not None or self._prewarm_stop.is_set():
+            return
+        t = threading.Thread(target=self._prewarm_loop, daemon=True,
+                             name="trace-prewarm")
+        self._prewarm_thread = t
+        t.start()
+
+    def _prewarm_loop(self) -> None:
+        """Publish-time trace prewarm worker: replays the engine's
+        recorded warm signatures (pow2-bucketed jitted shapes, plus hot
+        routed buckets when the snapshot ships a replica plan) against
+        each newly published view, so the first query after a seal pays a
+        dict lookup instead of a retrace. Best-effort by design — a
+        prewarm failure must never take serving down with it."""
+        while not self._prewarm_stop.is_set():
+            self._prewarm_wake.wait()
+            if self._prewarm_stop.is_set():
+                return
+            self._prewarm_wake.clear()
+            with self._prewarm_lock:
+                target, self._prewarm_target = self._prewarm_target, None
+            if target is None:
+                continue
+            v, view, routed = target
+            try:
+                self.engine.warm_traces(view, routed)
+            except Exception:
+                continue
+            with self._prewarm_lock:
+                self.prewarm_runs += 1
+
+    def stop_prewarm(self) -> None:
+        """Stop the prewarm worker (idempotent; a later publish does NOT
+        restart it). The worker is a daemon thread so calling this is
+        optional hygiene — RPC ``stop()`` and tests use it for a clean
+        teardown."""
+        self._prewarm_stop.set()
+        self._prewarm_wake.set()
+        t = self._prewarm_thread
+        if t is not None:
+            t.join(timeout=5.0)
 
     def _drain_touches(self) -> None:
         """Move buffered query touches from the read plane into the
         graph's access ledger — called at step() entry, where the write
         lock is held and the store is quiescent."""
         with self._serve_lock:
-            buffered, self._touch_buffer = self._touch_buffer, []
+            buffered = list(self._touch_buffer)
+            self._touch_buffer.clear()
+            self._touch_buffered = 0
         with self._ingest_lock:
             for ids in buffered:
                 self.graph.record_query_touches(ids)
@@ -376,6 +501,31 @@ class GraphQueryServer:
         with self._ingest_lock:
             return self.graph.latest_sealed()
 
+    def _classify(self, request: QueryRequest) -> str:
+        """Lane classification at submission time. Cheap kinds (one
+        bounded jitted sweep) always ride the cheap lane; an expensive
+        kind whose answer is already memoized at its target version is a
+        dict lookup and rides the cheap lane too. The cache probe is a
+        heuristic snapshot — at worst a stale probe puts one expensive
+        execution on the cheap lane, which costs latency, never
+        correctness. Runs on RPC reader threads, so it must never block
+        on the write plane: pipelined servers read the published serving
+        pointer (serve lock only), unpipelined ones the lock-free
+        seal-time hint."""
+        if not self.two_lane:
+            return "cheap"
+        kind = query_kind(request.query)
+        if kind is None or kind in CHEAP_KINDS:
+            return "cheap"
+        target = request.pin_version
+        if target is None:
+            target = (self.latest_version() if self.pipeline_reads
+                      else self._sealed_hint)
+        if target is not None and self.engine.has_cached_result(
+                target, request.query):
+            return "cheap"
+        return "expensive"
+
     def submit_request(self, request: QueryRequest,
                        on_done: Optional[Callable[[QueryResponse], None]]
                        = None) -> Optional[QueryResponse]:
@@ -386,32 +536,52 @@ class GraphQueryServer:
         return of the :meth:`run_window` call that executes it). Returns
         an immediate typed *response* — never raises — when the request
         cannot be queued: ``ERR_BAD_QUERY`` for an unknown query kind,
-        ``ERR_OVERLOADED`` when the pending queue is at ``max_pending``
+        ``ERR_OVERLOADED`` when the pending queues are at ``max_pending``
         (load shed; the caller sees it instantly instead of a timeout).
+
+        The request is classified into its scheduler lane here (queues
+        are physically separate); ``max_pending`` bounds the two lanes
+        together so admission control is unchanged by the split.
         """
         if query_kind(request.query) is None:
             return QueryResponse.failed(
                 request.request_id, ERR_BAD_QUERY,
                 f"unknown query type {type(request.query).__name__}")
+        lane = self._classify(request)
         now = time.perf_counter()
         deadline_at = (now + request.deadline_s
                        if request.deadline_s is not None else None)
         with self._serve_lock:
-            if len(self._pending) >= self.max_pending:
+            if (len(self._pending_cheap) + len(self._pending_expensive)
+                    >= self.max_pending):
                 self.shed_overload += 1
                 return QueryResponse.failed(
                     request.request_id, ERR_OVERLOADED,
                     f"pending queue at max_pending={self.max_pending}")
-            self._pending.append(_Entry(request, now, deadline_at, on_done))
+            queue = (self._pending_cheap if lane == "cheap"
+                     else self._pending_expensive)
+            queue.append(_Entry(request, now, deadline_at, on_done, lane))
         self.work_available.set()
+        (self.work_cheap if lane == "cheap" else self.work_expensive).set()
         return None
 
-    def run_window(self) -> list[tuple[QueryRequest, QueryResponse]]:
-        """Drain the pending queue and answer it as ONE window — the
-        single code path that owns execution and cache accounting for
-        every submission surface (legacy ``submit``/``flush``, point
-        :meth:`query`, and the RPC tier's dispatcher all land here, so
+    def run_window(self, lane: Optional[str] = None
+                   ) -> list[tuple[QueryRequest, QueryResponse]]:
+        """Drain pending work and answer it as ONE window — the single
+        code path that owns execution and cache accounting for every
+        submission surface (legacy ``submit``/``flush``, point
+        :meth:`query`, and the RPC tier's dispatchers all land here, so
         same-kind queries collapse across clients into one jitted call).
+
+        ``lane=None`` (every in-process caller) drains BOTH lanes fully,
+        merged back into submission order — identical semantics to the
+        single-queue server. ``lane="cheap"`` drains only the cheap lane.
+        ``lane="expensive"`` drains at most ``expensive_budget`` entries
+        (plus any queued entry whose deadline already expired — those are
+        shed as ``ERR_DEADLINE`` *now* instead of waiting out the convoy)
+        and leaves the rest queued with ``work_expensive`` re-armed, so a
+        PageRank flood yields the engine back to the cheap dispatcher
+        between windows.
 
         Expired-deadline requests are answered with ``ERR_DEADLINE``
         without executing. Unpinned requests execute at the published
@@ -419,20 +589,49 @@ class GraphQueryServer:
         (published fast path, else a write-locked stitch; an unsealed pin
         is an ``ERR_BAD_PIN`` response). Completion callbacks run after
         the window, outside every lock; answered touch vertices are
-        buffered for the next ingest tick.
+        buffered (bounded, drop-oldest) for the next ingest tick.
 
         Legacy-compatible failure semantics: if nothing is globally
         sealed yet, the undeliverable entries are re-queued AHEAD of
-        later submissions and ``RuntimeError`` raises; if the engine
-        fails mid-window, every live entry is re-queued un-answered and
-        the error propagates — a window is delivered all-or-nothing.
+        later submissions (each on its own lane) and ``RuntimeError``
+        raises; if the engine fails mid-window, every live entry is
+        re-queued un-answered and the error propagates — a window is
+        delivered all-or-nothing.
 
         Returns ``(request, response)`` pairs in submission order.
         """
         now = time.perf_counter()
+        leftovers = False
         with self._serve_lock:
-            pending, self._pending = self._pending, []
+            if lane is None:
+                pending = sorted(
+                    self._pending_cheap + self._pending_expensive,
+                    key=lambda e: e.enqueued_at)
+                self._pending_cheap = []
+                self._pending_expensive = []
+            elif lane == "cheap":
+                pending = self._pending_cheap
+                self._pending_cheap = []
+            elif lane == "expensive":
+                take: list[_Entry] = []
+                rest: list[_Entry] = []
+                for e in self._pending_expensive:
+                    if len(take) < self.expensive_budget or (
+                            e.deadline_at is not None
+                            and now > e.deadline_at):
+                        take.append(e)
+                    else:
+                        rest.append(e)
+                pending = take
+                self._pending_expensive = rest
+                leftovers = bool(rest)
+            else:
+                raise ValueError(f"unknown lane {lane!r}")
             serving = self._serving
+        if leftovers:
+            # over-budget work stays queued; re-arm the dispatcher so the
+            # next expensive window starts as soon as this one finishes
+            self.work_expensive.set()
         if not pending:
             return []
         expired: list[tuple[_Entry, QueryResponse]] = []
@@ -458,7 +657,10 @@ class GraphQueryServer:
             # since the swap so window order is preserved (nothing was
             # answered), deliver only the already-expired budgets
             with self._serve_lock:
-                self._pending = live + self._pending
+                self._pending_cheap[:0] = [
+                    e for e in live if e.lane == "cheap"]
+                self._pending_expensive[:0] = [
+                    e for e in live if e.lane != "cheap"]
                 self.shed_deadline += len(expired)
             self._deliver(expired)
             raise RuntimeError(
@@ -510,11 +712,15 @@ class GraphQueryServer:
                         e.request.request_id, val, v, done - e.enqueued_at)
         except BaseException:
             # all-or-nothing: nothing from this window was delivered yet,
-            # so re-queue every live entry (original order) for a retry
-            # and let the error surface — a failing window is never
-            # silently discarded, and never double-answered
+            # so re-queue every live entry (original order, each on its
+            # own lane) for a retry and let the error surface — a failing
+            # window is never silently discarded, and never
+            # double-answered
             with self._serve_lock:
-                self._pending = live + self._pending
+                self._pending_cheap[:0] = [
+                    e for e in live if e.lane == "cheap"]
+                self._pending_expensive[:0] = [
+                    e for e in live if e.lane != "cheap"]
             raise
         ok_entries = [e for e in live if id(e) in answered]
         with self._serve_lock:
@@ -525,13 +731,21 @@ class GraphQueryServer:
                 lat = answered[id(e)].latency_s
                 self.latencies_s.append(lat)
                 self._kind_latencies[query_kind(e.request.query)].append(lat)
+                self._lane_latencies[e.lane].append(lat)
             # access-pattern feed, buffered for the next ingest tick —
             # only AFTER the window succeeded, so a failing window
-            # re-queued above cannot double-count touches on every retry
+            # re-queued above cannot double-count touches on every retry.
+            # Bounded drop-oldest: a serving-only server (no ingest tick
+            # draining the buffer) must not grow it without bound
             touched = query_touch_vertices(
                 [e.request.query for e in ok_entries])
             if touched.size:
                 self._touch_buffer.append(touched)
+                self._touch_buffered += int(touched.size)
+                while (self._touch_buffered > self.max_touch_buffer
+                       and len(self._touch_buffer) > 1):
+                    dropped = self._touch_buffer.popleft()
+                    self._touch_buffered -= int(dropped.size)
         pairs = []
         for e in pending:
             resp = answered.get(id(e))
@@ -589,12 +803,15 @@ class GraphQueryServer:
         bare query into the current window with no admission control, no
         deadline and no callback — answered at the next window run.
         Thread-safe: submitters may race each other and the flusher."""
+        request = QueryRequest(query=query,
+                               request_id=next(self._auto_ids))
+        lane = self._classify(request)
         with self._serve_lock:
-            self._pending.append(
-                _Entry(QueryRequest(query=query,
-                                    request_id=next(self._auto_ids)),
-                       time.perf_counter()))
+            queue = (self._pending_cheap if lane == "cheap"
+                     else self._pending_expensive)
+            queue.append(_Entry(request, time.perf_counter(), lane=lane))
         self.work_available.set()
+        (self.work_cheap if lane == "cheap" else self.work_expensive).set()
 
     def flush(self) -> list[QueryResult]:
         """DEPRECATED shim over :meth:`run_window`: answer every pending
@@ -630,6 +847,9 @@ class GraphQueryServer:
         total_routed = sum(hist.values())
         mean_fanout = (sum(k * c for k, c in hist.items()) / total_routed
                        if total_routed else -1.0)
+        rcache = self.engine.result_cache_stats()
+        with self._prewarm_lock:
+            prewarm_runs = self.prewarm_runs
         with self._serve_lock:
             lat = np.asarray(self.latencies_s)
             p50, p95, p99 = _quantiles(lat)
@@ -638,11 +858,19 @@ class GraphQueryServer:
                 if dq:
                     kp50, kp95, kp99 = _quantiles(np.asarray(dq))
                     per_kind[kind] = {"p50": kp50, "p95": kp95, "p99": kp99}
+            per_lane = {}
+            for lane, dq in self._lane_latencies.items():
+                if dq:
+                    lp50, lp95, lp99 = _quantiles(np.asarray(dq))
+                    per_lane[lane] = {"p50": lp50, "p95": lp95, "p99": lp99}
+            lane_depth = {"cheap": len(self._pending_cheap),
+                          "expensive": len(self._pending_expensive)}
             serving = self._serving
             stats = ServerStats(
                 served=self.served,
                 windows=self.windows,
-                queue_depth=len(self._pending),
+                queue_depth=(len(self._pending_cheap)
+                             + len(self._pending_expensive)),
                 shed_overload=self.shed_overload,
                 shed_deadline=self.shed_deadline,
                 serving_version=serving[0] if serving else None,
@@ -668,7 +896,15 @@ class GraphQueryServer:
                 mirrored_vertices=(serving[2].plan.n_mirrored
                                    if serving and serving[2] else 0),
                 split_events=split_events,
-                merge_events=merge_events)
+                merge_events=merge_events,
+                queue_depth_by_lane=lane_depth,
+                per_lane_latency_s=per_lane,
+                result_cache_hits=rcache["hits"],
+                result_cache_misses=rcache["misses"],
+                result_cache_hit_rate=rcache["hit_rate"],
+                result_cache_entries=rcache["entries"],
+                result_cache_evictions=rcache["evictions"],
+                prewarm_runs=prewarm_runs)
         return stats
 
 

@@ -1,0 +1,438 @@
+"""Low-latency fast-path battery: versioned result cache, two-lane
+scheduler, publish-time trace prewarm.
+
+The contracts under test, per the fast-path section of
+``docs/ARCHITECTURE.md``:
+
+* cache coherence by construction: a cached answer is byte-identical to
+  a cold compute at the same sealed version — at EVERY version of a
+  churning stream, across split and merge cutovers — because the cache
+  key space is the version itself (seal-swap invalidation, I10's
+  argument applied to results),
+* pinned replays key into their pinned version's own space: a foreign
+  version's cached entry can never answer them,
+* the two-lane scheduler cannot starve: an expensive-lane flood leaves
+  the cheap lane answerable without executing a single expensive query,
+  the expensive drain honors its budget, queued-but-expired entries shed
+  as typed ``ERR_DEADLINE`` without executing, and concurrent lane
+  dispatchers lose and duplicate nothing,
+* prewarm is idempotent and invisible: racing it against queries and
+  seals changes no answer and no replica telemetry,
+* serving bookkeeping (latency windows, the query-touch buffer) stays
+  bounded past 10^5 queries on a long-lived server.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.graph import compute as gc
+from repro.graph.dyngraph import DynamicGraph, synthesize_churn_stream
+from repro.graph.query import (ERR_DEADLINE, DegreeTopK, KHop,
+                               PageRankQuery, QueryRequest, Reachability,
+                               SnapshotQueryEngine, query_fingerprint)
+from repro.graph.sharded import ShardedDynamicGraph
+from repro.launch.serve_graph import CHEAP_KINDS, GraphQueryServer
+
+
+def _server(n=64, epochs=5, adds=60, n_shards=3, seed=13, **kw):
+    batches = synthesize_churn_stream(n, epochs, adds, seed=seed,
+                                      delete_frac=0.2)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    sg = ShardedDynamicGraph(n_shards, n, e_max)
+    return GraphQueryServer(sg, **kw), batches
+
+
+def _bytes_of(value) -> bytes:
+    if isinstance(value, tuple):
+        return b"|".join(np.asarray(v).tobytes() for v in value)
+    return np.asarray(value).tobytes()
+
+
+# ---------------------------------------------------------- cache coherence
+def test_cached_answers_byte_equal_cold_compute_across_cutovers():
+    """The coherence property: at every sealed version of a stream that
+    splits AND merges mid-run, a cache hit is byte-identical to the cold
+    compute — on a twin server with the cache off — at that exact
+    version. The second pass of each query set must actually hit."""
+    n, epochs = 48, 8
+    batches = synthesize_churn_stream(n, epochs, 60, seed=23,
+                                      delete_frac=0.35, readd_frac=0.4)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    sg = ShardedDynamicGraph(2, n, e_max)
+    srv = GraphQueryServer(sg, auto_reshard=False, prewarm_traces=False,
+                           tol=1e-6, max_iter=100)
+    cold = GraphQueryServer(ShardedDynamicGraph(2, n, e_max),
+                            auto_reshard=False, result_cache=False,
+                            prewarm_traces=False, tol=1e-6, max_iter=100)
+    split = None
+    for e, b in enumerate(batches):
+        srv.step(b)
+        cold.step(b)
+        if e == 2:
+            split = sg.split_shard(0)
+        elif e == 5:
+            sg.merge_shards(split["target"])
+        queries = [KHop(int(b.add_dst[0]) % n, k=2),
+                   Reachability(0, n - 1, max_hops=6),
+                   DegreeTopK(5), PageRankQuery(top_k=4)]
+        hits0 = srv.engine.result_cache_stats()["hits"]
+        first = [srv.query(q) for q in queries]     # cold at this version
+        second = [srv.query(q) for q in queries]    # must hit the cache
+        assert srv.engine.result_cache_stats()["hits"] \
+            >= hits0 + len(queries)
+        for q, r1, r2 in zip(queries, first, second, strict=True):
+            assert r1.version.pack() == r2.version.pack()
+            assert _bytes_of(r1.value) == _bytes_of(r2.value)
+            want = cold.query(q)
+            assert want.version.pack() == r2.version.pack()
+            assert _bytes_of(want.value) == _bytes_of(r2.value)
+    assert cold.engine.result_cache_stats()["hits"] == 0
+    s = srv.stats()
+    assert s.split_events == 1 and s.merge_events == 1
+    assert s.result_cache_hits > 0
+
+
+def test_pinned_replay_bypasses_foreign_version_cache():
+    """A pinned replay must answer from its OWN version's key space: the
+    same fingerprint cached at the serving version cannot leak into an
+    older pin (and the replay then populates the pin's own space)."""
+    server, batches = _server(epochs=5, prewarm_traces=False)
+    oracle = DynamicGraph(64, 8192)
+    for b in batches:
+        server.step(b)
+        oracle.apply(b)
+    q = KHop(3, k=2)
+    latest = server.query(q)                    # caches at the frontier
+    assert server.engine.has_cached_result(latest.version, q)
+    old = batches[1].version
+    assert old.pack() != latest.version.pack()
+    assert not server.engine.has_cached_result(old, q)
+    pinned = None
+
+    def on_done(resp):
+        nonlocal pinned
+        pinned = resp
+
+    assert server.submit_request(
+        QueryRequest(q, 1, pin_version=old), on_done=on_done) is None
+    server.run_window()
+    assert pinned.ok and pinned.version == old
+    want = np.asarray(gc.k_hop(oracle.join_view(old), np.array([3]), 2))
+    assert np.asarray(pinned.value).tobytes() == want.tobytes()
+    # the replay landed in the pin's own space, not the frontier's
+    assert server.engine.has_cached_result(old, q)
+    # and the frontier's entry still answers the frontier
+    again = server.query(q)
+    assert _bytes_of(again.value) == _bytes_of(latest.value)
+
+
+def test_cache_hits_cannot_be_poisoned_by_caller_mutation():
+    """Hits hand out the memoized object itself, so an in-process caller
+    that mutated a returned array would corrupt every later answer at
+    that version — memoized ndarrays are read-only (tuples recursively),
+    the mutation faults, and the cached bytes survive it."""
+    server, batches = _server(epochs=3, prewarm_traces=False)
+    for b in batches:
+        server.step(b)
+    for q in (KHop(3, k=2), DegreeTopK(5)):
+        first = server.query(q)
+        want = _bytes_of(first.value)
+        arrays = (first.value if isinstance(first.value, tuple)
+                  else (first.value,))
+        for arr in arrays:
+            with pytest.raises(ValueError):
+                np.asarray(arr)[...] = 0
+        again = server.query(q)                 # a hit, and unpoisoned
+        assert _bytes_of(again.value) == want
+
+
+def test_result_cache_rides_the_ladder_gc():
+    """Sealed key spaces drop whole through the same ladder as the rank
+    cache: a long stream cannot pin one result dict per epoch forever,
+    and the drops are visible in the eviction counter."""
+    server, batches = _server(epochs=10, rank_keep=2,
+                              prewarm_traces=False)
+    for b in batches:
+        server.step(b)
+        server.query(KHop(1, k=1))              # one entry per version
+    with server.engine._rank_lock:
+        cached_versions = len(server.engine._result_cache)
+    assert cached_versions <= 4                 # ladder(2) never 10
+    assert server.engine.result_cache_stats()["evictions"] > 0
+
+
+def test_per_version_entry_cap_serves_without_memoizing():
+    """Past ``result_cache_entries`` a version's space stops growing:
+    answers still serve (correctly), overflow counts as evictions."""
+    engine = SnapshotQueryEngine(result_cache_entries=2)
+    g = DynamicGraph(16, 64)
+    from repro.core.versioned import Version
+    from repro.graph.dyngraph import MutationBatch
+    g.apply(MutationBatch(Version(0, 0),
+                          add_src=np.array([0, 1, 2], np.int32),
+                          add_dst=np.array([1, 2, 3], np.int32)))
+    view = g.join_view(Version(0, 0))
+    queries = [KHop(i, k=1) for i in range(4)]
+    values = engine.execute(view, queries)
+    uncached = engine.execute(view, queries, use_cache=False)
+    for got, want in zip(values, uncached, strict=True):
+        assert np.asarray(got).tobytes() == np.asarray(want).tobytes()
+    stats = engine.result_cache_stats()
+    assert stats["entries"] == 2 and stats["evictions"] == 2
+    # re-running: the two memoized hit, the two overflowed recompute
+    engine.execute(view, queries)
+    assert engine.result_cache_stats()["hits"] == 2
+
+
+def test_fingerprint_canonicalization_unifies_spellings():
+    """None/0 hop bounds and over-n top-k clamp to one key each, so
+    equivalent spellings share a cache entry; distinct parameters never
+    collide."""
+    n = 32
+    assert query_fingerprint(Reachability(1, 2, max_hops=None), n) \
+        == query_fingerprint(Reachability(1, 2, max_hops=0), n)
+    assert query_fingerprint(DegreeTopK(n + 50), n) \
+        == query_fingerprint(DegreeTopK(n), n)
+    assert query_fingerprint(KHop(1, k=2), n) \
+        != query_fingerprint(KHop(1, k=3), n)
+    assert query_fingerprint(PageRankQuery(top_k=3), n) \
+        != query_fingerprint(PageRankQuery(), n)
+    assert query_fingerprint("junk", n) is None
+
+
+# ------------------------------------------------------- two-lane scheduler
+def test_cheap_lane_answers_through_an_expensive_flood():
+    """Starvation: with the expensive lane flooded by PageRank, a cheap
+    window drains completely without executing a single expensive query
+    — the flood stays queued on its own lane."""
+    server, batches = _server(prewarm_traces=False, tol=1e-6, max_iter=100)
+    server.step(batches[0])
+    answered = []
+    for i in range(20):
+        assert server.submit_request(QueryRequest(PageRankQuery(top_k=3),
+                                                  f"pr-{i}"),
+                                     on_done=answered.append) is None
+    for i in range(5):
+        assert server.submit_request(QueryRequest(KHop(i, 1), f"kh-{i}"),
+                                     on_done=answered.append) is None
+    assert server.stats().queue_depth_by_lane == {"cheap": 5,
+                                                  "expensive": 20}
+    pr_calls = server.engine.vectorized_calls["pagerank"]
+    pairs = server.run_window("cheap")
+    assert [req.request_id for req, _ in pairs] \
+        == [f"kh-{i}" for i in range(5)]
+    assert all(r.ok for _, r in pairs)
+    assert server.engine.vectorized_calls["pagerank"] == pr_calls
+    assert server.stats().queue_depth_by_lane == {"cheap": 0,
+                                                  "expensive": 20}
+    # the flood then drains in budgeted slices, nothing lost
+    while server.stats().queue_depth_by_lane["expensive"]:
+        server.run_window("expensive")
+    assert len(answered) == 25
+    assert len({r.request_id for r in answered}) == 25
+    assert all(r.ok for r in answered)
+
+
+def test_expensive_drain_honors_budget_and_rearms():
+    server, batches = _server(prewarm_traces=False, expensive_budget=4,
+                              tol=1e-6, max_iter=100)
+    server.step(batches[0])
+    for i in range(10):
+        server.submit_request(QueryRequest(PageRankQuery(top_k=2), i))
+    server.work_expensive.clear()
+    pairs = server.run_window("expensive")
+    assert len(pairs) == 4                      # exactly the budget
+    assert server.stats().queue_depth_by_lane["expensive"] == 6
+    assert server.work_expensive.is_set()       # re-armed for the rest
+
+
+def test_expired_entries_beyond_budget_shed_without_executing():
+    """A queued-but-expired request behind the budget horizon must not
+    wait out the convoy: the drain sheds it as ERR_DEADLINE now."""
+    server, batches = _server(prewarm_traces=False, expensive_budget=2,
+                              tol=1e-6, max_iter=100)
+    server.step(batches[0])
+    for i in range(2):
+        server.submit_request(QueryRequest(PageRankQuery(top_k=2), i))
+    late = []
+    for i in range(3):
+        server.submit_request(
+            QueryRequest(PageRankQuery(top_k=2), f"late-{i}",
+                         deadline_s=0.0), on_done=late.append)
+    time.sleep(0.002)
+    pairs = server.run_window("expensive")
+    assert len(pairs) == 5                      # budget 2 + 3 shed
+    assert server.stats().queue_depth_by_lane["expensive"] == 0
+    assert len(late) == 3
+    assert all(r.error.code == ERR_DEADLINE for r in late)
+    assert server.stats().shed_deadline == 3
+
+
+def test_cached_expensive_query_rides_the_cheap_lane():
+    """The classifier's point: an expensive kind whose answer is already
+    memoized at the serving version is a dict lookup — it queues cheap."""
+    server, batches = _server(prewarm_traces=False, tol=1e-6, max_iter=100)
+    server.step(batches[0])
+    q = PageRankQuery(top_k=3)
+    server.submit_request(QueryRequest(q, 1))
+    assert server.stats().queue_depth_by_lane["expensive"] == 1
+    server.run_window("expensive")              # now cached
+    server.submit_request(QueryRequest(q, 2))
+    assert server.stats().queue_depth_by_lane == {"cheap": 1,
+                                                  "expensive": 0}
+    [(_, resp)] = server.run_window("cheap")
+    assert resp.ok
+    assert "pagerank" not in CHEAP_KINDS        # it rode on the cache
+
+
+def test_concurrent_lane_dispatchers_lose_and_duplicate_nothing():
+    """Two dispatcher threads (one per lane) against racing submitters:
+    every request is answered exactly once and the legacy lane=None
+    ordering contract is never violated by the split queues."""
+    server, batches = _server(prewarm_traces=False, tol=1e-6, max_iter=50)
+    server.step(batches[0])
+    total = 120
+    answered = []
+    answered_lock = threading.Lock()
+    stop = threading.Event()
+    errors = []
+
+    def dispatcher(lane):
+        try:
+            while not stop.is_set():
+                server.run_window(lane)
+        except BaseException as e:              # pragma: no cover
+            errors.append(e)
+
+    def on_done(resp):
+        with answered_lock:
+            answered.append(resp)
+
+    threads = [threading.Thread(target=dispatcher, args=(lane,))
+               for lane in ("cheap", "expensive")]
+    for t in threads:
+        t.start()
+    rng = np.random.default_rng(7)
+    for i in range(total):
+        q = (KHop(int(rng.integers(0, 64)), 1) if i % 3
+             else PageRankQuery(top_k=2))
+        assert server.submit_request(QueryRequest(q, i),
+                                     on_done=on_done) is None
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:
+        with answered_lock:
+            if len(answered) == total:
+                break
+        time.sleep(0.01)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(answered) == total
+    assert sorted(r.request_id for r in answered) == list(range(total))
+    assert all(r.ok for r in answered)
+
+
+# ------------------------------------------------------------ trace prewarm
+def test_warm_traces_is_idempotent_and_changes_no_answer():
+    """A second prewarm at the same widths is a no-op (a replay is a
+    real kernel sweep, so re-running a warm trace would burn a core for
+    a guaranteed jit-cache hit); neither pass touches result-cache or
+    replica telemetry, and every answer stays byte-identical."""
+    server, batches = _server(prewarm_traces=False)
+    for b in batches:
+        server.step(b)
+    queries = [KHop(3, k=2), Reachability(1, 9, max_hops=4), DegreeTopK(5)]
+    before = [server.query(q) for q in queries]
+    with server._serve_lock:
+        _, view, routed = server._serving
+    rc0 = server.engine.result_cache_stats()
+    replica0 = server.engine.replica_stats()
+    w1 = server.engine.warm_traces(view, routed)
+    w2 = server.engine.warm_traces(view, routed)
+    assert w1 > 0 and w2 == 0
+    assert server.engine.result_cache_stats()["misses"] == rc0["misses"]
+    assert server.engine.replica_stats() == replica0
+    for q, r in zip(queries, before, strict=True):
+        assert _bytes_of(server.query(q).value) == _bytes_of(r.value)
+
+
+def test_prewarm_races_queries_and_seals_safely():
+    """The publish-path prewarm worker racing live queries and the next
+    seal: every answer stays correct (twin-server oracle) and at least
+    one prewarm completes."""
+    n = 64
+    server, batches = _server(n=n, epochs=8, prewarm_traces=True)
+    twin, _ = _server(n=n, epochs=8, prewarm_traces=False,
+                      result_cache=False)
+    server.step(batches[0])
+    twin.step(batches[0])
+    ingest = server.start_background_ingest(iter(batches[1:]),
+                                            delay_s=0.005)
+    rng = np.random.default_rng(3)
+    asked = []
+    while ingest.is_alive():
+        q = (KHop(int(rng.integers(0, n)), k=2) if rng.random() < 0.6
+             else Reachability(int(rng.integers(0, n)),
+                               int(rng.integers(0, n)), max_hops=4))
+        r = server.query(q)
+        asked.append((q, r))
+    ingest.join()
+    for b in batches[1:]:
+        twin.step(b)
+    for q, r in asked:
+        want = None
+
+        def on_done(resp):
+            nonlocal want
+            want = resp
+
+        assert twin.submit_request(
+            QueryRequest(q, 1, pin_version=r.version),
+            on_done=on_done) is None
+        twin.run_window()
+        assert want.ok, want.error
+        assert _bytes_of(want.value) == _bytes_of(r.value)
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline \
+            and server.stats().prewarm_runs == 0:
+        time.sleep(0.01)
+    assert server.stats().prewarm_runs > 0
+    server.stop_prewarm()
+
+
+# ------------------------------------------------------ bounded bookkeeping
+def test_serving_bookkeeping_bounded_past_1e5_queries():
+    """Regression: a long-lived serving-only server (no ingest tick to
+    drain the touch buffer) must not grow its latency windows or the
+    query-touch buffer without bound. 10^5+ queries through the real
+    window path stay within the documented caps and stats() still
+    computes."""
+    n = 256
+    server, batches = _server(n=n, epochs=1, adds=400,
+                              prewarm_traces=False)
+    server.step(batches[0])
+    per_window, windows = 1000, 110             # 110k queries total
+    for w in range(windows):
+        for i in range(per_window):
+            server.submit(KHop((w * 31 + i) % n, k=1))
+        assert len(server.flush()) == per_window
+    assert server.served == per_window * windows
+    assert len(server.latencies_s) <= 8192
+    assert all(len(dq) <= 2048
+               for dq in server._kind_latencies.values())
+    assert all(len(dq) <= 4096
+               for dq in server._lane_latencies.values())
+    with server._serve_lock:
+        buffered = sum(int(a.size) for a in server._touch_buffer)
+        assert buffered == server._touch_buffered
+    assert buffered <= server.max_touch_buffer
+    s = server.stats()
+    assert s.query_p50_s > 0 and s.result_cache_hits > 0
+    # the drain still lands the (bounded) remainder in the ledger
+    server._drain_touches()
+    assert int(server.graph.access_stats.queries.sum()) == buffered
+    with server._serve_lock:
+        assert server._touch_buffered == 0

@@ -441,8 +441,8 @@ def test_failed_window_does_not_record_query_touches():
     with pytest.raises(TypeError):
         server.flush()
     assert not server._touch_buffer             # nothing buffered
-    server._pending = [e for e in server._pending
-                       if not isinstance(e.request.query, str)]
+    server._pending_cheap = [e for e in server._pending_cheap
+                             if not isinstance(e.request.query, str)]
     server.flush()                              # retry without the poison
     assert len(server._touch_buffer) == 1       # buffered exactly once
     server._drain_touches()                     # the ingest tick's drain

@@ -217,9 +217,9 @@ def test_failed_window_is_requeued_not_lost():
     server.submit("not-a-query")              # shim skips admission checks
     with pytest.raises(TypeError, match="unknown query"):
         server.flush()
-    assert len(server._pending) == 2          # nothing lost
-    server._pending = [e for e in server._pending
-                       if not isinstance(e.request.query, str)]
+    assert len(server._pending_cheap) == 2    # nothing lost
+    server._pending_cheap = [e for e in server._pending_cheap
+                             if not isinstance(e.request.query, str)]
     [res] = server.flush()                    # innocent query still answers
     assert isinstance(res.query, KHop)
 

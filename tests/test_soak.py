@@ -1,0 +1,200 @@
+"""Fault-injection soak: the serving tier under everything at once.
+
+Many RPC clients with randomized deadlines hammer the two-lane front
+while the ingest thread streams churn AND performs a mid-run shard split
+followed by a merge of the split pair, with slow-query stalls injected
+into expensive windows (the exact convoy shape the cheap lane exists to
+dodge). The contract: typed errors are the only failure surface, every
+client gets exactly its own responses back (id-complete, in order), and
+every successful non-PageRank answer is byte-identical to a single-store
+replay oracle at its served version — zero mismatches. (PageRank is
+excluded from the audit, not the workload: its warm-start chain is
+serving-history-dependent, which a stateless oracle cannot replay.)
+
+The full-scale run is ``pytest -m soak`` (its own CI leg; the tier-1
+legs exclude the marker); the quick-scale variant below runs unmarked in
+tier-1 so every push exercises the same failure surface in seconds.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.graph import compute as gc
+from repro.graph.dyngraph import DynamicGraph, synthesize_churn_stream
+from repro.graph.query import (ERR_BAD_PIN, ERR_DEADLINE, ERR_OVERLOADED,
+                               DegreeTopK, KHop, PageRankQuery,
+                               Reachability)
+from repro.graph.sharded import ShardedDynamicGraph
+from repro.launch import rpc
+from repro.launch.serve_graph import GraphQueryServer
+
+TYPED_ERRORS = (ERR_BAD_PIN, ERR_DEADLINE, ERR_OVERLOADED)
+
+
+def _client_queries(ci: int, per_client: int, n: int):
+    """Regenerable per-client workload: (query, deadline_s, pin_slot)
+    triples — pin_slot j means 'pin the version the j-th answer of this
+    client was served at' (resolved live, replayed in the audit)."""
+    rng = np.random.default_rng(1000 + ci)
+    out = []
+    for j in range(per_client):
+        roll = rng.random()
+        if roll < 0.45:
+            q = KHop(int(rng.integers(0, n)), k=2)
+        elif roll < 0.7:
+            q = Reachability(int(rng.integers(0, n)),
+                             int(rng.integers(0, n)), max_hops=6)
+        elif roll < 0.85:
+            q = DegreeTopK(5)
+        else:
+            q = PageRankQuery(top_k=4)
+        droll = rng.random()
+        if droll < 0.3:
+            deadline = None                       # no budget
+        elif droll < 0.9:
+            deadline = 30.0                       # generous
+        else:
+            deadline = float(rng.uniform(0.02, 0.1))   # may expire
+        pin = 0 if (j % 6 == 5 and j > 0) else None
+        out.append((q, deadline, pin))
+    return out
+
+
+def _run_soak(*, n, epochs, adds, n_clients, per_client,
+              stall_s, ingest_delay_s):
+    batches = synthesize_churn_stream(n, epochs, adds, seed=29,
+                                      delete_frac=0.25, readd_frac=0.3)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+    sg = ShardedDynamicGraph(2, n, e_max)
+    server = GraphQueryServer(sg, auto_reshard=False, tol=1e-6,
+                              max_iter=100)
+    server.step(batches[0])
+
+    # fault injection: every expensive window stalls before executing —
+    # the convoy generator the two-lane scheduler must absorb
+    real_execute = server.engine.execute
+
+    def stalling_execute(view, queries, **kw):
+        if any(isinstance(q, PageRankQuery) for q in queries):
+            time.sleep(stall_s)
+        return real_execute(view, queries, **kw)
+
+    server.engine.execute = stalling_execute
+
+    front = rpc.GraphRPCServer(server, port=0).start()
+    host, port = front.address
+    results: dict[int, list] = {}
+    errors: list[BaseException] = []
+
+    def client(ci: int):
+        mine = []
+        try:
+            with rpc.GraphRPCClient(host, port) as c:
+                pinned = None
+                for j, (q, deadline, pin) in enumerate(
+                        _client_queries(ci, per_client, n)):
+                    r = c.query(q, deadline_s=deadline,
+                                pin_version=(pinned if pin is not None
+                                             else None))
+                    assert r.request_id == j + 1, "response misrouted"
+                    mine.append(r)
+                    if r.ok and pinned is None:
+                        pinned = r.version
+        except BaseException as e:               # pragma: no cover
+            errors.append(e)
+        results[ci] = mine
+
+    # ingest pump with the reshard events at its quiescent points: a
+    # split a third of the way in, the sibling merged two thirds in
+    split = {}
+
+    def pump():
+        for e, b in enumerate(batches[1:], start=1):
+            server.step(b)
+            with server._ingest_lock:
+                if e == max(2, epochs // 3):
+                    split.update(sg.split_shard(0))
+                elif e == max(3, (2 * epochs) // 3) and split:
+                    sg.merge_shards(split["target"])
+            time.sleep(ingest_delay_s)
+
+    ingest = threading.Thread(target=pump, name="soak-ingest")
+    ingest.start()
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ingest.join()
+    stats = server.stats()
+    front.stop()
+
+    assert not errors
+    assert split and sg.retired, "split+merge must both have happened"
+
+    # per-client id completeness: nothing lost, nothing duplicated,
+    # responses delivered to the submitting connection in order
+    for ci in range(n_clients):
+        ids = [r.request_id for r in results[ci]]
+        assert ids == list(range(1, per_client + 1)), f"client {ci}"
+    flat = [r for rs in results.values() for r in rs]
+    bad = [r for r in flat if not r.ok]
+    assert all(r.error.code in TYPED_ERRORS for r in bad), \
+        {r.error.code for r in bad}
+    ok = [r for r in flat if r.ok]
+    assert len(ok) >= len(flat) * 0.5
+
+    # replay oracle: single non-sharded store, same stream; every
+    # successful non-PageRank answer byte-identical at its version
+    g = DynamicGraph(n, e_max)
+    for b in batches:
+        g.apply(b)
+    mismatches, audited = 0, 0
+    for ci in range(n_clients):
+        for (q, _dl, _pin), r in zip(_client_queries(ci, per_client, n),
+                                     results[ci], strict=True):
+            if not r.ok or isinstance(q, PageRankQuery):
+                continue
+            view = g.join_view(r.version)
+            if isinstance(q, KHop):
+                want = np.asarray(
+                    gc.k_hop(view, np.array([q.source]), q.k))
+                same = np.asarray(r.value).tobytes() == want.tobytes()
+            elif isinstance(q, Reachability):
+                same = r.value == gc.reachability(view, q.src, q.dst,
+                                                  q.max_hops)
+            else:
+                ids, degs = r.value
+                want_ids, want_degs = gc.degree_topk(view, q.k)
+                same = (np.asarray(ids).tobytes()
+                        == np.asarray(want_ids).tobytes()
+                        and np.asarray(degs).tobytes()
+                        == np.asarray(want_degs).tobytes())
+            audited += 1
+            mismatches += 0 if same else 1
+    assert audited > 0
+    assert mismatches == 0, f"{mismatches}/{audited} audited answers wrong"
+    return stats
+
+
+def test_soak_quick_scale():
+    """Tier-1 variant: same failure surface, seconds not minutes."""
+    stats = _run_soak(n=64, epochs=6, adds=80, n_clients=4, per_client=12,
+                      stall_s=0.02, ingest_delay_s=0.01)
+    assert stats.served > 0
+    assert stats.split_events == 1 and stats.merge_events == 1
+
+
+@pytest.mark.soak
+def test_soak_full_scale():
+    """The acceptance soak: 8 clients, a longer churn stream, heavier
+    stalls and tighter deadline pressure."""
+    stats = _run_soak(n=128, epochs=12, adds=200, n_clients=8,
+                      per_client=40, stall_s=0.08, ingest_delay_s=0.02)
+    assert stats.served > 0
+    assert stats.split_events == 1 and stats.merge_events == 1
+    assert stats.result_cache_hits > 0
+    assert stats.prewarm_runs > 0

@@ -186,6 +186,26 @@ def test_registry_matches_real_attribute_names():
         assert hasattr(eng, attr), attr
 
 
+def test_registry_pins_fast_path_state():
+    """The fast-path state (lane queues, result cache, prewarm mailbox)
+    must be IN the registry — a refactor that drops it from the SPEC
+    would silently stop enforcing its lock discipline even though the
+    attribute checks above still pass."""
+    from repro.analysis.staticcheck import sealcheck
+
+    serve = lockcheck.SPEC["GraphQueryServer"].locks
+    assert {"_pending_cheap", "_pending_expensive",
+            "_lane_latencies"} <= serve["_serve_lock"]
+    assert {"_prewarm_target", "prewarm_runs"} <= serve["_prewarm_lock"]
+    rank = lockcheck.SPEC["SnapshotQueryEngine"].locks["_rank_lock"]
+    assert {"_result_cache", "result_cache_hits", "result_cache_misses",
+            "result_cache_evictions", "_warm_signatures"} <= rank
+    # the prewarm worker is publish-path state: a seal-plane closure may
+    # never spawn/feed it (it would race the coalescing mailbox)
+    assert "_prewarm_thread" in sealcheck.SERIAL_SEAM
+    assert "_prewarm_target" in sealcheck.SERIAL_SEAM
+
+
 @pytest.mark.parametrize("family_fixture, rule", [
     ("RL001_flagged.py", "RL001"),
     ("TS001_flagged.py", "TS001"),
