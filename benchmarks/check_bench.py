@@ -68,6 +68,10 @@ REQUIRED = {
                        "cache_hits", "cache_hit_rate", "prewarm_runs",
                        "n_clients", "answers_audited", "oracle_mismatches",
                        "single_queue", "fastpath"],
+    "recovery": ["wal_overhead", "wal_on_muts_per_s", "wal_off_muts_per_s",
+                 "recovery_long_tail_s", "recovery_short_tail_s",
+                 "durable_frontier", "views_audited",
+                 "recovered_mismatches"],
 }
 SHARD_COUNTS = ("1", "2", "4")
 SHARD_METRICS = ["parallel_wall_s", "parallel_muts_per_s",
@@ -114,6 +118,15 @@ REPLICA_P99_GATE = 1.15
 # (the zipf-hot workload guarantees repeat fingerprints within a
 # version) and every audited answer byte-identical to the replay oracle.
 FASTPATH_P99_GATE = 2.0
+# the durability claim, absolute: with the default batched-fsync policy
+# the write-ahead log may cost at most 15% of ingest wall clock
+# (wal_on_wall_s / wal_off_wall_s, median of paired repeats — the WAL
+# append CRCs and writes straight from the seal's row buffer with
+# group-committed fsync, so the ratio is structural, not host-bound), the
+# recovered
+# store must land on the full durable frontier, and every audited view
+# must be byte-identical to the uncrashed store
+WAL_OVERHEAD_GATE = 1.15
 # (path-description, getter) pairs of scale-free ratios compared 2x
 REGRESSION_FACTOR = 2.0
 
@@ -288,6 +301,29 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
         if not fp.get("answers_audited"):
             errors.append("serve_fastpath: replay oracle audited "
                           "no answers")
+    # the durability claims, absolute: the WAL must be cheap under the
+    # default batched fsync, recovery complete, and the audit clean
+    rv = fresh.get("recovery", {})
+    if rv:
+        overhead = rv.get("wal_overhead")
+        if overhead is not None and overhead > WAL_OVERHEAD_GATE:
+            errors.append(
+                "recovery: WAL-on ingest costs "
+                f"x{overhead:.3f} of WAL-off "
+                f"(<= {WAL_OVERHEAD_GATE}x required with batched fsync)")
+        frontier = rv.get("durable_frontier")
+        want = rv.get("epochs", 0) - 1
+        if frontier is not None and frontier != want:
+            errors.append(
+                f"recovery: recovered frontier {frontier} != sealed "
+                f"frontier {want} (nothing was crashed mid-epoch here — "
+                "recovery must land on the full log)")
+        if rv.get("recovered_mismatches", 0) != 0:
+            errors.append(
+                f"recovery: {rv['recovered_mismatches']} recovered views "
+                "diverged from the uncrashed store")
+        if not rv.get("views_audited"):
+            errors.append("recovery: equivalence audit compared no views")
     if "1" in shards and "speedup_vs_single" in shards.get("1", {}):
         ratio = shards["1"]["speedup_vs_single"]
         if ratio < 0.9:

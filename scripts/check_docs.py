@@ -35,7 +35,7 @@ REGISTRY_MODULES = [
     "repro.graph.compute", "repro.graph.reference", "repro.graph.partition",
     "repro.core.snapshotter", "repro.core.replica", "repro.core.versioned",
     "repro.core.clock", "repro.core.views", "repro.launch.serve_graph",
-    "repro.launch.rpc",
+    "repro.launch.rpc", "repro.graph.wal",
 ]
 
 PATH_RE = re.compile(r"^[\w./-]+\.(py|md|yml|yaml|json|toml)$")

@@ -67,6 +67,11 @@ SPEC: dict[str, ClassLockSpec] = {
     "GraphQueryServer": ClassLockSpec(locks={
         "_ingest_lock": frozenset({
             "graph", "_seals", "reshard_events",
+            # degraded mode (I11): the failed-seal backlog and its
+            # lifetime counter mutate only on the write plane (step /
+            # reseal); the read plane stamps responses from the
+            # lock-free _degraded_hint instead
+            "_seal_backlog", "seal_failures",
         }),
         "_serve_lock": frozenset({
             "_pending_cheap", "_pending_expensive", "_serving",
@@ -86,6 +91,20 @@ SPEC: dict[str, ClassLockSpec] = {
     # planes above
     "GraphRPCServer": ClassLockSpec(locks={
         "_conn_lock": frozenset({"_conns"}),
+    }),
+    # WAL writer lock: guards the control-log file handle and its fsync
+    # batcher. The per-shard segment writers are deliberately NOT here —
+    # each ShardWal is shard-owned state touched only by its shard's
+    # seal (sealcheck's plane rules cover that relation)
+    "GraphWal": ClassLockSpec(locks={
+        "_lock": frozenset({"_control_f", "_control_synced"}),
+    }),
+    # chaos hook: armed faults are read from the parallel apply plane
+    # (seal entry) and mutated from test/operator threads. The stall
+    # sleep and the fault raise happen OUTSIDE the lock (RL003)
+    "FaultInjector": ClassLockSpec(locks={
+        "_lock": frozenset({"_fail_once", "_down", "_stall",
+                            "faults_fired"}),
     }),
     # the engine's own lock guards the rank cache and telemetry counters
     # — including the replica-plane counters (mirror hit/miss, routed

@@ -41,19 +41,28 @@ SP002 = register_rule(
 SCOPE = ("graph", "core", "launch")
 
 SHARD_ID_PARAMS = frozenset({"shard_id", "shard", "sid"})
-# containers indexed by shard id; the plane owns exactly its slot
-SHARD_OWNED = frozenset({"shards", "nodes", "shard_apply_seconds"})
+# containers indexed by shard id; the plane owns exactly its slot —
+# wal_shards holds each shard's append-only WAL writer (one writer per
+# shard, touched only by that shard's seal closure)
+SHARD_OWNED = frozenset({"shards", "nodes", "shard_apply_seconds",
+                         "wal_shards"})
 # coordinator-plane state: serial seams between seal rounds — including
 # the replica plane's guarded state (the retired-shard set mutates only
 # at merge cutovers, and mirror refresh state only at the publish
 # boundary; a per-shard seal closure touching either breaks I10), and
 # the trace-prewarm worker handoff (spawned/fed only from the publish
 # path, which the write lock serializes — never from a shard closure)
+# ... and the durability plane: the store-level WAL (control log +
+# commit records write on the serial thread inside coordinator.advance),
+# the fault injector (a seal closure READS it via a local at entry, but
+# arming/healing faults is operator-thread work), and the serving tier's
+# degraded-mode backlog (write-plane state under _ingest_lock)
 SERIAL_SEAM = frozenset({"coordinator", "ingest_node", "plan", "route",
                          "access_stats", "migrations", "_views", "planner",
                          "retired", "_serving", "_mirror_planner",
                          "_prewarm_thread", "_prewarm_wake",
-                         "_prewarm_target"})
+                         "_prewarm_target",
+                         "wal", "fault_injector", "_seal_backlog"})
 MUTATORS = frozenset({"append", "extend", "insert", "pop", "popitem",
                       "remove", "clear", "update", "add", "discard",
                       "setdefault", "sort"})

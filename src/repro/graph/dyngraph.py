@@ -557,6 +557,34 @@ class DynamicGraph:
             v, row_start, self.n_edges, del_rows))
         self.versions.append(batch.version)
 
+    def _rebuild_index(self) -> None:
+        """Rebuild the live-edge hash index and prev-live chains from the
+        stamp arrays — the crash-recovery path after a checkpoint restores
+        ``src``/``dst``/``created``/``deleted`` wholesale.
+
+        Correctness: pushes happen in row order and a delete always pops
+        the newest live duplicate, so a key's live stack is at every
+        moment an ascending run of row ids — the live rows in ascending
+        order ARE the stack bottom-to-top. Re-pushing them with the
+        apply path's stable-sort chaining therefore reproduces the index
+        state the uncrashed store would hold (dead rows' stale chain
+        entries are unobservable: only live rows are ever walked).
+        """
+        self._index = LiveEdgeIndex(capacity=(self.e_max * 3 + 1) // 2)
+        self._prev_live = np.full(self.e_max, -1, np.int64)
+        e = self.n_edges
+        live = np.flatnonzero(self.deleted[:e] == MAXV)
+        if not live.size:
+            return
+        keys = _edge_keys(self.src[live], self.dst[live])
+        order = np.argsort(keys, kind="stable")
+        sk, sr = keys[order], live[order]
+        head = np.r_[True, sk[1:] != sk[:-1]]
+        dup = np.flatnonzero(~head)
+        self._prev_live[sr[dup]] = sr[dup - 1]
+        tail = np.r_[head[1:], True]
+        self._prev_live[sr[head]] = self._index.push(sk[head], sr[tail])
+
     # -- snapshots -----------------------------------------------------------
     def snapshot_mask(self, version: Version,
                       use_kernel: bool = False) -> np.ndarray:

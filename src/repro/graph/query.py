@@ -151,19 +151,24 @@ class QueryError:
 class QueryResponse:
     """The answer envelope: exactly one of ``value`` (with the sealed
     ``version`` it was computed at) or ``error`` is meaningful, selected
-    by ``ok``. ``latency_s`` is submit-to-answer, server-side."""
+    by ``ok``. ``latency_s`` is submit-to-answer, server-side.
+    ``degraded`` marks an answer served while the write plane cannot
+    seal (a shard fault): still correct — computed at the last published
+    sealed snapshot, never a partial one — but possibly stale."""
     request_id: Union[int, str]
     ok: bool
     value: object = None
     version: Optional[Version] = None
     latency_s: float = 0.0
     error: Optional[QueryError] = None
+    degraded: bool = False
 
     @classmethod
     def answered(cls, request_id, value, version: Version,
-                 latency_s: float) -> "QueryResponse":
+                 latency_s: float,
+                 degraded: bool = False) -> "QueryResponse":
         return cls(request_id, True, value=value, version=version,
-                   latency_s=latency_s)
+                   latency_s=latency_s, degraded=degraded)
 
     @classmethod
     def failed(cls, request_id, code: str, message: str = "",

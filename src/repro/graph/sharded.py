@@ -63,6 +63,7 @@ semantics — one thread in, one thread out.
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 import time
 from typing import Callable, Optional
 
@@ -75,9 +76,14 @@ from repro.core.versioned import (Version, pack32_checked, pack32_clamped,
 from repro.graph.dyngraph import (DEFAULT_CHURN_THRESHOLD, MAXV, DynamicGraph,
                                   JoinView, MutationBatch, build_join_view,
                                   prune_retired, prune_views, splitmix64)
+from repro.graph.wal import (FaultInjector, GraphCheckpointManager, GraphWal,
+                             ShardWal, scan_shard_records,
+                             truncate_shard_after)
 
 # payload row kinds, in the order DynamicGraph.apply processes them
 K_VERTEX, K_ADD, K_DEL = 0, 1, 2
+
+_EMPTY_ROWS = np.zeros((0, 4), np.int32)
 
 # the refinement hash consulted by RoutingPlan.assign for split bits:
 # independent of the base ``key % n_base`` residue, so a split halves a
@@ -379,16 +385,14 @@ class AccessStats:
         self.epochs_observed = 0
 
 
-def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
-                                                    np.ndarray]:
-    """Flatten a MutationBatch into (keys, epochs, payload) for
-    ``IngestNode.dispatch_batch``.
+def encode_payload_rows(batch: MutationBatch) -> np.ndarray:
+    """A batch's ``(kind, a, b, packed32_version)`` int32 payload rows —
+    the byte-stable unit the dispatch payloads and the write-ahead log
+    (``graph/wal.py``) share. Row order is vertices, then edge adds, then
+    deletes: the order ``DynamicGraph.apply`` processes a batch, so
+    ``decode_payloads(encode_payload_rows(b))`` reproduces ``b`` exactly —
+    field for field, element for element.
 
-    keys are the routing keys (dst for edges, the vertex id for vertex
-    adds); payload rows are ``(kind, a, b, packed32_version)`` int32 —
-    kind ordering (vertices, then edge adds, then deletes) matches the
-    order ``DynamicGraph.apply`` processes a batch, so a shard replaying
-    its rows in payload order reproduces the single store's semantics.
     The version column uses the same order-preserving int32 data-plane
     packing as the stamp arrays (checked here, ahead of any ingest
     bookkeeping), which halves the payload bytes moved per row through
@@ -411,8 +415,7 @@ def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
     n_del = len(batch.del_src)
     total = n_typed + n_add + n_del
     if not total:
-        z = np.zeros(0, np.int64)
-        return z, z, np.zeros((0, 4), np.int32)
+        return _EMPTY_ROWS
     payload = np.empty((total, 4), np.int32)
     payload[:, 3] = v
     payload[:n_typed, 0] = K_VERTEX
@@ -425,6 +428,26 @@ def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
     payload[a:, 0] = K_DEL
     payload[a:, 1] = batch.del_src
     payload[a:, 2] = batch.del_dst
+    return payload
+
+
+def encode_mutations(batch: MutationBatch) -> tuple[np.ndarray, np.ndarray,
+                                                    np.ndarray]:
+    """Flatten a MutationBatch into (keys, epochs, payload) for
+    ``IngestNode.dispatch_batch``.
+
+    keys are the routing keys (dst for edges, the vertex id for vertex
+    adds); payload rows come from :func:`encode_payload_rows` (which also
+    carries the malformed-batch and version-overflow checks).
+    """
+    payload = encode_payload_rows(batch)
+    total = len(payload)
+    if not total:
+        z = np.zeros(0, np.int64)
+        return z, z, payload
+    n_typed = len(batch.add_vertices)
+    n_add = len(batch.add_src)
+    a = n_typed + n_add
     key_arr = np.empty(total, np.int64)
     key_arr[:n_typed] = batch.add_vertices      # vertex id routes home
     key_arr[n_typed:a] = batch.add_dst
@@ -724,7 +747,11 @@ class ShardedDynamicGraph:
                  route: Optional[Callable] = None,
                  planner: Optional[ShardPlanner] = None,
                  stats_decay: float = 0.5, query_weight: float = 1.0,
-                 parallel_apply: int = 0):
+                 parallel_apply: int = 0,
+                 wal_dir=None, wal_fsync: str = "batch",
+                 wal_fsync_every: int = 32, checkpoint_every: int = 0,
+                 checkpoint_keep: int = 2,
+                 fault_injector: Optional[FaultInjector] = None):
         if n_shards < 1:
             raise ValueError("need at least one shard")
         self.n_max = n_max
@@ -770,6 +797,30 @@ class ShardedDynamicGraph:
         # per-shard cumulative apply seconds — the benchmark's critical-path
         # model of parallel shard ingestion reads these
         self.shard_apply_seconds = [0.0] * n_shards
+        # -- durability plane (graph/wal.py) -------------------------------
+        self.fault_injector = fault_injector
+        self.wal: Optional[GraphWal] = None
+        # one append-mode writer per physical shard (None when durability
+        # is off or during replay) — shard-owned like ``shards``/``nodes``
+        self.wal_shards: list[Optional[ShardWal]] = [None] * n_shards
+        self.checkpoint_every = int(checkpoint_every)
+        self._ckpt: Optional[GraphCheckpointManager] = None
+        self._wal_replaying = False          # replay must not re-append
+        self._wal_committed = -1             # newest control-committed epoch
+        self._last_ckpt_epoch = -1
+        # user-ingested packed versions per not-yet-committed epoch — the
+        # control log's commit records carry these so recovery can rebuild
+        # latest_sealed() exactly (migration rows are deliberately absent)
+        self._epoch_versions: dict[int, list[int]] = {}
+        if wal_dir is not None:
+            if self.plan is None:
+                raise ValueError(
+                    "the durable WAL needs plan-based routing (a custom "
+                    "route cannot be serialized for recovery)")
+            self._attach_wal(
+                GraphWal(wal_dir, fsync=wal_fsync,
+                         fsync_every=wal_fsync_every),
+                checkpoint_keep=checkpoint_keep, fresh=True)
 
     @property
     def n_shards(self) -> int:
@@ -786,6 +837,13 @@ class ShardedDynamicGraph:
 
     def _on_seal(self, shard_id: int) -> Callable[[int, list], None]:
         def on_seal(epoch: int, payloads: list) -> None:
+            # the chaos hook fires at seal ENTRY — before any apply — so
+            # an injected fault aborts the epoch as a clean no-op: it
+            # stays pending and re-sealable (I6/I11). Read the seam into
+            # a local; replay is fault-free by definition.
+            inj = self.fault_injector
+            if inj is not None and not self._wal_replaying:
+                inj.check(shard_id, epoch)
             t0 = time.perf_counter()
             shard = self.shards[shard_id]
             # payloads arrive in three shapes: whole MutationBatches (the
@@ -826,6 +884,26 @@ class ShardedDynamicGraph:
                     "left pending")
             for batch in batches:
                 shard.apply(batch)
+            # WAL append only after the whole epoch applied: a failed
+            # seal leaves no record (the epoch re-seals; a half-applied
+            # epoch cannot exist — see the capacity pre-check above).
+            # Re-encoding the merged batches reproduces exactly what
+            # decode_payloads will regroup on replay, whichever ingest
+            # path the rows originally rode. Every seal writes a record —
+            # empty epochs included — so the durable frontier's
+            # completeness scan is well defined. wal_shards is shard-owned
+            # state like ``shards``: only this shard's seal touches its
+            # writer.
+            w = self.wal_shards[shard_id]
+            if w is not None and not self._wal_replaying:
+                if not batches:
+                    rows = _EMPTY_ROWS
+                elif len(batches) == 1:       # steady state: one batch/epoch
+                    rows = encode_payload_rows(batches[0])
+                else:
+                    rows = np.concatenate(
+                        [encode_payload_rows(b) for b in batches])
+                w.append(epoch, rows)
             self.shard_apply_seconds[shard_id] += time.perf_counter() - t0
         return on_seal
 
@@ -871,8 +949,7 @@ class ShardedDynamicGraph:
             # overflow must raise BEFORE version bookkeeping (like the
             # other two paths) or the epoch wedges pending forever
             pack32_checked(batch.version)
-            self._last_version = v
-            self._ingested_packed.append(v)
+            self._note_ingest(batch.version.epoch, v)
             n = batch.size
             if not n:
                 return 0
@@ -899,8 +976,7 @@ class ShardedDynamicGraph:
                     f"vertex_types ({len(batch.vertex_types)}) disagree "
                     "in length")
             pack32_checked(batch.version)
-            self._last_version = v
-            self._ingested_packed.append(v)
+            self._note_ingest(batch.version.epoch, v)
             total = batch.size
             if not total:
                 return 0
@@ -930,8 +1006,7 @@ class ShardedDynamicGraph:
         # otherwise latest_sealed() could later name a version whose
         # mutations were never applied
         keys, epochs, payload = encode_mutations(batch)
-        self._last_version = v
-        self._ingested_packed.append(v)
+        self._note_ingest(batch.version.epoch, v)
         if not keys.size:
             return 0
         if self.plan is not None:
@@ -1015,6 +1090,297 @@ class ShardedDynamicGraph:
         """Ingest + seal in one step (the DynamicGraph-compatible path)."""
         self.ingest(batch)
         self.seal_epoch(batch.version.epoch)
+
+    # -- durability (graph/wal.py) -----------------------------------------
+    def _note_ingest(self, epoch: int, packed: int) -> None:
+        """Ingest-path version bookkeeping, shared by all three dispatch
+        paths; with a WAL attached, also stages the version for its
+        epoch's control-log commit record."""
+        self._last_version = packed
+        self._ingested_packed.append(packed)
+        if self.wal is not None:
+            self._epoch_versions.setdefault(epoch, []).append(packed)
+
+    def _attach_wal(self, wal: GraphWal, *, checkpoint_keep: int,
+                    fresh: bool) -> None:
+        """Wire a WAL into the store: per-shard writers, the checkpoint
+        manager, and the frontier subscription that writes commit
+        records. ``fresh`` stores the construction parameters in the
+        control log (recovery rebuilds the store from them); a recovered
+        store reattaches with ``fresh=False``."""
+        self.wal = wal
+        if fresh:
+            wal.write_meta({
+                "n_base": self.plan.n_base, "n_max": self.n_max,
+                "e_max": self.e_max,
+                "churn_threshold": self.churn_threshold,
+                "parallel_apply": self.parallel_apply,
+                "fsync": wal.fsync, "fsync_every": wal.fsync_every,
+                "checkpoint_every": self.checkpoint_every,
+                "checkpoint_keep": int(checkpoint_keep)})
+        self.wal_shards = [wal.shard_wal(i)
+                          for i in range(len(self.shards))]
+        self._ckpt = GraphCheckpointManager(wal.dir / "checkpoints",
+                                            keep=checkpoint_keep)
+        self.coordinator.subscribe(self._wal_on_frontier)
+
+    def _wal_on_frontier(self, frontier: int) -> None:
+        """Frontier subscriber: one control-log commit record per
+        newly-sealed epoch (carrying its staged user-ingested versions),
+        then a periodic checkpoint. Runs on the serial thread inside
+        ``coordinator.advance`` — the shard records for these epochs were
+        appended by the very seals that enabled the advance."""
+        if self.wal is None or self._wal_replaying:
+            return
+        for e in range(self._wal_committed + 1, frontier + 1):
+            self.wal.commit_epoch(e, self._epoch_versions.pop(e, []))
+        self._wal_committed = frontier
+        if (self.checkpoint_every > 0
+                and frontier - self._last_ckpt_epoch
+                >= self.checkpoint_every):
+            self.checkpoint()
+
+    def checkpoint(self) -> Optional[int]:
+        """Durable snapshot of the whole store at the current global
+        frontier; every shard's WAL rotates to a fresh segment and the
+        segments the checkpoint covers are dropped. Returns the
+        checkpointed epoch, or None when no consistent cut exists right
+        now (nothing sealed yet, or a straggler-paced shard's local
+        frontier is ahead of the global one — its post-frontier applies
+        are not part of any globally-sealed snapshot).
+
+        Raises ``ValueError`` without a WAL directory (the checkpoint
+        ladder is part of the durability plane, not a standalone
+        feature)."""
+        if self._ckpt is None:
+            raise ValueError("checkpointing needs a WAL directory "
+                             "(construct with wal_dir=...)")
+        f = self.coordinator.global_frontier
+        if f < 0 or any(n.local_frontier != f for n in self.nodes):
+            return None
+        self._ckpt.save_graph(self, epoch=f)
+        for w in self.wal_shards:
+            if w is not None:
+                w.rotate(f + 1)
+                w.drop_segments_below(f + 1)
+        self.wal.sync()
+        self._last_ckpt_epoch = f
+        return f
+
+    def _replay_plan_event(self, ev: dict) -> None:
+        """Re-execute one re-sharding cutover structurally during WAL
+        replay: plan swap, shard allocation/retirement, ledger reset and
+        telemetry — everything :meth:`split_shard`/:meth:`merge_shards`
+        does EXCEPT dispatching migration rows, which already ride the
+        shard WAL records of the activation epoch."""
+        op, a, b = ev["op"], ev["a"], ev["b"]
+        activation = ev["activation"]
+        if op == "split":
+            new_plan = self.plan.split(a, activation)
+            target = new_plan.leaves[-1].shard
+            if target != b or target != len(self.shards):
+                raise ValueError(
+                    f"plan replay allocated shard {target} but the "
+                    f"control log names {b} with {len(self.shards)} "
+                    "physical shards — control log and checkpoint "
+                    "disagree")
+            self.shards.append(DynamicGraph(self.n_max, self.e_max,
+                                            self.churn_threshold))
+            node = DataNode(target, on_seal=self._on_seal(target))
+            node.local_frontier = activation - 1
+            self.nodes.append(node)
+            self.shard_apply_seconds.append(0.0)
+            self.wal_shards.append(None)   # writers attach after replay
+            src, tgt = a, b
+        elif op == "merge":
+            if self.plan.sibling_of(b) != a:
+                raise ValueError(
+                    f"control log merges shard {b} into {a} but its "
+                    f"sibling under the replayed plan is "
+                    f"{self.plan.sibling_of(b)}")
+            new_plan = self.plan.merge(b, activation)
+            self.retired.add(b)
+            src, tgt = b, a
+        else:
+            raise ValueError(f"unknown plan event op {op!r}")
+        self.plan = new_plan
+        self.route = new_plan.assign
+        self.ingest_node.route = new_plan.assign
+        self.access_stats.reset(self.n_shards)
+        self.migrations.append({
+            "kind": op, "plan_id": new_plan.plan_id,
+            "source": src, "target": tgt,
+            "activation_epoch": activation,
+            "migrated_edges": int(ev.get("migrated", 0))})
+
+    def _restore_checkpoint(self, snap: dict) -> None:
+        """Load a :meth:`GraphCheckpointManager.load_graph` snapshot into
+        a freshly-constructed store: plan history, per-shard arrays (with
+        live-index rebuild), access ledger, ingest log."""
+        meta = snap["meta"]
+        epoch = snap["epoch"]
+        history = tuple(tuple(ev) for ev in meta["plan_history"])
+        plan = RoutingPlan.replay(self.plan.n_base, history)
+        for i in range(len(self.shards), plan.n_total):
+            self.shards.append(DynamicGraph(self.n_max, self.e_max,
+                                            self.churn_threshold))
+            self.nodes.append(DataNode(i, on_seal=self._on_seal(i)))
+            self.shard_apply_seconds.append(0.0)
+            self.wal_shards.append(None)
+        self.plan = plan
+        self.route = plan.assign
+        self.ingest_node.route = plan.assign
+        self.retired = set(meta["retired"])
+        self.migrations = list(meta["migrations"])
+        for shard, arrays in zip(self.shards, snap["shards"],
+                                 strict=True):
+            k = len(arrays["src"])
+            shard.src[:k] = arrays["src"]
+            shard.dst[:k] = arrays["dst"]
+            shard.created[:k] = arrays["created"]
+            shard.deleted[:k] = arrays["deleted"]
+            shard.n_edges = k
+            shard.v_created[:] = arrays["v_created"]
+            shard.v_type[:] = arrays["v_type"]
+            shard.n_vertices = int((shard.v_created != MAXV).sum())
+            last = int(arrays["last_version"])
+            shard.versions = [Version.unpack(last)] if last >= 0 else []
+            shard._log_floor = last
+            shard._rebuild_index()
+        for node in self.nodes:
+            node.local_frontier = epoch
+        # -> checkpoint epoch; ticks the ledger decay once, which the
+        # restore below overwrites wholesale
+        self.coordinator.advance()
+        stats = meta["stats"]
+        self.access_stats.reset(len(self.shards))
+        self.access_stats.mutations[:] = stats["mutations"]
+        self.access_stats.queries[:] = stats["queries"]
+        self.access_stats.epochs_observed = stats["epochs_observed"]
+        self.access_stats.vertex_heat[:] = snap["vertex_heat"]
+        self._last_version = int(meta["last_version"])
+        self._ingested_packed = [int(v) for v in meta["ingested_packed"]]
+        self._last_ckpt_epoch = epoch
+
+    @classmethod
+    def recover(cls, wal_dir, *, planner: Optional[ShardPlanner] = None,
+                parallel_apply: Optional[int] = None,
+                fault_injector: Optional[FaultInjector] = None,
+                checkpoint_every: Optional[int] = None,
+                wal_fsync: Optional[str] = None,
+                wal_fsync_every: Optional[int] = None
+                ) -> "ShardedDynamicGraph":
+        """Rebuild a store from its durability directory: the latest
+        graph checkpoint plus the WAL tail, replayed through the ordinary
+        receive/seal machinery — so the recovered store is byte-identical
+        to the uncrashed oracle at every sealed epoch up to the durable
+        frontier, across split and merge cutovers included (the control
+        log replays the plan history; migration rows ride the shard
+        records of their activation epoch like any other payload).
+
+        The durable frontier is the newest epoch ``e`` such that every
+        epoch through ``e`` has a control-log commit record AND an intact
+        record on every shard required at it (batched fsync may lose an
+        unsynced suffix of either — the minimum rule means that only
+        shortens recovery, never corrupts it). Records beyond the durable
+        frontier — committed-but-incomplete epochs, uncommitted plan
+        events, torn tails — are truncated away so the driver re-ingests
+        those epochs cleanly.
+
+        Keyword overrides replace the persisted construction parameters
+        (planner/fault_injector are process-local objects and never
+        persist). Raises ``ValueError`` when the directory holds no WAL
+        meta record; :class:`WalCorruptionError` on mid-segment
+        corruption."""
+        wal_dir = pathlib.Path(wal_dir)
+        meta, events, commits = GraphWal.read_control(wal_dir)
+        if meta is None:
+            raise ValueError(
+                f"no WAL meta record under {wal_dir}; nothing to recover")
+        ckpt_keep = int(meta.get("checkpoint_keep", 2))
+        ckpt = GraphCheckpointManager(wal_dir / "checkpoints",
+                                      keep=ckpt_keep)
+        snap = ckpt.load_graph()
+        store = cls(
+            int(meta["n_base"]), int(meta["n_max"]), int(meta["e_max"]),
+            churn_threshold=meta["churn_threshold"],
+            planner=planner,
+            parallel_apply=(int(meta.get("parallel_apply", 0))
+                            if parallel_apply is None else parallel_apply))
+        store._wal_replaying = True
+        c = -1
+        if snap is not None:
+            store._restore_checkpoint(snap)
+            c = snap["epoch"]
+        # cutovers not yet folded into the checkpoint's plan history (the
+        # control log's plan events and the history grow in lockstep)
+        tail_events = events[len(store.plan.history):]
+        shard_records: dict[int, dict] = {}
+        for d in sorted(wal_dir.glob("shard-*")):
+            sid = int(d.name.split("-", 1)[1])
+            shard_records[sid] = scan_shard_records(d)
+
+        def shards_required(epoch: int) -> int:
+            n = int(meta["n_base"])
+            for ev in events:
+                if ev["op"] == "split" and ev["activation"] <= epoch:
+                    n += 1
+            return n
+
+        durable = c
+        e = c + 1
+        while e in commits and all(
+                e in shard_records.get(sid, {})
+                for sid in range(shards_required(e))):
+            durable = e
+            e += 1
+        by_activation: dict[int, list[dict]] = {}
+        for ev in tail_events:
+            if ev["activation"] <= durable:
+                by_activation.setdefault(ev["activation"], []).append(ev)
+        for e in range(c + 1, durable + 1):
+            for ev in by_activation.get(e, ()):
+                store._replay_plan_event(ev)
+            for sid in range(len(store.nodes)):
+                rows = shard_records.get(sid, {}).get(e)
+                node = store.nodes[sid]
+                if rows is not None and len(rows[0]):
+                    node.receive_batch(
+                        e, np.broadcast_to(np.int64(0), (len(rows[0]),)),
+                        payload=rows[0])
+                node.seal_epoch(e)
+            store.coordinator.advance()
+        # ingest-log bookkeeping for the replayed tail, straight from the
+        # commit records (checkpoint meta covered epochs <= c)
+        packed_tail = [v for e2 in range(c + 1, durable + 1)
+                       for v in commits.get(e2, [])]
+        if packed_tail:
+            store._ingested_packed.extend(packed_tail)
+            store._last_version = packed_tail[-1]
+        store._trim_ingest_log()
+        store._wal_replaying = False
+        # drop everything beyond the durable frontier BEFORE reattaching
+        # append-mode writers: complete-but-uncommitted records (their
+        # epochs get re-ingested and re-appended), uncommitted plan
+        # events, and torn tails (a writer must reopen on a record
+        # boundary)
+        for d in wal_dir.glob("shard-*"):
+            truncate_shard_after(d, durable)
+        GraphWal.truncate_control_after(wal_dir, durable)
+        store.checkpoint_every = (int(meta.get("checkpoint_every", 0))
+                                  if checkpoint_every is None
+                                  else int(checkpoint_every))
+        store._attach_wal(
+            GraphWal(wal_dir,
+                     fsync=(meta.get("fsync", "batch")
+                            if wal_fsync is None else wal_fsync),
+                     fsync_every=(int(meta.get("fsync_every", 32))
+                                  if wal_fsync_every is None
+                                  else int(wal_fsync_every))),
+            checkpoint_keep=ckpt_keep, fresh=False)
+        store._wal_committed = durable
+        store.fault_injector = fault_injector
+        return store
 
     # -- re-sharding -------------------------------------------------------
     def record_query_touches(self, vertex_ids) -> None:
@@ -1101,6 +1467,8 @@ class ShardedDynamicGraph:
         self.shards.append(shard)
         self.nodes.append(node)      # shared list: coordinator+ingest see it
         self.shard_apply_seconds.append(0.0)
+        self.wal_shards.append(
+            self.wal.shard_wal(target) if self.wal is not None else None)
         migrated = self._dispatch_migration(hot_shard, target, new_plan,
                                             activation)
         self.plan = new_plan
@@ -1112,6 +1480,9 @@ class ShardedDynamicGraph:
                    "activation_epoch": activation,
                    "migrated_edges": migrated}
         self.migrations.append(summary)
+        if self.wal is not None:
+            self.wal.record_plan_event("split", hot_shard, target,
+                                       activation, migrated)
         return summary
 
     def merge_shards(self, removed_shard: int) -> dict:
@@ -1167,6 +1538,10 @@ class ShardedDynamicGraph:
                    "activation_epoch": activation,
                    "migrated_edges": migrated}
         self.migrations.append(summary)
+        if self.wal is not None:
+            # history-tuple order: (survivor, removed)
+            self.wal.record_plan_event("merge", survivor, removed_shard,
+                                       activation, migrated)
         return summary
 
     def _dispatch_migration(self, source: int, target: int,

@@ -57,17 +57,18 @@ from __future__ import annotations
 import base64
 import dataclasses
 import json
+import random
 import socket
 import struct
 import threading
 import time
-from typing import Optional, Union
+from typing import Callable, Optional, Union
 
 import numpy as np
 
 from repro.core.versioned import Version
-from repro.graph.query import (ERR_BAD_QUERY, DegreeTopK, KHop,
-                               PageRankQuery, Query, QueryRequest,
+from repro.graph.query import (ERR_BAD_QUERY, ERR_OVERLOADED, DegreeTopK,
+                               KHop, PageRankQuery, Query, QueryRequest,
                                QueryResponse, Reachability)
 from repro.launch.serve_graph import GraphQueryServer
 
@@ -166,6 +167,10 @@ def encode_response(resp: QueryResponse) -> dict:
     if resp.ok:
         out["value"] = encode_value(resp.value)
         out["version"] = resp.version.pack() if resp.version else None
+        if resp.degraded:
+            # only when set: pre-durability peers never sent the key, so
+            # absence stays the healthy default on both ends of the wire
+            out["degraded"] = True
     else:
         out["error"] = {"code": resp.error.code,
                         "message": resp.error.message}
@@ -178,7 +183,7 @@ def decode_response(frame: dict) -> QueryResponse:
         return QueryResponse.answered(
             frame["id"], decode_value(frame["value"]),
             Version.unpack(packed) if packed is not None else None,
-            frame["latency_s"])
+            frame["latency_s"], degraded=frame.get("degraded", False))
     err = frame["error"]
     return QueryResponse.failed(frame["id"], err["code"],
                                 err.get("message", ""),
@@ -370,24 +375,72 @@ class GraphRPCServer:
 
 # ------------------------------------------------------------- client
 class GraphRPCClient:
-    """Minimal blocking client for the wire protocol. One TCP connection;
-    NOT thread-safe (give each client thread its own instance — that is
+    """Blocking client for the wire protocol. One TCP connection; NOT
+    thread-safe (give each client thread its own instance — that is
     exactly what the soak test and benchmark do).
 
-    :meth:`query` is the synchronous round trip. :meth:`send`/:meth:`recv`
-    expose the pipelined half-steps: keep several requests in flight on
-    one connection and collect responses (matched by ``request_id``; the
-    server may answer out of submission order across windows)."""
+    :meth:`query` is the synchronous round trip, with bounded
+    exponential-backoff-with-jitter retry over two transient failure
+    classes: a typed ``ERR_OVERLOADED`` shed, and transport faults
+    (connect refused, EOF/reset mid-round-trip, socket timeout) — the
+    latter reconnect before retrying. Retries honor ``deadline_s`` as a
+    total budget: the client never sleeps past the deadline, and when it
+    gives up it surfaces the ORIGINAL typed response (or re-raises the
+    transport error when there was none). Non-retryable typed errors
+    (``ERR_BAD_QUERY``, ``ERR_BAD_PIN``, ``ERR_DEADLINE``, ...) return
+    immediately. Retried queries are at-least-once: a transport fault
+    after the server executed but before the response landed replays the
+    request — safe here because every query is a read at a sealed
+    snapshot.
+
+    :meth:`send`/:meth:`recv` expose the raw pipelined half-steps (no
+    retry — a pipeliner owns its own in-flight bookkeeping): keep several
+    requests in flight on one connection and collect responses (matched
+    by ``request_id``; the server may answer out of submission order
+    across windows)."""
 
     def __init__(self, host: str, port: int, *,
-                 timeout_s: Optional[float] = 30.0):
-        self._sock = socket.create_connection((host, port),
-                                              timeout=timeout_s)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                 timeout_s: Optional[float] = 30.0,
+                 max_retries: int = 5, retry_base_s: float = 0.01,
+                 retry_cap_s: float = 0.5,
+                 jitter: Optional[Callable[[], float]] = None):
+        self.host = host
+        self.port = port
+        self.timeout_s = timeout_s
+        self.max_retries = int(max_retries)
+        self.retry_base_s = float(retry_base_s)
+        self.retry_cap_s = float(retry_cap_s)
+        # jitter source in [0, 1); injectable so the retry tests pin the
+        # sleep schedule deterministically
+        self._jitter = random.random if jitter is None else jitter
+        self._sock: Optional[socket.socket] = None
         self._next_id = 1
+        self._connect()
+
+    def _connect(self) -> None:
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.timeout_s)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._sock = sock
+
+    def _drop(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _backoff(self, attempt: int) -> float:
+        """Sleep before retry ``attempt`` (0-based): exponential from
+        ``retry_base_s``, capped at ``retry_cap_s``, half-jittered into
+        ``[b/2, b]`` so a thundering herd of shed clients decorrelates
+        without ever retrying immediately."""
+        b = min(self.retry_cap_s, self.retry_base_s * (2.0 ** attempt))
+        return b * (0.5 + 0.5 * self._jitter())
 
     def close(self) -> None:
-        self._sock.close()
+        self._drop()
 
     def __enter__(self) -> "GraphRPCClient":
         return self
@@ -398,8 +451,11 @@ class GraphRPCClient:
     def send(self, q: Query, *, pin_version: Optional[Version] = None,
              deadline_s: Optional[float] = None,
              request_id: Union[int, str, None] = None) -> Union[int, str]:
-        """Frame one query request onto the wire (no wait). Returns the
-        request id the response will carry."""
+        """Frame one query request onto the wire (no wait, no retry).
+        Returns the request id the response will carry. Reconnects first
+        if a previous transport fault dropped the connection."""
+        if self._sock is None:
+            self._connect()
         if request_id is None:
             request_id = self._next_id
             self._next_id += 1
@@ -411,6 +467,8 @@ class GraphRPCClient:
 
     def recv(self) -> QueryResponse:
         """Block for the next response frame on this connection."""
+        if self._sock is None:
+            raise ConnectionError("not connected")
         frame = read_frame(self._sock)
         if frame is None:
             raise ConnectionError("server closed the connection")
@@ -419,13 +477,44 @@ class GraphRPCClient:
     def query(self, q: Query, *, pin_version: Optional[Version] = None,
               deadline_s: Optional[float] = None) -> QueryResponse:
         """One synchronous query round trip (single request in flight, so
-        the next response is necessarily ours)."""
-        self.send(q, pin_version=pin_version, deadline_s=deadline_s)
-        return self.recv()
+        the next response is necessarily ours), retried per the class
+        docs. ``deadline_s`` is the TOTAL budget across retries; each
+        attempt ships the remaining budget so the server's own deadline
+        shedding stays consistent with the client's."""
+        deadline_at = (time.monotonic() + deadline_s
+                       if deadline_s is not None else None)
+        shed: Optional[QueryResponse] = None
+        error: Optional[OSError] = None
+        for attempt in range(self.max_retries + 1):
+            budget = deadline_s
+            if deadline_at is not None:
+                budget = max(0.0, deadline_at - time.monotonic())
+            try:
+                self.send(q, pin_version=pin_version, deadline_s=budget)
+                resp = self.recv()
+            except (ConnectionError, OSError) as exc:
+                self._drop()        # reconnect lazily on the next attempt
+                error = exc
+            else:
+                if resp.ok or resp.error.code != ERR_OVERLOADED:
+                    return resp
+                shed, error = resp, None
+            if attempt >= self.max_retries:
+                break
+            delay = self._backoff(attempt)
+            if deadline_at is not None and \
+                    time.monotonic() + delay > deadline_at:
+                break               # never sleep past the deadline
+            time.sleep(delay)
+        if shed is not None:
+            return shed             # the original typed response
+        raise error
 
     def stats(self) -> dict:
         """Server stats snapshot (``ServerStats`` fields as a dict;
         ``serving_version`` as a packed int or None)."""
+        if self._sock is None:
+            self._connect()
         self._sock.sendall(encode_frame({"op": "stats",
                                          "id": self._next_id}))
         self._next_id += 1

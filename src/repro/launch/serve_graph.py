@@ -68,6 +68,7 @@ from repro.graph.query import (ERR_BAD_PIN, ERR_BAD_QUERY, ERR_DEADLINE,
                                SnapshotQueryEngine, query_kind,
                                query_touch_vertices)
 from repro.graph.sharded import ShardedDynamicGraph
+from repro.graph.wal import ShardFaultError
 
 QUERY_KINDS = ("k_hop", "reachability", "degree_topk", "pagerank")
 
@@ -105,7 +106,14 @@ class ServerStats:
     break the queue and the quantiles down by scheduler lane;
     ``result_cache_*`` mirror the engine's versioned result cache
     (hits/misses/evictions, live entries, hit rate over all lookups);
-    ``prewarm_runs`` counts completed publish-time trace prewarms."""
+    ``prewarm_runs`` counts completed publish-time trace prewarms.
+
+    Degraded-mode telemetry (invariant I11): ``degraded`` is True while
+    a failed seal leaves epochs pending — the server keeps answering at
+    the last *published* sealed snapshot, never a partial one;
+    ``stale_epochs`` is how many ingested epochs the serving frontier
+    lags; ``seal_failures`` counts failed seal attempts over the
+    server's lifetime (it never resets on recovery)."""
     served: int
     windows: int
     queue_depth: int
@@ -144,6 +152,9 @@ class ServerStats:
     result_cache_entries: int
     result_cache_evictions: int
     prewarm_runs: int
+    degraded: bool = False
+    stale_epochs: int = 0
+    seal_failures: int = 0
 
 
 @dataclasses.dataclass
@@ -257,6 +268,14 @@ class GraphQueryServer:
         self._mirror_planner = MirrorPlanner(mirror_k=mirror_k,
                                              min_heat=mirror_min_heat)
         self.reshard_events: list[dict] = []
+        # degraded mode (invariant I11): epochs whose seal failed (they
+        # stay pending on the store per I6 and re-seal later), plus a
+        # lifetime failure counter — both under the write lock. The
+        # read plane stamps responses from _degraded_hint, a lock-free
+        # hint like _sealed_hint (at worst one window stamps stale).
+        self._seal_backlog: list[int] = []
+        self.seal_failures = 0
+        self._degraded_hint = False
         # write plane: every touch of mutable graph/engine state
         self._ingest_lock = threading.RLock()
         # read plane: pending lane queues + published snapshot + counters
@@ -459,7 +478,19 @@ class GraphQueryServer:
         migration always applies inside THIS batch's seal (the cutover
         epoch is the one about to be ingested), and a stream that simply
         stops can never strand a dispatched migration in a never-sealed
-        epoch. Splits are recorded in :attr:`reshard_events`."""
+        epoch. Splits are recorded in :attr:`reshard_events`.
+
+        A *failed* seal (an injected shard fault, or a capacity abort) is
+        absorbed instead of propagated: the store's seal atomicity (I6)
+        leaves the epoch cleanly pending, so the server marks itself
+        degraded and keeps answering at the last published sealed
+        snapshot — never a partial one (I11). Ingestion continues (the
+        store's no-wait dispatch parks slices for the lagging shard), and
+        the FIRST successful seal — the next healthy step, or an explicit
+        :meth:`reseal` after ``FaultInjector.heal`` — catches up every
+        backlogged epoch, because ``seal_epoch`` seals all lagging shards
+        through its target. Ingest-side errors (bad version, malformed
+        batch) still raise: they are caller bugs, not faults."""
         self._drain_touches()
         with self._ingest_lock:
             if self.auto_reshard:
@@ -467,8 +498,36 @@ class GraphQueryServer:
                 if event is not None:
                     self.reshard_events.append(event)
             self.graph.ingest(batch)
-            self.graph.seal_epoch(batch.version.epoch)
+            try:
+                self.graph.seal_epoch(batch.version.epoch)
+            except (ShardFaultError, MemoryError, OSError):
+                self.seal_failures += 1
+                if batch.version.epoch not in self._seal_backlog:
+                    self._seal_backlog.append(batch.version.epoch)
+                self._degraded_hint = True
+                return
+            if self._seal_backlog:
+                # this seal closed every epoch <= batch's — including the
+                # whole backlog (the frontier is the min local frontier)
+                self._seal_backlog.clear()
+                self._degraded_hint = False
         self._maybe_prewarm()
+
+    def reseal(self) -> int:
+        """Retry every pending seal (after ``FaultInjector.heal`` or
+        operator intervention) without waiting for the next ingest tick.
+        Returns the new global frontier. Raises — and stays degraded — if
+        the fault persists; a no-op on a healthy server."""
+        with self._ingest_lock:
+            target = max([*self._seal_backlog,
+                          *(n.local_frontier for n in self.graph.nodes)],
+                         default=-1)
+            if target < 0:
+                return self.graph.coordinator.global_frontier
+            frontier = self.graph.seal_epoch(target)
+            self._seal_backlog.clear()
+            self._degraded_hint = False
+            return frontier
 
     def start_background_ingest(self, stream: Iterable[MutationBatch], *,
                                 delay_s: float = 0.0) -> threading.Thread:
@@ -709,7 +768,8 @@ class GraphQueryServer:
                 done = time.perf_counter()
                 for e, val in zip(entries, values, strict=True):
                     answered[id(e)] = QueryResponse.answered(
-                        e.request.request_id, val, v, done - e.enqueued_at)
+                        e.request.request_id, val, v, done - e.enqueued_at,
+                        degraded=self._degraded_hint)
         except BaseException:
             # all-or-nothing: nothing from this window was delivered yet,
             # so re-queue every live entry (original order, each on its
@@ -842,6 +902,11 @@ class GraphQueryServer:
                                if m.get("kind", "split") == "split")
             merge_events = sum(1 for m in self.graph.migrations
                                if m.get("kind") == "merge")
+            degraded = bool(self._seal_backlog)
+            seal_failures = self.seal_failures
+            last_ingested = (Version.unpack(self.graph._last_version).epoch
+                             if self.graph._last_version >= 0 else -1)
+            stale_epochs = max(0, last_ingested - frontier)
         replica = self.engine.replica_stats()
         hist = replica["fanout_hist"]
         total_routed = sum(hist.values())
@@ -904,7 +969,10 @@ class GraphQueryServer:
                 result_cache_hit_rate=rcache["hit_rate"],
                 result_cache_entries=rcache["entries"],
                 result_cache_evictions=rcache["evictions"],
-                prewarm_runs=prewarm_runs)
+                prewarm_runs=prewarm_runs,
+                degraded=degraded,
+                stale_epochs=stale_epochs,
+                seal_failures=seal_failures)
         return stats
 
 
@@ -939,13 +1007,34 @@ def main():
                          "in-process demo loop")
     ap.add_argument("--ingest-delay-s", type=float, default=0.05,
                     help="pause between epochs in --rpc-port mode")
+    ap.add_argument("--wal-dir", type=str, default=None,
+                    help="durability directory (write-ahead log + graph "
+                         "checkpoints); survive kill -9 and resume with "
+                         "--recover")
+    ap.add_argument("--recover", action="store_true",
+                    help="recover the store from --wal-dir and resume the "
+                         "stream after the durable frontier")
+    ap.add_argument("--checkpoint-every", type=int, default=4,
+                    help="graph checkpoint cadence in sealed epochs "
+                         "(with --wal-dir)")
     args = ap.parse_args()
 
     batches = synthesize_churn_stream(args.vertices, args.epochs,
                                       args.adds_per_epoch, seed=args.seed,
                                       delete_frac=0.2)
     e_max = sum(len(b.add_src) for b in batches) + 16
-    sg = ShardedDynamicGraph(args.shards, args.vertices, e_max)
+    if args.recover:
+        if not args.wal_dir:
+            ap.error("--recover needs --wal-dir")
+        sg = ShardedDynamicGraph.recover(args.wal_dir)
+        start = sg.coordinator.global_frontier + 1
+        batches = [b for b in batches if b.version.epoch >= start]
+        print(f"recovered at durable frontier {start - 1}; resuming "
+              f"{len(batches)} remaining epochs", flush=True)
+    else:
+        sg = ShardedDynamicGraph(args.shards, args.vertices, e_max,
+                                 wal_dir=args.wal_dir,
+                                 checkpoint_every=args.checkpoint_every)
     server = GraphQueryServer(sg, prewarm_pagerank=args.rpc_port is None,
                               tol=1e-6, max_iter=200)
 

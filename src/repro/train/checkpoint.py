@@ -13,6 +13,7 @@ sharding rules); here leaves are gathered and written whole.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 
 import jax
@@ -56,18 +57,40 @@ class CheckpointManager:
                 self.index.put("ckpt", Version(*entry["version"]),
                                entry["file"])
 
+    def _write_atomic(self, fname: str, writer) -> None:
+        """Crash-atomic file write: temp file in the same directory,
+        flush + fsync, then ``os.replace`` over the final name (and an
+        fsync of the directory so the rename itself is durable). A crash
+        at any point leaves either the previous file or no file — never
+        a torn one."""
+        tmp = self.dir / (fname + ".tmp")
+        with open(tmp, "wb") as f:
+            writer(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.dir / fname)
+        dfd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+
     def _save_index(self):
         entries = [{"version": [v.epoch, v.number],
                     "file": self.index.get("ckpt", v)}
                    for v in self.index.versions("ckpt")]
-        self._manifest_path().write_text(json.dumps(entries, indent=1))
+        payload = json.dumps(entries, indent=1).encode()
+        self._write_atomic("MANIFEST.json", lambda f: f.write(payload))
 
     # ------------------------------------------------------------------ API
     def save(self, state, *, epoch: int, step: int) -> Version:
         v = Version(epoch, step)
         fname = f"ckpt_e{epoch}_s{step}.npz"
         flat = _flatten(state)
-        np.savez(self.dir / fname, **flat)
+        # data before manifest: the manifest must never name a checkpoint
+        # that is not durably on disk (a crash between the two leaves an
+        # unlisted .npz, which a later save's GC removes)
+        self._write_atomic(fname, lambda f: np.savez(f, **flat))
         self.index.put("ckpt", v, fname)
         self._save_index()
         self._gc()

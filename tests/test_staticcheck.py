@@ -206,6 +206,43 @@ def test_registry_pins_fast_path_state():
     assert "_prewarm_target" in sealcheck.SERIAL_SEAM
 
 
+def test_registry_pins_durability_plane_state(tmp_path):
+    """PR 10's durability plane must stay under reprolint's eye: the WAL
+    writer lock and fault-injector lock relations reference live
+    attributes, the degraded-mode backlog sits under the server's ingest
+    lock, and the seal-plane rules know the store-level WAL + injector
+    are serial seams while the per-shard writer list is shard-owned."""
+    import repro.launch.serve_graph as sg
+    from repro.analysis.staticcheck import sealcheck
+    from repro.graph.sharded import ShardedDynamicGraph
+    from repro.graph.wal import FaultInjector, GraphWal
+
+    wal = GraphWal(tmp_path)
+    try:
+        for lock, attrs in lockcheck.SPEC["GraphWal"].locks.items():
+            assert hasattr(wal, lock), lock
+            for attr in attrs:
+                assert hasattr(wal, attr), attr
+    finally:
+        wal.close()
+    inj = FaultInjector()
+    for lock, attrs in lockcheck.SPEC["FaultInjector"].locks.items():
+        assert hasattr(inj, lock), lock
+        for attr in attrs:
+            assert hasattr(inj, attr), attr
+    srv = sg.GraphQueryServer(ShardedDynamicGraph(2, 64, 256),
+                              prewarm_traces=False)
+    ingest = lockcheck.SPEC["GraphQueryServer"].locks["_ingest_lock"]
+    assert {"_seal_backlog", "seal_failures"} <= ingest
+    for attr in ("_seal_backlog", "seal_failures"):
+        assert hasattr(srv, attr), attr
+    # seal closures touch exactly their own WAL writer slot; everything
+    # else in the durability plane belongs to the serial thread
+    assert "wal_shards" in sealcheck.SHARD_OWNED
+    assert {"wal", "fault_injector",
+            "_seal_backlog"} <= sealcheck.SERIAL_SEAM
+
+
 @pytest.mark.parametrize("family_fixture, rule", [
     ("RL001_flagged.py", "RL001"),
     ("TS001_flagged.py", "TS001"),

@@ -1,0 +1,70 @@
+"""Regenerate the committed WAL fixture corpus (deterministic bytes).
+
+Usage::
+
+    PYTHONPATH=src python tests/wal_fixtures/make_fixtures.py [out_dir]
+
+The fixtures pin the on-disk record framing: if ``encode_record`` ever
+changes shape, ``test_fixture_corpus_matches_generator`` fails loudly
+instead of silently re-blessing new bytes. Each file exercises one
+failure class of ``scan_segment``:
+
+* ``interleaved.wal``  — four valid records (epoch 2 empty): clean scan.
+* ``torn_tail.wal``    — two valid records + one cut mid-body: torn
+  write, truncate-and-warn territory.
+* ``truncated_prefix.wal`` — one valid record + 7 bytes of a header:
+  torn mid-header (warns as a tail; corruption for a closed segment).
+* ``bad_crc.wal``      — valid / bit-flipped body / valid: mid-segment
+  corruption, always a typed error naming segment + offset.
+* ``bad_length.wal``   — valid record + a length prefix beyond the
+  framing bound: unframeable, always a typed error.
+"""
+import pathlib
+import sys
+
+import numpy as np
+
+from repro.core.versioned import Version
+from repro.graph.wal import encode_record, rows_to_body
+
+
+def _rows(epoch: int, n: int) -> np.ndarray:
+    """Deterministic payload rows: kind cycles 0..2, ids walk a ramp."""
+    base = np.arange(n, dtype=np.int32)
+    return np.stack([base % 3, base * 7 + epoch, base * 11 + 1,
+                     np.full(n, epoch * 4096, np.int32)], axis=1)
+
+
+def _record(epoch: int, n: int) -> bytes:
+    return encode_record(Version(epoch, 0).pack(), rows_to_body(_rows(epoch, n)))
+
+
+def write_fixtures(out_dir) -> dict[str, bytes]:
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    good = [_record(0, 5), _record(1, 3), _record(2, 0), _record(3, 8)]
+    files = {
+        "interleaved.wal": b"".join(good),
+        # third record loses its last 10 bytes: torn mid-body
+        "torn_tail.wal": good[0] + good[1] + _record(2, 4)[:-10],
+        # 7 bytes cannot even hold the 16-byte header: torn mid-header
+        "truncated_prefix.wal": good[0] + good[1][:7],
+        # flip one body byte of the middle record: CRC must catch it
+        "bad_crc.wal": good[0]
+        + bytes(b ^ (0x40 if i == len(good[1]) - 1 else 0)
+                for i, b in enumerate(good[1]))
+        + good[2],
+        # length prefix far beyond MAX_BODY: unframeable corruption
+        "bad_length.wal": good[0]
+        + (1 << 31).to_bytes(4, "big") + bytes(12),
+    }
+    for name, data in files.items():
+        (out / name).write_bytes(data)
+    return files
+
+
+if __name__ == "__main__":
+    target = sys.argv[1] if len(sys.argv) > 1 else \
+        pathlib.Path(__file__).parent
+    for name in sorted(write_fixtures(target)):
+        print("wrote", pathlib.Path(target) / name)
